@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks (substrate layer): wall-time of the XLA-path
+kernels on CPU plus correctness drift vs the pure-jnp oracle.
+
+On this CPU container the numbers are *relative* health checks (XLA path vs
+naive oracle); on TPU the same harness times the Pallas kernels.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out   # us
+
+
+def rows() -> List[str]:
+    key = jax.random.PRNGKey(0)
+    lines = ["kernel,case,us_per_call,max_abs_err_vs_ref"]
+
+    # flash attention
+    B, S, H, Dh = 2, 512, 4, 64
+    q = jax.random.normal(key, (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, Dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, Dh))
+    fa = jax.jit(lambda q, k, v: ops.attention(q, k, v, causal=True))
+    us, out = _time(fa, q, k, v)
+    err = float(jnp.max(jnp.abs(out - ref.attention(q, k, v, causal=True))))
+    lines.append(f"flash_attention,B{B}xS{S}xH{H}xD{Dh},{us:.0f},{err:.2e}")
+
+    # rmsnorm
+    x = jax.random.normal(key, (4, 1024, 512))
+    sc = jnp.ones((512,))
+    rms = jax.jit(lambda x, s: ops.rmsnorm(x, s))
+    us, out = _time(rms, x, sc)
+    err = float(jnp.max(jnp.abs(out - ref.rmsnorm(x, sc))))
+    lines.append(f"rmsnorm,4x1024x512,{us:.0f},{err:.2e}")
+
+    # wkv6
+    B, S, Hh, K = 2, 256, 2, 32
+    r = jax.random.normal(key, (B, S, Hh, K)) * 0.3
+    kk = jax.random.normal(jax.random.fold_in(key, 3), (B, S, Hh, K)) * 0.3
+    vv = jax.random.normal(jax.random.fold_in(key, 4), (B, S, Hh, K)) * 0.3
+    w = jnp.exp(-jnp.exp(jax.random.normal(jax.random.fold_in(key, 5),
+                                           (B, S, Hh, K)) * 0.3 - 1))
+    u = jax.random.normal(jax.random.fold_in(key, 6), (Hh, K)) * 0.3
+    wk = jax.jit(lambda *a: ops.wkv6(*a)[0])
+    us, out = _time(wk, r, kk, vv, w, u)
+    err = float(jnp.max(jnp.abs(out - ref.wkv6(r, kk, vv, w, u)[0])))
+    lines.append(f"wkv6,B{B}xS{S}xH{Hh}xK{K},{us:.0f},{err:.2e}")
+
+    # mamba scan
+    B, S, D, N = 2, 256, 64, 16
+    x = jax.random.normal(key, (B, S, D)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 7),
+                                           (B, S, D)) - 1)
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 8), (D, N)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(key, 9), (B, S, N)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(key, 10), (B, S, N)) * 0.3
+    Dp = jnp.ones((D,))
+    mb = jax.jit(lambda *a: ops.mamba_scan(*a)[0])
+    us, out = _time(mb, x, dt, A, Bm, C, Dp)
+    err = float(jnp.max(jnp.abs(out - ref.mamba_scan(x, dt, A, Bm, C,
+                                                     Dp)[0])))
+    lines.append(f"mamba_scan,B{B}xS{S}xD{D}xN{N},{us:.0f},{err:.2e}")
+    return lines
+
+
+def main() -> None:
+    for ln in rows():
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Roofline table: per (arch x shape x mesh) cell, the three roofline terms
+from the dry-run artifacts in results/dryrun/ (run ``python -m
+repro.launch.dryrun`` first; cells not yet run are reported as missing).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_cell(arch: str, shape: str, mesh: str,
+              optimized: bool = False) -> Optional[Dict]:
+    tag = f"{arch}__{shape}__{mesh}" + ("__opt" if optimized else "")
+    path = os.path.join(RESULTS_DIR, tag + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(mesh: str = "single", optimized: bool = False) -> List[str]:
+    lines = ["arch,shape,mesh,status,compute_s,memory_s,collective_s,"
+             "dominant,useful_flops_ratio,hbm_gb_per_device"]
+    for arch in ARCH_IDS:
+        runnable = {s.name for s in applicable_shapes(arch)}
+        for s in SHAPES:
+            if s.name not in runnable:
+                lines.append(f"{arch},{s.name},{mesh},skip(full-attn "
+                             f"500k),,,,,,")
+                continue
+            r = load_cell(arch, s.name, mesh, optimized)
+            if r is None:
+                lines.append(f"{arch},{s.name},{mesh},missing,,,,,,")
+                continue
+            if not r.get("ok"):
+                err = r.get("error", "?").split(":")[0]
+                lines.append(f"{arch},{s.name},{mesh},FAIL({err}),,,,,,")
+                continue
+            t = r["roofline"]
+            mem = r.get("memory_analysis", {})
+            hbm = (mem.get("argument_size_in_bytes", 0) +
+                   mem.get("temp_size_in_bytes", 0) -
+                   mem.get("alias_size_in_bytes", 0)) / 1e9
+            lines.append(
+                f"{arch},{s.name},{mesh},ok,{t['compute_s']:.4f},"
+                f"{t['memory_s']:.4f},{t['collective_s']:.4f},"
+                f"{t['dominant']},{r.get('useful_flops_ratio', 0):.3f},"
+                f"{hbm:.2f}")
+    return lines
+
+
+def main() -> None:
+    for mesh in ("single", "multi"):
+        for ln in rows(mesh):
+            print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark aggregator: one section per paper artifact.
+
+  table1    — paper Table 1 (baseline vs coordination, 5 node counts)
+  scaling   — paper Fig. 1/5 (observed vs ideal curves + CVs)
+  taxonomy  — paper Fig. 2 / §3.3 (failure-mode attribution)
+  kernels   — substrate kernel micro-benchmarks
+  roofline  — per-cell roofline terms from the dry-run artifacts
+
+Run everything: ``PYTHONPATH=src python -m benchmarks.run``
+One section:    ``PYTHONPATH=src python -m benchmarks.run --only table1``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    choices=["table1", "scaling", "taxonomy", "kernels",
+                             "roofline"])
+    args = ap.parse_args()
+
+    sections = []
+    if args.only in (None, "table1"):
+        from benchmarks import table1_coordination
+        sections.append(("table1_coordination (paper Table 1)",
+                         table1_coordination.rows))
+    if args.only in (None, "scaling"):
+        from benchmarks import scaling_curve
+        sections.append(("scaling_curve (paper Fig. 1/5)",
+                         lambda: scaling_curve.rows()
+                         + scaling_curve.ascii_plot()))
+    if args.only in (None, "taxonomy"):
+        from benchmarks import bottleneck_taxonomy
+        sections.append(("bottleneck_taxonomy (paper Fig. 2 / §3.3)",
+                         bottleneck_taxonomy.rows))
+    if args.only in (None, "kernels"):
+        from benchmarks import kernel_bench
+        sections.append(("kernel_bench (substrate)", kernel_bench.rows))
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline_table
+        sections.append(("roofline_table single-pod (assignment)",
+                         lambda: roofline_table.rows("single")))
+        sections.append(("roofline_table multi-pod (assignment)",
+                         lambda: roofline_table.rows("multi")))
+
+    failures = 0
+    for title, fn in sections:
+        print(f"\n=== {title} ===")
+        t0 = time.time()
+        try:
+            for ln in fn():
+                print(ln)
+            print(f"--- done in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"--- FAILED: {type(e).__name__}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Figures 1 & 5: observed vs ideal scaling, baseline vs coordination.
+
+Emits a CSV curve (nodes, ideal, baseline, coordination, efficiencies, CVs)
+plus an ASCII rendering of the two curves.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.fabric import efficiency_curve
+
+NODE_COUNTS = (4, 8, 16, 24, 32, 48, 64, 96)
+
+
+def rows(node_counts=NODE_COUNTS, seed: int = 0) -> List[str]:
+    base = efficiency_curve(node_counts, coordination=False, seed=seed)
+    coord = efficiency_curve(node_counts, coordination=True, seed=seed)
+    lines = ["nodes,ideal,baseline_thr,coord_thr,baseline_eff,coord_eff,"
+             "baseline_cv,coord_cv"]
+    for n in node_counts:
+        b, c = base[n], coord[n]
+        lines.append(
+            f"{n},{b['ideal']:.0f},{b['throughput']:.0f},"
+            f"{c['throughput']:.0f},{b['efficiency']:.3f},"
+            f"{c['efficiency']:.3f},{b['cv']:.3f},{c['cv']:.3f}")
+    return lines
+
+
+def ascii_plot(node_counts=NODE_COUNTS, seed: int = 0, width: int = 56
+               ) -> List[str]:
+    base = efficiency_curve(node_counts, coordination=False, seed=seed)
+    coord = efficiency_curve(node_counts, coordination=True, seed=seed)
+    top = max(b["ideal"] for b in base.values())
+    out = ["", "throughput vs ideal (i=ideal, b=baseline, c=coordination)"]
+    for n in node_counts:
+        def bar(v):
+            return int(width * v / top)
+        i, b, c = (base[n]["ideal"], base[n]["throughput"],
+                   coord[n]["throughput"])
+        line = [" "] * (width + 2)
+        line[bar(b)] = "b"
+        line[bar(c)] = "c"
+        line[bar(i)] = "i"
+        out.append(f"N={n:3d} |" + "".join(line))
+    return out
+
+
+def main() -> None:
+    for ln in rows():
+        print(ln)
+    for ln in ascii_plot():
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Table 1: baseline vs coordination — throughput (samples/s) and
+iteration-time CV at N in {4, 8, 16, 32, 64} nodes.
+
+Prints the simulated numbers next to the paper's published values plus the
+relative error, averaged over seeds.
+"""
+from __future__ import annotations
+
+import statistics
+from typing import Dict, List
+
+from repro.fabric import SimConfig, simulate
+
+PAPER_TABLE1 = {
+    4: {"base_thr": 1024, "base_cv": 0.02, "coord_thr": 1018,
+        "coord_cv": 0.02},
+    8: {"base_thr": 1980, "base_cv": 0.04, "coord_thr": 1995,
+        "coord_cv": 0.03},
+    16: {"base_thr": 3600, "base_cv": 0.09, "coord_thr": 3720,
+         "coord_cv": 0.05},
+    32: {"base_thr": 5800, "base_cv": 0.15, "coord_thr": 6250,
+         "coord_cv": 0.07},
+    64: {"base_thr": 8200, "base_cv": 0.22, "coord_thr": 9100,
+         "coord_cv": 0.09},
+}
+
+SEEDS = (0, 1, 2)
+
+
+def run(seeds=SEEDS) -> Dict[int, Dict[str, float]]:
+    out: Dict[int, Dict[str, float]] = {}
+    for n in PAPER_TABLE1:
+        thr_b, cv_b, thr_c, cv_c = [], [], [], []
+        for seed in seeds:
+            rb = simulate(SimConfig.paper(n, coordination=False, seed=seed))
+            rc = simulate(SimConfig.paper(n, coordination=True, seed=seed))
+            thr_b.append(rb.throughput)
+            cv_b.append(rb.cv)
+            thr_c.append(rc.throughput)
+            cv_c.append(rc.cv)
+        out[n] = {
+            "base_thr": statistics.fmean(thr_b),
+            "base_cv": statistics.fmean(cv_b),
+            "coord_thr": statistics.fmean(thr_c),
+            "coord_cv": statistics.fmean(cv_c),
+        }
+    return out
+
+
+def rows() -> List[str]:
+    sim = run()
+    lines = ["nodes,metric,paper_base,sim_base,paper_coord,sim_coord,"
+             "sim_delta_pct,paper_delta_pct"]
+    for n, p in PAPER_TABLE1.items():
+        s = sim[n]
+        d_sim = 100 * (s["coord_thr"] / s["base_thr"] - 1)
+        d_pap = 100 * (p["coord_thr"] / p["base_thr"] - 1)
+        lines.append(
+            f"{n},throughput,{p['base_thr']},{s['base_thr']:.0f},"
+            f"{p['coord_thr']},{s['coord_thr']:.0f},{d_sim:+.1f},"
+            f"{d_pap:+.1f}")
+        lines.append(
+            f"{n},cv,{p['base_cv']},{s['base_cv']:.3f},{p['coord_cv']},"
+            f"{s['coord_cv']:.3f},,")
+    return lines
+
+
+def main() -> None:
+    for ln in rows():
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Fault-tolerance walkthrough: train, "lose" nodes mid-run, re-plan the
+mesh for the survivors, and resume bit-exact from the checkpoint.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import shutil
+
+import numpy as np
+
+from repro.configs.base import OptimizerConfig
+from repro.ft import (FailureDetector, HeartbeatConfig, RestartPolicy,
+                      plan_elastic_mesh)
+from repro.launch.train import train
+
+CKPT = "/tmp/repro_elastic_ckpt"
+
+# one schedule shared by every run: the LR path must not depend on when a
+# run happens to be interrupted, or resume cannot be bit-compatible
+OPT = OptimizerConfig(warmup_steps=2, total_steps=16)
+
+
+def main() -> None:
+    shutil.rmtree(CKPT, ignore_errors=True)
+
+    print("=== phase 1: train 10 steps on the 'full cluster', ckpt@5,10 ===")
+    r1 = train(arch="stablelm-12b", smoke=True, steps=10, seq_len=64,
+               global_batch=4, ckpt_dir=CKPT, ckpt_every=5, log_every=2,
+               seed=7, opt_cfg=OPT)
+
+    print("\n=== phase 2: failure detection (simulated heartbeats) ===")
+    t = {"now": 0.0}
+    det = FailureDetector(list(range(8)), HeartbeatConfig(timeout_s=20.0),
+                          clock=lambda: t["now"])
+    t["now"] = 25.0
+    for r in (0, 1, 2, 3, 4, 5):      # ranks 6,7 went silent
+        det.heartbeat(r)
+    print("suspected failed ranks:", det.suspected())
+
+    policy = RestartPolicy(backoff_s=1.0)
+    print("restart backoff:", policy.next_delay(), "s")
+
+    print("\n=== phase 3: elastic re-mesh for survivors ===")
+    # e.g. 512-chip pod-pair lost one host (8 chips): plan for 504
+    shape, axes = plan_elastic_mesh(504, model_parallel=16)
+    print(f"504 surviving chips -> mesh {shape} axes {axes} "
+          f"(uses {np.prod(shape)} chips)")
+
+    print("\n=== phase 4: resume from checkpoint, continue to step 16 ===")
+    r2 = train(arch="stablelm-12b", smoke=True, steps=16, seq_len=64,
+               global_batch=4, ckpt_dir=CKPT, resume=True, log_every=2,
+               seed=7, opt_cfg=OPT)
+    print(f"\nresumed at step 10, final loss {r2.final_loss:.4f} "
+          f"(pre-failure final {r1.final_loss:.4f})")
+    # determinism check: data pipeline is (seed, step)-pure, so the resumed
+    # stream continues exactly where the failed run stopped.
+    straight = train(arch="stablelm-12b", smoke=True, steps=16, seq_len=64,
+                     global_batch=4, log_every=0, seed=7, opt_cfg=OPT)
+    drift = abs(r2.final_loss - straight.final_loss)
+    print(f"straight-through 16-step run final loss "
+          f"{straight.final_loss:.4f} (drift {drift:.2e})")
+    assert drift < 1e-3, "resume must match straight-through training"
+    print("resume is bit-compatible -- checkpoint/restart verified")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Quickstart: train a small model with the coordination layer on, then
+inspect the per-phase timing summary the paper's instrumentation produces.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import json
+
+from repro.configs import PacingConfig
+from repro.launch.train import train
+
+
+def main() -> None:
+    result = train(
+        arch="qwen2-7b",            # reduced (smoke) config of the family
+        smoke=True,
+        steps=20,
+        seq_len=128,
+        global_batch=8,
+        pacing=PacingConfig(enabled=True),
+        log_every=5,
+    )
+    print("\nfinal loss:", round(result.final_loss, 4))
+    print("coordination-layer summary (paper §5.2 signals):")
+    print(json.dumps(result.summary, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

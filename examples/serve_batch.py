@@ -1,0 +1,44 @@
+"""Batched serving example: prefill a request batch, decode with a KV cache,
+coordination agent wrapped around the decode fleet dispatch.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch mixtral-8x7b
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_model_config
+from repro.launch.serve import generate
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_model_config(args.arch, smoke=True)
+    prompts = jax.random.randint(jax.random.PRNGKey(0),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    enc = None
+    if cfg.is_encoder_decoder:
+        enc = jax.random.normal(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len, cfg.d_model)
+                                ) * 0.02
+    toks, summary = generate(arch=args.arch, prompt_tokens=prompts,
+                             max_new_tokens=args.new_tokens,
+                             enc_embeds=enc)
+    print(f"served {args.batch} requests: prompt {args.prompt_len} -> "
+          f"{toks.shape[1]} tokens")
+    print("first request tokens:", toks[0].tolist())
+    print("decode-loop coordination summary:")
+    print(json.dumps(summary, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

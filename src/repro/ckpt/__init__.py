@@ -1,0 +1,2 @@
+"""Checkpoint substrate: sharded, atomic, async save with elastic restore."""
+from repro.ckpt.checkpoint import CheckpointManager  # noqa: F401

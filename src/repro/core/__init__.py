@@ -1,0 +1,12 @@
+"""The paper's contribution: a coordination control layer for synchronous
+distributed training — per-phase instrumentation, locally-inferred barrier
+skew, and bounded adaptive pacing of early-arriving ranks — plus the
+failure-mode taxonomy diagnostics (paper §3.3-§5)."""
+from repro.core.coordination import CoordinationAgent           # noqa: F401
+from repro.core.diagnostics import (DiagnosticReport, ModeScore,  # noqa: F401
+                                    diagnose, expected_max_factor)
+from repro.core.instrumentation import (CollectiveTrace,        # noqa: F401
+                                        IterationRecord, LocalityInfo,
+                                        PhaseRecorder, sample_locality,
+                                        summarize)
+from repro.core.pacing import PacingController, PacingDecision  # noqa: F401

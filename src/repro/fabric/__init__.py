@@ -1,0 +1,13 @@
+"""Fabric study substrate: topology graphs, link-structural collective cost
+models, congestion dynamics, straggler/locality models, and the BSP
+training-step simulator that reproduces the paper's empirical results."""
+from repro.fabric.collectives import (CollectiveCost, all_reduce,  # noqa: F401
+                                      hierarchical_all_reduce,
+                                      ring_all_reduce, tree_all_reduce)
+from repro.fabric.congestion import (CongestionConfig,             # noqa: F401
+                                     CongestionModel)
+from repro.fabric.simulator import (SimConfig, SimResult,          # noqa: F401
+                                    efficiency_curve, simulate)
+from repro.fabric.stragglers import ComputeModel, StragglerConfig  # noqa: F401
+from repro.fabric.topology import (FatTree, Link, Topology,        # noqa: F401
+                                   TpuPod, fat_tree, tpu_pod)

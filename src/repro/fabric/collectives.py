@@ -1,0 +1,156 @@
+"""Collective communication cost models over a :class:`Topology`.
+
+The models are link-structural, not closed-form: a schedule (ring, tree,
+hierarchical) is decomposed into concurrent hops per algorithm step; each
+hop crosses concrete links; the step's duration is set by the bottleneck
+link, accounting for how many concurrent flows share it. Congestion state
+(see :mod:`repro.fabric.congestion`) scales effective bandwidth per link.
+
+This is exactly the paper's point (§3.2): aggregate bandwidth says ring
+all-reduce should be flat in N, but the *shared up-links* carry
+`flows-on-link x chunk` every step, so hierarchical/oversubscribed fabrics
+bend the curve well before link peak is reached.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.fabric.topology import Topology
+
+
+@dataclasses.dataclass
+class CollectiveCost:
+    total_s: float
+    steps: int
+    bottleneck_link: str
+    per_link_bytes: Dict[str, float]
+
+
+def _step_time(
+    hop_links: List[List[str]],
+    chunk_bytes: float,
+    topo: Topology,
+    link_eff: Optional[Dict[str, float]] = None,
+) -> (float, str, Dict[str, float]):
+    """One algorithm step: all hops concurrent; returns (time, bottleneck,
+    per-link bytes). ``link_eff`` maps link name -> effective bw multiplier
+    in (0, 1] (congestion state)."""
+    flows: Dict[str, int] = {}
+    for links in hop_links:
+        for ln in links:
+            flows[ln] = flows.get(ln, 0) + 1
+    worst, worst_link = 0.0, ""
+    per_link_bytes: Dict[str, float] = {}
+    for ln, f in flows.items():
+        link = topo.link(ln)
+        eff = (link_eff or {}).get(ln, 1.0)
+        bw = link.bw_gbps * 1e9 * eff
+        # Shared (oversubscribed-tier) links aggregate: concurrent flows
+        # divide capacity. Per-port links (node<->leaf, intra-pod ICI) are
+        # non-blocking within the tier: each hop gets the full port.
+        conc = f if link.shared else 1
+        t = (conc * chunk_bytes) / bw + link.latency_s
+        per_link_bytes[ln] = f * chunk_bytes
+        if t > worst:
+            worst, worst_link = t, ln
+    return worst, worst_link, per_link_bytes
+
+
+def ring_all_reduce(
+    topo: Topology,
+    ranks: Sequence[int],
+    nbytes: float,
+    *,
+    link_eff: Optional[Dict[str, float]] = None,
+) -> CollectiveCost:
+    """Bandwidth-optimal ring: 2(n-1) steps of chunk = bytes/n."""
+    n = len(ranks)
+    if n <= 1:
+        return CollectiveCost(0.0, 0, "", {})
+    hops = topo.ring_hops(ranks)
+    chunk = nbytes / n
+    t_step, bott, per_link = _step_time(hops, chunk, topo, link_eff)
+    steps = 2 * (n - 1)
+    total_bytes = {ln: b * steps for ln, b in per_link.items()}
+    return CollectiveCost(t_step * steps, steps, bott, total_bytes)
+
+
+def tree_all_reduce(
+    topo: Topology,
+    ranks: Sequence[int],
+    nbytes: float,
+    *,
+    link_eff: Optional[Dict[str, float]] = None,
+) -> CollectiveCost:
+    """Binary-tree reduce + broadcast: 2*ceil(log2 n) steps of full bytes."""
+    import math
+    n = len(ranks)
+    if n <= 1:
+        return CollectiveCost(0.0, 0, "", {})
+    depth = math.ceil(math.log2(n))
+    total, per_link_total, worst_link = 0.0, {}, ""
+    worst_t = 0.0
+    for level in range(depth):
+        stride = 1 << level
+        hops = [topo.hop_links(ranks[i], ranks[i + stride])
+                for i in range(0, n - stride, stride * 2)]
+        if not hops:
+            continue
+        t, bott, per_link = _step_time(hops, nbytes, topo, link_eff)
+        total += t
+        for ln, b in per_link.items():
+            per_link_total[ln] = per_link_total.get(ln, 0.0) + b
+        if t > worst_t:
+            worst_t, worst_link = t, bott
+    total *= 2.0                      # reduce + broadcast
+    per_link_total = {ln: 2 * b for ln, b in per_link_total.items()}
+    return CollectiveCost(total, 2 * depth, worst_link, per_link_total)
+
+
+def hierarchical_all_reduce(
+    topo: Topology,
+    ranks: Sequence[int],
+    nbytes: float,
+    *,
+    group: int,
+    link_eff: Optional[Dict[str, float]] = None,
+) -> CollectiveCost:
+    """Reduce-scatter within groups of ``group`` ranks, ring across group
+    leaders, all-gather within groups — the standard hierarchical schedule
+    that keeps the oversubscribed tier's traffic at bytes/group."""
+    n = len(ranks)
+    if n <= group:
+        return ring_all_reduce(topo, ranks, nbytes, link_eff=link_eff)
+    # intra-group phases (ring reduce-scatter + all-gather = ring AR cost)
+    intra_groups = [list(ranks[i:i + group]) for i in range(0, n, group)]
+    intra = max(
+        (ring_all_reduce(topo, g, nbytes, link_eff=link_eff)
+         for g in intra_groups if len(g) > 1),
+        key=lambda c: c.total_s, default=CollectiveCost(0.0, 0, "", {}))
+    leaders = [g[0] for g in intra_groups]
+    inter = ring_all_reduce(topo, leaders, nbytes / group,
+                            link_eff=link_eff)
+    per_link = dict(intra.per_link_bytes)
+    for ln, b in inter.per_link_bytes.items():
+        per_link[ln] = per_link.get(ln, 0.0) + b
+    bott = inter.bottleneck_link if inter.total_s >= intra.total_s \
+        else intra.bottleneck_link
+    return CollectiveCost(intra.total_s + inter.total_s,
+                          intra.steps + inter.steps, bott, per_link)
+
+
+ALGOS = {
+    "ring": ring_all_reduce,
+    "tree": tree_all_reduce,
+}
+
+
+def all_reduce(topo: Topology, ranks: Sequence[int], nbytes: float, *,
+               algo: str = "ring", group: int = 0,
+               link_eff: Optional[Dict[str, float]] = None
+               ) -> CollectiveCost:
+    if algo == "hierarchical":
+        return hierarchical_all_reduce(topo, ranks, nbytes,
+                                       group=group or 8, link_eff=link_eff)
+    return ALGOS[algo](topo, ranks, nbytes, link_eff=link_eff)

@@ -1,0 +1,92 @@
+"""Shared-link congestion dynamics (paper §3.2-§3.3, "fabric-level
+contention").
+
+Two coupled effects on every *shared* (oversubscribed) link:
+
+  * **background utilization** ``u_t`` — an AR(1) process in [0, u_max]
+    modelling cross-traffic from co-tenant jobs and transient hotspots.
+    Effective bandwidth scales by ``(1 - u_t)``. The AR(1) persistence is
+    what produces iteration-to-iteration *oscillation* rather than white
+    noise (paper Fig. 1/5's instability at scale).
+  * **arrival-burst penalty** — when ranks enter a collective with large
+    skew, traffic bunches: late flows collide with retransmissions/queues
+    built while early flows idled, ECMP hashing degrades, and switch queues
+    at the oversubscribed tier build up. Modelled as a bandwidth derate
+    ``1 / (1 + k_burst * skew_ratio)`` applied to shared links only. This is
+    the coupling that lets *pacing* (which shrinks skew) recover throughput,
+    exactly the paper's §6.3 observation.
+
+Queueing delay on a shared link additionally follows an M/M/1-style
+``u/(1-u)`` term on the link latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict
+
+from repro.fabric.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class CongestionConfig:
+    u_mean: float = 0.30              # long-run background utilization
+    u_sigma: float = 0.08             # innovation scale of the AR(1)
+    u_rho: float = 0.90               # AR(1) persistence (oscillation)
+    u_max: float = 0.9
+    k_burst: float = 1.0              # skew -> bandwidth derate gain
+    ecmp_k: float = 0.8               # per-extra-leaf ECMP/incast derate
+    k_kick: float = 0.0               # skew-burst -> queue-buildup hysteresis
+
+
+class CongestionModel:
+    def __init__(self, cfg: CongestionConfig, topo: Topology, seed: int = 0):
+        self.cfg = cfg
+        self.topo = topo
+        self.rng = random.Random(seed)
+        self.u: Dict[str, float] = {
+            name: cfg.u_mean for name, l in topo.links.items() if l.shared}
+
+    def advance(self) -> None:
+        c = self.cfg
+        for name in self.u:
+            innov = self.rng.gauss(0.0, c.u_sigma)
+            u = c.u_rho * self.u[name] + (1 - c.u_rho) * c.u_mean + \
+                (1 - c.u_rho) ** 0.5 * innov
+            self.u[name] = min(max(u, 0.0), c.u_max)
+
+    def link_eff(self, skew_ratio: float, spanning_groups: int = 1
+                 ) -> Dict[str, float]:
+        """Effective bandwidth multiplier per shared link for this step.
+
+        ``skew_ratio`` — collective entry spread / serialization time;
+        ``spanning_groups`` — leaves (or pods) the collective spans; flow
+        concentration and ECMP collisions grow with it.
+        """
+        c = self.cfg
+        burst = 1.0 + c.k_burst * max(0.0, skew_ratio)
+        ecmp = 1.0 + c.ecmp_k * max(0, spanning_groups - 1)
+        out = {}
+        for name, u in self.u.items():
+            out[name] = max(1e-3, (1.0 - u) / (burst * ecmp))
+        return out
+
+    def kick(self, skew_ratio: float) -> None:
+        """Queue-buildup hysteresis: a skewed (bursty) collective leaves
+        switch queues, ECN marks, and retransmission state behind on the
+        shared tier; that damage *persists* and decays through the AR(1),
+        producing the paper's multi-iteration oscillations. Pacing earns
+        its throughput win here: smoothing arrivals prevents the kick at
+        the source rather than riding it out."""
+        c = self.cfg
+        if c.k_kick <= 0.0 or skew_ratio <= 0.0:
+            return
+        for name in self.u:
+            u = self.u[name] + c.k_kick * skew_ratio * (1.0 - self.u[name])
+            self.u[name] = min(u, c.u_max)
+
+    def queue_delay(self, link_name: str) -> float:
+        """M/M/1-style queueing delay on top of base latency."""
+        link = self.topo.link(link_name)
+        u = self.u.get(link_name, 0.0)
+        return link.latency_s * (u / max(1e-3, 1.0 - u))

@@ -1,0 +1,63 @@
+"""Per-rank compute/locality variance models (paper §3.3).
+
+Three stochastic ingredients, each mapping to one taxonomy entry:
+
+  * lognormal per-iteration compute jitter         -> runtime jitter
+  * persistent per-rank locality multiplier        -> locality variance
+    (non-uniform GPU<->NIC paths: the same ranks are always a bit slow)
+  * Markov on/off background interference spikes   -> straggler events
+    (transient co-located load, GC, scrubbing, etc.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerConfig:
+    base_compute_s: float = 0.2       # per-iteration local work at batch size
+    jitter_sigma: float = 0.02        # lognormal sigma (relative)
+    locality_spread: float = 0.06     # max persistent per-rank slowdown
+    spike_prob: float = 0.002         # per-iter chance a rank enters a spike
+    spike_mult: float = 1.25          # slowdown while spiking
+    spike_exit_prob: float = 0.1      # geometric spike duration
+    heavy_frac: float = 0.0           # fraction of spikes that are heavy-tail
+    heavy_mult: float = 2.0           # slowdown for heavy-tail spikes
+
+
+class ComputeModel:
+    """Samples per-rank compute time per iteration; owns straggler state."""
+
+    def __init__(self, cfg: StragglerConfig, n_ranks: int, seed: int = 0):
+        self.cfg = cfg
+        self.n = n_ranks
+        self.rng = random.Random(seed)
+        # persistent locality multiplier per rank (>= 1.0)
+        self.locality = [1.0 + cfg.locality_spread * self.rng.random()
+                         for _ in range(n_ranks)]
+        self.spiking = [0.0] * n_ranks   # 0 => healthy, else active multiplier
+
+    def sample(self) -> List[float]:
+        cfg = self.cfg
+        out = []
+        for r in range(self.n):
+            if self.spiking[r]:
+                if self.rng.random() < cfg.spike_exit_prob:
+                    self.spiking[r] = 0.0
+            elif self.rng.random() < cfg.spike_prob:
+                heavy = self.rng.random() < cfg.heavy_frac
+                self.spiking[r] = cfg.heavy_mult if heavy else cfg.spike_mult
+            jitter = math.exp(self.rng.gauss(0.0, cfg.jitter_sigma))
+            t = cfg.base_compute_s * self.locality[r] * jitter
+            if self.spiking[r]:
+                t *= self.spiking[r]
+            out.append(t)
+        return out
+
+    def expected_max_wait(self) -> float:
+        """sigma * sqrt(2 ln N) order-statistics estimate (paper §3.2)."""
+        sigma_abs = self.cfg.base_compute_s * self.cfg.jitter_sigma
+        return sigma_abs * math.sqrt(2.0 * math.log(max(self.n, 2)))

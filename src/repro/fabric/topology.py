@@ -1,0 +1,130 @@
+"""Network/fabric topology models (paper §3.1).
+
+Two families, matching the paper's GPU clusters and our TPU adaptation:
+
+  * :func:`fat_tree` — hierarchical leaf/spine Ethernet-or-IB fabric with
+    configurable oversubscription (the paper's production clusters);
+  * :func:`tpu_pod`  — 2-D ICI torus inside a pod plus an oversubscribed
+    DCN tier across pods (the hardware this framework targets; the "pod"
+    mesh axis in launch/mesh.py is exactly the DCN tier).
+
+The topology exposes, for a set of communicating ranks, which *links* each
+ring hop crosses, so collective cost models can find the bottleneck link and
+account for flows sharing it — the paper's "traffic concentrates on specific
+links or switches" effect (§3.2) falls out structurally instead of being a
+fudge factor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    name: str
+    bw_gbps: float                    # GB/s (bytes, not bits)
+    latency_s: float
+    shared: bool = False              # crosses an oversubscribed tier
+
+
+@dataclasses.dataclass
+class Topology:
+    """A set of named links plus a mapping rank-pair -> links crossed."""
+    name: str
+    n_ranks: int
+    links: Dict[str, Link]
+    kind: str = "fat_tree"
+    # static per-rank locality multiplier on NIC-path efficiency (paper's
+    # "GPU locality and intra-node effects": non-uniform PCIe/NUMA paths).
+    nic_efficiency: Tuple[float, ...] = ()
+
+    # -- construction helpers ----------------------------------------------
+    def link(self, name: str) -> Link:
+        return self.links[name]
+
+    def hop_links(self, a: int, b: int) -> List[str]:
+        """Links crossed by one unidirectional transfer rank a -> rank b."""
+        raise NotImplementedError
+
+    def ring_hops(self, ranks: Sequence[int]) -> List[List[str]]:
+        """Per ring hop (i -> i+1), the links crossed."""
+        n = len(ranks)
+        return [self.hop_links(ranks[i], ranks[(i + 1) % n])
+                for i in range(n)]
+
+
+@dataclasses.dataclass
+class FatTree(Topology):
+    nodes_per_leaf: int = 8
+
+    def hop_links(self, a: int, b: int) -> List[str]:
+        la, lb = a // self.nodes_per_leaf, b // self.nodes_per_leaf
+        if la == lb:
+            return [f"leaf{la}"]
+        # up from leaf la through spine, down to leaf lb
+        return [f"up{la}", "spine", f"up{lb}"]
+
+
+@dataclasses.dataclass
+class TpuPod(Topology):
+    ranks_per_pod: int = 256
+
+    def hop_links(self, a: int, b: int) -> List[str]:
+        pa, pb = a // self.ranks_per_pod, b // self.ranks_per_pod
+        if pa == pb:
+            return [f"ici{pa}"]
+        return [f"dcn{pa}", "dcn_core", f"dcn{pb}"]
+
+
+def fat_tree(
+    n_nodes: int,
+    *,
+    nodes_per_leaf: int = 8,
+    oversubscription: float = 2.0,
+    leaf_bw: float = 50.0,            # GB/s node-to-leaf (e.g. 4x100GbE)
+    latency_s: float = 5e-6,
+    nic_spread: float = 0.0,          # +/- fraction of per-node NIC efficiency
+    seed: int = 0,
+) -> FatTree:
+    """Hierarchical leaf/spine with `oversubscription`:1 on the up-links."""
+    import random
+    n_leaves = (n_nodes + nodes_per_leaf - 1) // nodes_per_leaf
+    links: Dict[str, Link] = {}
+    for l in range(n_leaves):
+        links[f"leaf{l}"] = Link(f"leaf{l}", leaf_bw, latency_s)
+        # aggregate up-link capacity for the leaf, divided by oversubscription
+        links[f"up{l}"] = Link(
+            f"up{l}", leaf_bw * nodes_per_leaf / oversubscription,
+            latency_s, shared=True)
+    links["spine"] = Link(
+        "spine", leaf_bw * n_nodes / oversubscription, 2 * latency_s,
+        shared=True)
+    rng = random.Random(seed)
+    nic = tuple(1.0 - nic_spread * rng.random() for _ in range(n_nodes))
+    return FatTree(name=f"fat_tree_{n_nodes}x{nodes_per_leaf}",
+                   n_ranks=n_nodes, links=links, kind="fat_tree",
+                   nic_efficiency=nic, nodes_per_leaf=nodes_per_leaf)
+
+
+def tpu_pod(
+    n_pods: int = 2,
+    ranks_per_pod: int = 256,
+    *,
+    ici_bw: float = 50.0,             # GB/s per ICI link (v5e ballpark)
+    dcn_bw: float = 6.25,             # GB/s per host NIC (50 Gb/s)
+    ici_latency: float = 1e-6,
+    dcn_latency: float = 10e-6,
+    seed: int = 0,
+) -> TpuPod:
+    """Pods of ICI-torus chips bridged by an oversubscribed DCN tier."""
+    links: Dict[str, Link] = {}
+    for p in range(n_pods):
+        links[f"ici{p}"] = Link(f"ici{p}", ici_bw, ici_latency)
+        links[f"dcn{p}"] = Link(f"dcn{p}", dcn_bw * ranks_per_pod / 4,
+                                dcn_latency, shared=True)
+    links["dcn_core"] = Link("dcn_core", dcn_bw * n_pods * ranks_per_pod / 8,
+                             2 * dcn_latency, shared=True)
+    return TpuPod(name=f"tpu_{n_pods}pods", n_ranks=n_pods * ranks_per_pod,
+                  links=links, kind="tpu_pod", nic_efficiency=(),
+                  ranks_per_pod=ranks_per_pod)

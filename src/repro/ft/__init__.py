@@ -1,0 +1,6 @@
+"""Fault tolerance: heartbeat failure detection, restart policy with
+backoff, elastic re-mesh planning. Straggler mitigation is the paper's
+pacing layer (repro.core)."""
+from repro.ft.failure import (FailureDetector, HeartbeatConfig,  # noqa: F401
+                              RecoveryEvent, RecoveryLog, RestartPolicy,
+                              plan_elastic_mesh)

@@ -1,0 +1,137 @@
+"""Pallas selective-scan kernel (Mamba-1) — chunked sequential scan.
+
+TPU adaptation of the CUDA selective_scan kernel: grid owns (batch,
+d_inner-block) pairs; the (bd, N) SSM state persists in f32 VMEM scratch
+across sequential time chunks. x/dt stream as (chunk, bd) tiles; B/C as
+(chunk, N) tiles. The per-token update is elementwise (bd, N) FMA work (VPU);
+there is no MXU contraction because N is small (16) — this kernel is
+bandwidth-bound by design, matching the roofline expectation for SSMs.
+
+Validated against ``ref.mamba_scan`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import _compiler_params
+
+
+def _mamba_kernel(
+    x_ref, dt_ref,                 # (1, ct, bd)
+    b_ref, c_ref,                  # (1, ct, N)
+    a_ref,                         # (bd, N)
+    d_ref,                         # (1, bd)
+    h0_ref,                        # (1, bd, N)
+    y_ref,                         # (1, ct, bd)
+    h_out_ref,                     # (1, bd, N)
+    h_scr,                         # VMEM (bd, N) f32
+    *,
+    chunk: int,
+    num_chunks: int,
+    seq_valid: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    A = a_ref[...].astype(jnp.float32)                            # (bd, N)
+    D = d_ref[0].astype(jnp.float32)                              # (bd,)
+
+    def step(t, _):
+        pos = ic * chunk + t
+        xt = x_ref[0, t].astype(jnp.float32)                      # (bd,)
+        dtt = dt_ref[0, t].astype(jnp.float32)                    # (bd,)
+        Bt = b_ref[0, t].astype(jnp.float32)                      # (N,)
+        Ct = c_ref[0, t].astype(jnp.float32)                      # (N,)
+        h = h_scr[...]
+        dA = jnp.exp(dtt[:, None] * A)                            # (bd, N)
+        h_new = dA * h + (dtt * xt)[:, None] * Bt[None, :]
+        valid = pos < seq_valid
+        h_new = jnp.where(valid, h_new, h)
+        y = jnp.sum(h_new * Ct[None, :], axis=1) + D * xt         # (bd,)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        h_scr[...] = h_new
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ic == num_chunks - 1)
+    def _finalize():
+        h_out_ref[0] = h_scr[...].astype(h_out_ref.dtype)
+
+
+def mamba_scan(
+    x: jax.Array,                  # (B, S, D)
+    dt: jax.Array,                 # (B, S, D)
+    A: jax.Array,                  # (D, N)
+    Bm: jax.Array,                 # (B, S, N)
+    C: jax.Array,                  # (B, S, N)
+    D: jax.Array,                  # (D,)
+    h0: jax.Array | None = None,   # (B, D, N)
+    *,
+    chunk: int = 64,
+    block_d: int = 256,
+    interpret: bool = False,
+):
+    """Returns (y: (B,S,D), h_out: (B,D,N) float32)."""
+    B, S, Dm = x.shape
+    N = A.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, Dm, N), jnp.float32)
+
+    chunk = min(chunk, max(1, S))
+    nc = math.ceil(S / chunk)
+    S_pad = nc * chunk
+    block_d = min(block_d, Dm)
+    nd = math.ceil(Dm / block_d)
+    D_pad = nd * block_d
+
+    def pad_sd(a):                 # (B,S,·) -> (B,S_pad,·)
+        return jnp.pad(a, ((0, 0), (0, S_pad - S), (0, 0))) if S_pad != S else a
+
+    xp, dtp = pad_sd(x), pad_sd(dt)
+    Bp, Cp = pad_sd(Bm), pad_sd(C)
+    if D_pad != Dm:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, D_pad - Dm)))
+        dtp = jnp.pad(dtp, ((0, 0), (0, 0), (0, D_pad - Dm)))
+        A = jnp.pad(A, ((0, D_pad - Dm), (0, 0)))
+        D = jnp.pad(D, ((0, D_pad - Dm),))
+        h0 = jnp.pad(h0, ((0, 0), (0, D_pad - Dm), (0, 0)))
+    D2 = D.reshape(1, D_pad)
+
+    kernel = functools.partial(
+        _mamba_kernel, chunk=chunk, num_chunks=nc, seq_valid=S
+    )
+    y, h_out = pl.pallas_call(
+        kernel,
+        grid=(B, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, idd, ic: (b, ic, idd)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, idd, ic: (b, ic, idd)),
+            pl.BlockSpec((1, chunk, N), lambda b, idd, ic: (b, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, idd, ic: (b, ic, 0)),
+            pl.BlockSpec((block_d, N), lambda b, idd, ic: (idd, 0)),
+            pl.BlockSpec((1, block_d), lambda b, idd, ic: (0, idd)),
+            pl.BlockSpec((1, block_d, N), lambda b, idd, ic: (b, idd, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, idd, ic: (b, ic, idd)),
+            pl.BlockSpec((1, block_d, N), lambda b, idd, ic: (b, idd, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S_pad, D_pad), x.dtype),
+            jax.ShapeDtypeStruct((B, D_pad, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        compiler_params=_compiler_params(("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xp, dtp, Bp, Cp, A, D2, h0)
+    return y[:, :S, :Dm], h_out[:, :Dm]

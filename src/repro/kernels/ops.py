@@ -1,0 +1,238 @@
+"""Public kernel ops: backend dispatch between Pallas (TPU), interpret-mode
+Pallas (CPU validation) and the pure-XLA chunked implementations.
+
+Backend selection (``REPRO_KERNELS`` env var or :func:`set_backend`):
+
+  * ``auto``      — Pallas on TPU, XLA elsewhere (default).
+  * ``pallas``    — force Pallas (real TPU).
+  * ``interpret`` — Pallas kernel body interpreted in Python on CPU; used by
+                    the kernel-validation tests, far too slow for real work.
+  * ``xla``       — chunked pure-jnp implementations (``xla_impl``); the path
+                    the multi-pod dry-run lowers, so ``cost_analysis`` counts
+                    kernel FLOPs instead of opaque custom calls.
+
+Training-time gradients: the Pallas kernels here are forward kernels; each op
+wraps them in ``jax.custom_vjp`` whose backward is the XLA chunked backward
+(flash-style recompute). On TPU that gives a fused forward + memory-bounded
+backward; on CPU everything is XLA end to end.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import xla_impl
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import wkv6 as _wkv6
+from repro.kernels import mamba_scan as _mamba
+from repro.kernels import ref as _ref
+
+_BACKEND: Optional[str] = None
+_VALID = ("auto", "pallas", "interpret", "xla")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in _VALID:
+        raise ValueError(f"backend {name!r} not in {_VALID}")
+    _BACKEND = name
+
+
+def backend() -> str:
+    b = _BACKEND or os.environ.get("REPRO_KERNELS", "auto")
+    if b not in _VALID:
+        raise ValueError(f"REPRO_KERNELS={b!r} not in {_VALID}")
+    if b == "auto":
+        b = "pallas" if jax.default_backend() == "tpu" else "xla"
+    return b
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jax.Array,                  # (B, Sq, H, Dh)
+    k: jax.Array,                  # (B, Sk, KV, Dh)
+    v: jax.Array,                  # (B, Sk, KV, Dv)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_len: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    block_k: int = 512,
+) -> jax.Array:
+    """Flash attention (causal / GQA / SWA). Differentiable on every backend."""
+    b = backend()
+    # Dry-run cost probes set this so the kv-block scan has trip count 1 and
+    # XLA cost_analysis (which counts a loop body once) sees the full work.
+    env_bk = os.environ.get("REPRO_ATTN_BLOCK_K")
+    if env_bk:
+        block_k = max(int(env_bk), k.shape[1])
+    if b == "xla" or kv_len is not None:
+        # dynamic kv_len (cache decode) goes through XLA; the Pallas forward
+        # takes static kv_valid only.
+        return xla_impl.flash_attention_xla(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_len=kv_len, scale=scale, block_k=block_k)
+    interpret = b == "interpret"
+
+    @jax.custom_vjp
+    def _op(q, k, v):
+        return _fa.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            scale=scale, interpret=interpret)
+
+    def _fwd(q, k, v):
+        return _op(q, k, v), (q, k, v)
+
+    def _bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q, k, v: xla_impl.flash_attention_xla(
+                q, k, v, causal=causal, window=window, q_offset=q_offset,
+                kv_len=None, scale=scale, block_k=block_k),
+            q, k, v)
+        return vjp(g)
+
+    _op.defvjp(_fwd, _bwd)
+    return _op(q, k, v)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    kv_len: jax.Array,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token decode over a KV cache (always XLA: one-token GEMV)."""
+    return xla_impl.decode_attention_xla(
+        q, k_cache, v_cache, kv_len=kv_len, window=window, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    b = backend()
+    if b == "xla":
+        return _ref.rmsnorm(x, scale, eps)
+    interpret = b == "interpret"
+
+    @jax.custom_vjp
+    def _op(x, scale):
+        return _rms.rmsnorm(x, scale, eps, interpret=interpret)
+
+    def _fwd(x, scale):
+        return _op(x, scale), (x, scale)
+
+    def _bwd(res, g):
+        x, s = res
+        _, vjp = jax.vjp(lambda x, s: _ref.rmsnorm(x, s, eps), x, s)
+        return vjp(g)
+
+    _op.defvjp(_fwd, _bwd)
+    return _op(x, scale)
+
+
+# ---------------------------------------------------------------------------
+# wkv6 (RWKV-6 recurrence)
+# ---------------------------------------------------------------------------
+
+
+def wkv6(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+    s0: Optional[jax.Array] = None, *, chunk: int = 16,
+):
+    """RWKV-6 recurrence -> (y, final_state). Differentiable everywhere."""
+    b = backend()
+    if b == "xla":
+        return xla_impl.wkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+    interpret = b == "interpret"
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    @jax.custom_vjp
+    def _op(r, k, v, w, u, s0):
+        return _wkv6.wkv6(r, k, v, w, u, s0, chunk=max(chunk, 16),
+                          interpret=interpret)
+
+    def _fwd(r, k, v, w, u, s0):
+        return _op(r, k, v, w, u, s0), (r, k, v, w, u, s0)
+
+    def _bwd(res, g):
+        r, k, v, w, u, s0 = res
+        _, vjp = jax.vjp(
+            lambda *a: xla_impl.wkv6_chunked(*a, chunk=chunk), r, k, v, w, u,
+            s0)
+        return vjp(g)
+
+    _op.defvjp(_fwd, _bwd)
+    return _op(r, k, v, w, u, s0)
+
+
+def wkv6_decode(r, k, v, w, u, state):
+    return xla_impl.wkv6_decode(r, k, v, w, u, state)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+
+def mamba_scan(
+    x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array, C: jax.Array,
+    D: jax.Array, h0: Optional[jax.Array] = None, *, chunk: int = 64,
+):
+    """Selective scan -> (y, final_state). Differentiable everywhere."""
+    b = backend()
+    if b == "xla":
+        return xla_impl.mamba_chunked(x, dt, A, Bm, C, D, h0, chunk=chunk)
+    interpret = b == "interpret"
+    B, S, Dm = x.shape
+    N = A.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, Dm, N), jnp.float32)
+
+    @jax.custom_vjp
+    def _op(x, dt, A, Bm, C, D, h0):
+        return _mamba.mamba_scan(x, dt, A, Bm, C, D, h0, chunk=chunk,
+                                 interpret=interpret)
+
+    def _fwd(*args):
+        return _op(*args), args
+
+    def _bwd(res, g):
+        _, vjp = jax.vjp(
+            lambda *a: xla_impl.mamba_chunked(*a, chunk=chunk), *res)
+        return vjp(g)
+
+    _op.defvjp(_fwd, _bwd)
+    return _op(x, dt, A, Bm, C, D, h0)
+
+
+def mamba_decode(x, dt, A, Bm, C, D, h):
+    return xla_impl.mamba_decode(x, dt, A, Bm, C, D, h)
+
+
+# ---------------------------------------------------------------------------
+# swiglu (no kernel: XLA fuses this well; kept for a single import site)
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return _ref.swiglu(x, w_gate, w_up, w_down)

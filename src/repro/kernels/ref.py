@@ -1,0 +1,154 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels are validated against (interpret mode on
+CPU), and double as the small-shape reference math used in unit tests.
+All functions are differentiable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last dim. x: (..., D), scale: (D,)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def attention(
+    q: jax.Array,                  # (B, Sq, H, Dh)
+    k: jax.Array,                  # (B, Sk, KV, Dh)
+    v: jax.Array,                  # (B, Sk, KV, Dv)
+    *,
+    causal: bool = True,
+    window: int = 0,               # 0 => full; else sliding window size
+    q_offset: int | jax.Array = 0, # absolute position of q[0] (decode: pos)
+    kv_len: jax.Array | None = None,  # (B,) valid kv length (cache decode)
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive full-softmax attention oracle with GQA / causal / SWA / cache mask."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, KV, Dv = v.shape
+    assert H % KV == 0
+    g = H // KV
+    scale = scale if scale is not None else Dh ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # (B, Sq, KV, g, Dh) x (B, Sk, KV, Dh) -> (B, KV, g, Sq, Sk)
+    qg = qf.reshape(B, Sq, KV, g, Dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf)
+
+    # q_offset may be a scalar or a per-batch (B,) array (cache decode).
+    q_off = jnp.asarray(q_offset)
+    q_off = q_off.reshape(-1, 1) if q_off.ndim else q_off[None, None]
+    qpos = jnp.arange(Sq)[None, :] + q_off                # (B or 1, Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((qpos.shape[0], Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, None, :] <= qpos[:, :, None]
+    if window and window > 0:
+        mask &= kpos[None, None, :] > (qpos[:, :, None] - window)
+    mask = jnp.broadcast_to(mask[:, None, None], (B, 1, 1, Sq, Sk))
+    if kv_len is not None:
+        mask = mask & (kpos[None, None, None, None, :] < kv_len[:, None, None, None, None])
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def wkv6(
+    r: jax.Array,                  # (B, S, H, K)
+    k: jax.Array,                  # (B, S, H, K)
+    v: jax.Array,                  # (B, S, H, V)
+    w: jax.Array,                  # (B, S, H, K)  per-channel decay in (0,1)
+    u: jax.Array,                  # (H, K)        "bonus" for the current token
+    s0: jax.Array | None = None,   # (B, H, K, V)  initial state
+):
+    """RWKV-6 linear-attention recurrence (data-dependent decay).
+
+    y_t = r_t @ (S_t + u * (k_t ⊗ v_t));   S_{t+1} = w_t[:,None] * S_t + k_t ⊗ v_t
+    Returns (y: (B,S,H,V), s_out: (B,H,K,V)). Math in float32.
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, V), jnp.float32)
+    else:
+        s0 = s0.astype(jnp.float32)
+
+    def step(state, inputs):
+        rt, kt, vt, wt = inputs                          # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]         # (B,H,K,V)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, state + uf[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, yt
+
+    xs = (
+        jnp.moveaxis(rf, 1, 0),
+        jnp.moveaxis(kf, 1, 0),
+        jnp.moveaxis(vf, 1, 0),
+        jnp.moveaxis(wf, 1, 0),
+    )
+    s_out, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(r.dtype)           # (B,S,H,V)
+    return y, s_out
+
+
+def mamba_scan(
+    x: jax.Array,                  # (B, S, D)   post-conv, post-silu input
+    dt: jax.Array,                 # (B, S, D)   softplus'd timestep
+    A: jax.Array,                  # (D, N)      negative (=-exp(A_log))
+    Bm: jax.Array,                 # (B, S, N)
+    C: jax.Array,                  # (B, S, N)
+    D: jax.Array,                  # (D,)
+    h0: jax.Array | None = None,   # (B, D, N)
+):
+    """Selective state-space scan (Mamba-1).
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t;   y_t = C_t . h_t + D * x_t
+    Returns (y: (B,S,D), h_out: (B,D,N)). Math in float32.
+    """
+    B, S, Dm = x.shape
+    N = A.shape[-1]
+    xf, dtf, Bf, Cf = (a.astype(jnp.float32) for a in (x, dt, Bm, C))
+    Af = A.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, Dm, N), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+
+    def step(h, inputs):
+        xt, dtt, Bt, Ct = inputs                          # (B,D),(B,D),(B,N),(B,N)
+        dA = jnp.exp(dtt[..., None] * Af[None])           # (B,D,N)
+        dBx = (dtt * xt)[..., None] * Bt[:, None, :]      # (B,D,N)
+        h = dA * h + dBx
+        yt = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, yt
+
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    h_out, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * D.astype(jnp.float32)[None, None, :]
+    return y.astype(x.dtype), h_out
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
+           ) -> jax.Array:
+    """SwiGLU MLP oracle: silu(x@wg) * (x@wu) @ wd."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down

@@ -1,0 +1,53 @@
+"""Pallas fused RMSNorm kernel (row-blocked, f32 accumulation in VMEM).
+
+TARGET: TPU — one grid step normalizes a (block_rows, D) tile resident in
+VMEM; the reduction and rsqrt run in f32 regardless of input dtype.
+Validated against ``ref.rmsnorm`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                       # (br, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jax.Array,                  # (..., D)
+    scale: jax.Array,              # (D,)
+    eps: float = 1e-5,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    rows = math.prod(orig_shape[:-1]) if len(orig_shape) > 1 else 1
+    x2 = x.reshape(rows, D)
+    block_rows = min(block_rows, max(1, rows))
+    nr = math.ceil(rows / block_rows)
+    rows_pad = nr * block_rows
+    if rows_pad != rows:
+        x2 = jnp.pad(x2, ((0, rows_pad - rows), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, D), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out[:rows].reshape(orig_shape)

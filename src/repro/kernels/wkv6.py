@@ -1,0 +1,124 @@
+"""Pallas WKV6 kernel — RWKV-6 recurrence with data-dependent per-channel decay.
+
+TPU adaptation of the (GPU warp-per-head) CUDA wkv6 kernel: one grid cell owns
+a (batch, head) pair; the (K, V) state matrix stays resident in f32 VMEM
+scratch across sequential time chunks (grid dim 2, "arbitrary"), while r/k/v/w
+stream through VMEM in (chunk, K) tiles from HBM. The inner per-token update
+is a rank-1 outer product + (K,V) elementwise FMA — VPU work with the state
+held in registers/VMEM, never spilling to HBM between tokens.
+
+Validated against ``ref.wkv6`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import _compiler_params
+
+
+def _wkv6_kernel(
+    r_ref, k_ref, v_ref, w_ref,    # (1,1,ct,K) / (1,1,ct,V) blocks
+    u_ref,                         # (1, K)
+    s0_ref,                        # (1,1,K,V)
+    y_ref,                         # (1,1,ct,V)
+    s_out_ref,                     # (1,1,K,V)
+    state_scr,                     # VMEM (K, V) f32
+    *,
+    chunk: int,
+    num_chunks: int,
+    seq_valid: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                              # (K,)
+
+    def step(t, _):
+        pos = ic * chunk + t
+        rt = r_ref[0, 0, t].astype(jnp.float32)                   # (K,)
+        kt = k_ref[0, 0, t].astype(jnp.float32)                   # (K,)
+        vt = v_ref[0, 0, t].astype(jnp.float32)                   # (V,)
+        wt = w_ref[0, 0, t].astype(jnp.float32)                   # (K,)
+        s = state_scr[...]                                        # (K, V)
+        kv = kt[:, None] * vt[None, :]                            # (K, V)
+        y = jnp.sum((s + u[:, None] * kv) * rt[:, None], axis=0)  # (V,)
+        y_ref[0, 0, t] = y.astype(y_ref.dtype)
+        # Do not advance state on padded tail positions.
+        valid = pos < seq_valid
+        s_new = jnp.where(valid, wt[:, None] * s + kv, s)
+        state_scr[...] = s_new
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ic == num_chunks - 1)
+    def _finalize():
+        s_out_ref[0, 0] = state_scr[...].astype(s_out_ref.dtype)
+
+
+def wkv6(
+    r: jax.Array,                  # (B, S, H, K)
+    k: jax.Array,                  # (B, S, H, K)
+    v: jax.Array,                  # (B, S, H, V)
+    w: jax.Array,                  # (B, S, H, K) decay in (0,1)
+    u: jax.Array,                  # (H, K)
+    s0: jax.Array | None = None,   # (B, H, K, V)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """Returns (y: (B,S,H,V), s_out: (B,H,K,V) float32)."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    chunk = min(chunk, max(1, S))
+    nc = math.ceil(S / chunk)
+    S_pad = nc * chunk
+
+    def to_bhsk(a):
+        a = jnp.moveaxis(a, 2, 1)                                 # (B,H,S,·)
+        if S_pad != S:
+            a = jnp.pad(a, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
+        return a
+
+    rt, kt, vt, wt = (to_bhsk(a) for a in (r, k, v, w))
+
+    kernel = functools.partial(
+        _wkv6_kernel, chunk=chunk, num_chunks=nc, seq_valid=S
+    )
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, K), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, K), lambda b, h, ic: (h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, V), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S_pad, V), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        compiler_params=_compiler_params(("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(rt, kt, vt, wt, u, s0)
+    y = jnp.moveaxis(y[:, :, :S], 1, 2)                           # (B,S,H,V)
+    return y, s_out

@@ -1,0 +1,244 @@
+"""Jitted step factories: train / prefill / decode with explicit shardings.
+
+This is the seam between the model (logical axis names) and the launcher
+(physical meshes): abstract params + path-based specs in, jitted-and-lowered
+step functions out. Everything here works identically for real execution and
+for AOT ``.lower().compile()`` dry-runs — the dry-run just passes
+``ShapeDtypeStruct`` stand-ins.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, OptimizerConfig, ShapeConfig
+from repro.launch import sharding as shd
+from repro.models.api import Model, input_specs
+from repro.optim import adamw_update, init_opt_state, opt_state_spec
+
+Params = Any
+
+# input name -> logical spec builder (rank-aware)
+_BATCH_INPUT_SPECS = {
+    "tokens": ("batch", None),
+    "token": ("batch",),
+    "positions": ("batch", None),
+    "kv_len": ("batch",),
+    "pos": (),
+    "enc_embeds": ("batch", None, None),
+    "memory": ("batch", None, None),
+    "patch_embeds": ("batch", None, None),
+    "patch_positions": ("batch", None),
+    "mrope_positions": (None, "batch", None),
+    "loss_mask": ("batch", None),
+}
+
+
+def batch_shardings(mesh: Mesh, specs: Dict[str, jax.ShapeDtypeStruct]
+                    ) -> Dict[str, NamedSharding]:
+    out = {}
+    for name, s in specs.items():
+        logical = _BATCH_INPUT_SPECS[name]
+        out[name] = shd.named_sharding(s.shape, logical)
+    return out
+
+
+def param_shardings(mesh: Mesh, model: Model, abstract_params: Params):
+    spec = model.param_spec(abstract_params)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig,
+                    microbatches: int = 1):
+    """Plain step (microbatches=1) or gradient-accumulation step.
+
+    With accumulation, the fp32 grad accumulator is sharded ZeRO-style
+    (same rule as the optimizer moments): each microbatch's gradient is
+    reduce-scattered into the accumulator instead of all-reduced, cutting
+    both the accumulator memory (by dp) and per-microbatch collective
+    bytes (2x -> 1x) — the memory-term hillclimb for the biggest models.
+    """
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, **opt_metrics)
+        return params, opt_state, metrics
+
+    if microbatches <= 1:
+        return train_step
+
+    def accum_step(params, opt_state, batch):
+        k = microbatches
+        mbs = {}
+        for name, v in batch.items():
+            if name == "mrope_positions":      # (3, B, S): batch is dim 1
+                mbs[name] = jnp.moveaxis(
+                    v.reshape(v.shape[0], k, v.shape[1] // k, v.shape[2]),
+                    1, 0)
+            elif v.ndim == 0:
+                mbs[name] = jnp.broadcast_to(v, (k,))
+            else:
+                mbs[name] = v.reshape(k, v.shape[0] // k, *v.shape[1:])
+
+        gspec = None
+        mesh = shd.active_mesh()
+        if mesh is not None:
+            pspec = model.param_spec(params)
+            ospec = opt_state_spec(opt_cfg, params, pspec)
+            gspec = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), ospec.mu,
+                is_leaf=lambda x: isinstance(
+                    x, jax.sharding.PartitionSpec))
+
+        def shard_grads(g):
+            if gspec is None:
+                return g
+            return jax.tree.map(jax.lax.with_sharding_constraint, g, gspec)
+
+        zero = jax.tree.map(lambda p_: jnp.zeros(p_.shape, jnp.float32),
+                            params)
+        zero = shard_grads(zero)
+
+        def body(carry, mb):
+            g_acc, loss_acc, aux_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                model.loss, has_aux=True)(params, mb)
+            g = shard_grads(jax.tree.map(
+                lambda x: x.astype(jnp.float32), g))
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            aux = metrics.get("aux_loss", jnp.zeros((), jnp.float32))
+            return (g_acc, loss_acc + loss, aux_acc + aux), None
+
+        (g_acc, loss_sum, aux_sum), _ = jax.lax.scan(
+            body, (zero, jnp.zeros((), jnp.float32),
+                   jnp.zeros((), jnp.float32)), mbs)
+        grads = jax.tree.map(lambda g, p_: (g / k).astype(p_.dtype),
+                             g_acc, params)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss_sum / k, "lm_loss": loss_sum / k,
+                   "aux_loss": aux_sum / k, **opt_metrics}
+        return params, opt_state, metrics
+
+    return accum_step
+
+
+def lower_train_step(
+    model: Model,
+    opt_cfg: OptimizerConfig,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    *,
+    donate: bool = True,
+    microbatches: int = 1,
+):
+    """AOT-lower the train step for (model x shape x mesh). Call under
+    ``shd.axis_rules(mesh)``. Returns (lowered, abstract_inputs)."""
+    cfg = model.cfg
+    aparams = model.abstract_params()
+    aopt = jax.eval_shape(functools.partial(init_opt_state, opt_cfg),
+                          aparams)
+    pshard = param_shardings(mesh, model, aparams)
+    oshard = _named(mesh, opt_state_spec(opt_cfg, aparams,
+                                         model.param_spec(aparams)))
+    bspecs = input_specs(cfg, shape)
+    bshard = batch_shardings(mesh, bspecs)
+
+    step = make_train_step(model, opt_cfg, microbatches=microbatches)
+    jitted = jax.jit(
+        step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    lowered = jitted.lower(aparams, aopt, bspecs)
+    return lowered, (aparams, aopt, bspecs)
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, max_len=max_len)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, token, pos, kv_len, cache, memory=None):
+        logits, cache = model.decode_step(params, token, pos, cache,
+                                          kv_len=kv_len, memory=memory)
+        return logits, cache
+    return decode_step
+
+
+def lower_prefill_step(model: Model, mesh: Mesh, shape: ShapeConfig):
+    cfg = model.cfg
+    aparams = model.abstract_params()
+    pshard = param_shardings(mesh, model, aparams)
+    bspecs = input_specs(cfg, shape)
+    bshard = batch_shardings(mesh, bspecs)
+    B = shape.global_batch
+    S = shape.seq_len // 2 if cfg.is_encoder_decoder else shape.seq_len
+    acache = model.abstract_cache(B, S)
+    cshard = _named(mesh, model.cache_spec(acache))
+
+    step = make_prefill_step(model, max_len=S)
+    jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                     out_shardings=(None, cshard))
+    return jitted.lower(aparams, bspecs), (aparams, bspecs)
+
+
+def lower_decode_step(model: Model, mesh: Mesh, shape: ShapeConfig):
+    cfg = model.cfg
+    aparams = model.abstract_params()
+    pshard = param_shardings(mesh, model, aparams)
+    bspecs = input_specs(cfg, shape)            # token/pos/kv_len (+memory)
+    bshard = batch_shardings(mesh, bspecs)
+    B = shape.global_batch
+    S = shape.seq_len // 2 if cfg.is_encoder_decoder else shape.seq_len
+    acache = model.abstract_cache(B, S)
+    cshard = _named(mesh, model.cache_spec(acache))
+
+    step = make_decode_step(model)
+    args = (aparams, bspecs["token"], bspecs["pos"], bspecs["kv_len"],
+            acache)
+    in_sh = (pshard, bshard["token"], bshard["pos"], bshard["kv_len"],
+             cshard)
+    kwargs = {}
+    if "memory" in bspecs:
+        args = args + (bspecs["memory"],)
+        in_sh = in_sh + (bshard["memory"],)
+    jitted = jax.jit(step, in_shardings=in_sh,
+                     out_shardings=(None, cshard), donate_argnums=(4,))
+    return jitted.lower(*args, **kwargs), args
+
+
+def lower_step_for(model: Model, opt_cfg: OptimizerConfig, mesh: Mesh,
+                   shape: ShapeConfig):
+    """Dispatch on the cell kind: train_step / prefill / decode."""
+    if shape.kind == "train":
+        return lower_train_step(model, opt_cfg, mesh, shape)
+    if shape.kind == "prefill":
+        return lower_prefill_step(model, mesh, shape)
+    return lower_decode_step(model, mesh, shape)

@@ -1,0 +1,335 @@
+"""Attention mixers: GQA (RoPE / M-RoPE / SWA / QKV-bias) and MLA
+(DeepSeek-style multi-head latent attention with compressed KV cache and
+absorbed decode).
+
+Every mixer exposes ``init(kg, cfg) -> params`` and
+``apply(params, x, *, cfg, positions, mode, cache, kv_len) -> (out, cache)``
+with mode in {"train", "prefill", "decode"}:
+
+  * train   — full causal self-attention, no cache.
+  * prefill — causal self-attention AND returns a filled cache.
+  * decode  — single-token query against the cache (S_q == 1).
+
+Caches are plain dicts of arrays so they stack cleanly for scan-over-layers
+and shard like any other pytree. SWA layers use a ring buffer of size
+``window`` (rope is applied at write time, so ring order is irrelevant).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.launch import sharding as shd
+from repro.launch.sharding import logical
+from repro.models.params import KeyGen, dense_init, zeros, ones
+from repro.models.rope import apply_mrope, apply_rope, positions_for
+
+Cache = Optional[Dict[str, Any]]
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(kg: KeyGen, cfg: ModelConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    H = cfg.padded_heads()
+    KV = cfg.padded_kv_heads()
+    Dh = cfg.resolved_head_dim()
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(kg(), D, H * Dh, dtype=dt),
+        "wk": dense_init(kg(), D, KV * Dh, dtype=dt),
+        "wv": dense_init(kg(), D, KV * Dh, dtype=dt),
+        "wo": dense_init(kg(), H * Dh, D,
+                         std=1.0 / math.sqrt(2 * cfg.num_layers * H * Dh),
+                         dtype=dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((H * Dh,), dt)
+        p["bk"] = zeros((KV * Dh,), dt)
+        p["bv"] = zeros((KV * Dh,), dt)
+    return p
+
+
+def _rope_qk(q, k, cfg: ModelConfig, positions, mrope_positions=None):
+    if cfg.rope == "none":
+        return q, k
+    if cfg.rope == "mrope" and mrope_positions is not None:
+        return (apply_mrope(q, mrope_positions, cfg.rope_theta),
+                apply_mrope(k, mrope_positions, cfg.rope_theta))
+    return (apply_rope(q, positions, cfg.rope_theta),
+            apply_rope(k, positions, cfg.rope_theta))
+
+
+def cache_capacity(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.sliding_window and cfg.sliding_window > 0:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=None) -> Dict[str, Any]:
+    KV = cfg.padded_kv_heads()
+    Dh = cfg.resolved_head_dim()
+    C = cache_capacity(cfg, max_len)
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return {
+        "k": jnp.zeros((batch, C, KV, Dh), dt),
+        "v": jnp.zeros((batch, C, KV, Dh), dt),
+    }
+
+
+def _ring_write(cache_kv, new, pos):
+    """Write (B, S, KV, Dh) ``new`` at positions [pos, pos+S) modulo capacity.
+
+    Works for both plain caches (pos+S <= C by construction) and SWA rings.
+    """
+    B, S = new.shape[0], new.shape[1]
+    C = cache_kv.shape[1]
+    if S >= C:
+        # keep the last C entries, aligned to ring slots of their positions
+        last = new[:, -C:]
+        start = (pos + S - C) % C
+        idx = (start + jnp.arange(C)) % C
+        return cache_kv.at[:, idx].set(last.astype(cache_kv.dtype))
+    idx = (pos + jnp.arange(S)) % C
+    return cache_kv.at[:, idx].set(new.astype(cache_kv.dtype))
+
+
+def gqa_apply(
+    p: Dict[str, Any],
+    x: jax.Array,                  # (B, S, D)
+    *,
+    cfg: ModelConfig,
+    positions: jax.Array,          # (B, S) absolute positions
+    mode: str = "train",
+    cache: Cache = None,
+    kv_len=None,                   # (B,) valid length incl. current (decode)
+    mrope_positions=None,          # (3, B, S) for M-RoPE
+    causal: bool = True,
+) -> Tuple[jax.Array, Cache]:
+    B, S, D = x.shape
+    H = cfg.padded_heads()
+    KV = cfg.padded_kv_heads()
+    Dh = cfg.resolved_head_dim()
+
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = logical(q.reshape(B, S, H, Dh), "batch", None, "heads", None)
+    k = logical(k.reshape(B, S, KV, Dh), "batch", None, "kv_heads", None)
+    v = logical(v.reshape(B, S, KV, Dh), "batch", None, "kv_heads", None)
+    q, k = _rope_qk(q, k, cfg, positions, mrope_positions)
+
+    window = cfg.sliding_window or 0
+    if mode == "train":
+        out = ops.attention(q, k, v, causal=causal, window=window)
+        new_cache = None
+    elif mode == "prefill":
+        out = ops.attention(q, k, v, causal=causal, window=window)
+        pos0 = positions[:, 0] if positions.ndim == 2 else positions
+        new_cache = dict(cache)
+        new_cache["k"] = _ring_write(cache["k"], k, pos0[0] if pos0.ndim else pos0)
+        new_cache["v"] = _ring_write(cache["v"], v, pos0[0] if pos0.ndim else pos0)
+    elif mode == "decode":
+        assert S == 1 and cache is not None
+        pos0 = positions[:, 0] if positions.ndim == 2 else positions
+        pos_scalar = pos0[0] if hasattr(pos0, "ndim") and pos0.ndim else pos0
+        ck = _ring_write(cache["k"], k, pos_scalar)
+        cv = _ring_write(cache["v"], v, pos_scalar)
+        C = ck.shape[1]
+        if kv_len is None:
+            kv_len = jnp.broadcast_to(pos_scalar + 1, (B,)).astype(jnp.int32)
+        eff_len = jnp.minimum(kv_len, C)
+        out = ops.decode_attention(q, ck, cv, kv_len=eff_len)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        raise ValueError(mode)
+
+    out = out.reshape(B, S, H * Dh)
+    return shd.tp_row_matmul(out, p["wo"], shard_name="heads"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(kg: KeyGen, cfg: ModelConfig) -> Dict[str, Any]:
+    m = cfg.mla
+    D = cfg.d_model
+    H = cfg.padded_heads()
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Dict[str, Any] = {}
+    if m.q_lora_rank > 0:
+        p["wq_a"] = dense_init(kg(), D, m.q_lora_rank, dtype=dt)
+        p["q_norm"] = ones((m.q_lora_rank,), dt)
+        p["wq_b"] = dense_init(kg(), m.q_lora_rank, H * (dn + dr), dtype=dt)
+    else:
+        p["wq"] = dense_init(kg(), D, H * (dn + dr), dtype=dt)
+    p["wkv_a"] = dense_init(kg(), D, m.kv_lora_rank + dr, dtype=dt)
+    p["kv_norm"] = ones((m.kv_lora_rank,), dt)
+    p["wkv_b"] = dense_init(kg(), m.kv_lora_rank, H * (dn + dv), dtype=dt)
+    p["wo"] = dense_init(kg(), H * dv, D,
+                         std=1.0 / math.sqrt(2 * cfg.num_layers * H * dv),
+                         dtype=dt)
+    return p
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=None) -> Dict[str, Any]:
+    m = cfg.mla
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return {
+        "c": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+        "kr": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dt),
+    }
+
+
+def _mla_q(p, x, cfg, positions, B, S):
+    m = cfg.mla
+    H = cfg.padded_heads()
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    if m.q_lora_rank > 0:
+        q = ops.rmsnorm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, H, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    if cfg.rope != "none":
+        qr = apply_rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _mla_ckv(p, x, cfg, positions, B, S):
+    m = cfg.mla
+    dr = m.qk_rope_head_dim
+    ckv = x @ p["wkv_a"]                                     # (B,S,lora+dr)
+    c, kr = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c = ops.rmsnorm(c, p["kv_norm"], cfg.norm_eps)
+    if cfg.rope != "none":
+        kr = apply_rope(kr.reshape(B, S, 1, dr), positions,
+                        cfg.rope_theta).reshape(B, S, dr)
+    return c, kr
+
+
+def mla_apply(
+    p: Dict[str, Any],
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    mode: str = "train",
+    cache: Cache = None,
+    kv_len=None,
+    mrope_positions=None,          # unused (MLA archs use plain RoPE)
+    causal: bool = True,
+) -> Tuple[jax.Array, Cache]:
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.padded_heads()
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    scale = (dn + dr) ** -0.5
+
+    qn, qr = _mla_q(p, x, cfg, positions, B, S)
+
+    if mode in ("train", "prefill"):
+        c, kr = _mla_ckv(p, x, cfg, positions, B, S)
+        kv = (c @ p["wkv_b"]).reshape(B, S, H, dn + dv)
+        kn, v = kv[..., :dn], kv[..., dn:]
+        k = jnp.concatenate(
+            [kn, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, dr))], -1)
+        q = jnp.concatenate([qn, qr], -1)
+        q = logical(q, "batch", None, "heads", None)
+        k = logical(k, "batch", None, "heads", None)
+        v = logical(v, "batch", None, "heads", None)
+        out = ops.attention(q, k, v, causal=causal, scale=scale)
+        new_cache = None
+        if mode == "prefill":
+            pos0 = positions[:, 0]
+            start = pos0[0] if pos0.ndim else pos0
+            new_cache = dict(cache)
+            new_cache["c"] = jax.lax.dynamic_update_slice(
+                cache["c"], c.astype(cache["c"].dtype), (0, start, 0))
+            new_cache["kr"] = jax.lax.dynamic_update_slice(
+                cache["kr"], kr.astype(cache["kr"].dtype), (0, start, 0))
+    elif mode == "decode":
+        assert S == 1 and cache is not None
+        c_new, kr_new = _mla_ckv(p, x, cfg, positions, B, S)
+        pos0 = positions[:, 0]
+        start = pos0[0] if pos0.ndim else pos0
+        cc = jax.lax.dynamic_update_slice(
+            cache["c"], c_new.astype(cache["c"].dtype), (0, start, 0))
+        ckr = jax.lax.dynamic_update_slice(
+            cache["kr"], kr_new.astype(cache["kr"].dtype), (0, start, 0))
+        C = cc.shape[1]
+        if kv_len is None:
+            kv_len = jnp.broadcast_to(start + 1, (B,)).astype(jnp.int32)
+        # Absorbed decode: project q_nope into the latent space once, attend
+        # against the compressed cache directly (never expand all S).
+        wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H, dn + dv)
+        w_uk = wkv_b[..., :dn]                               # (lora, H, dn)
+        w_uv = wkv_b[..., dn:]                               # (lora, H, dv)
+        q_lat = jnp.einsum("bqhd,lhd->bqhl", qn.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))         # (B,1,H,lora)
+        s = (jnp.einsum("bqhl,bsl->bhqs", q_lat,
+                        cc.astype(jnp.float32)) +
+             jnp.einsum("bqhd,bsd->bhqs", qr.astype(jnp.float32),
+                        ckr.astype(jnp.float32))) * scale    # (B,H,1,S)
+        mask = jnp.arange(C)[None, :] < kv_len[:, None]      # (B,S)
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsl->bqhl", w, cc.astype(jnp.float32))
+        out = jnp.einsum("bqhl,lhd->bqhd", o_lat,
+                         w_uv.astype(jnp.float32)).astype(x.dtype)
+        new_cache = {"c": cc, "kr": ckr}
+    else:
+        raise ValueError(mode)
+
+    out = out.reshape(B, S, H * dv)
+    return shd.tp_row_matmul(out, p["wo"], shard_name="heads"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_init(kg: KeyGen, cfg: ModelConfig) -> Dict[str, Any]:
+    return gqa_init(kg, cfg)
+
+
+def cross_apply(
+    p: Dict[str, Any],
+    x: jax.Array,                  # (B, S_dec, D) decoder states
+    memory: jax.Array,             # (B, S_enc, D) encoder output
+    *,
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Full (non-causal) cross attention; no rope on cross path."""
+    B, S, D = x.shape
+    Sm = memory.shape[1]
+    H = cfg.padded_heads()
+    KV = cfg.padded_kv_heads()
+    Dh = cfg.resolved_head_dim()
+    q = (x @ p["wq"]).reshape(B, S, H, Dh)
+    k = (memory @ p["wk"]).reshape(B, Sm, KV, Dh)
+    v = (memory @ p["wv"]).reshape(B, Sm, KV, Dh)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, Dh)
+        k = k + p["bk"].reshape(KV, Dh)
+        v = v + p["bv"].reshape(KV, Dh)
+    out = ops.attention(q, k, v, causal=False)
+    return out.reshape(B, S, H * Dh) @ p["wo"]

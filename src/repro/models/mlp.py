@@ -1,0 +1,230 @@
+"""MLPs: dense (SwiGLU / GELU, optional bias) and dropless MoE.
+
+The MoE layer is the sort-based dropless formulation (MegaBlocks-style,
+adapted to TPU): tokens stay resident on their data shard (no all-to-all in
+the baseline layout); expert weights are sharded on the hidden (ff) dim over
+the ``model`` axis so every shard holds a slice of *every* expert. Dispatch is
+a local argsort + ``jax.lax.ragged_dot``; the down-projection's partial sums
+reduce over ``model`` with a single psum.
+
+Because dispatch must be *local* to the data shard (a global argsort over a
+sharded token dim would make GSPMD materialize the whole batch), the MoE body
+runs under ``shard_map`` when a mesh is active, and falls back to plain local
+execution on a single device.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import sharding as shd
+from repro.models.params import KeyGen, dense_init, zeros
+
+import math
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(kg: KeyGen, cfg: ModelConfig, d_ff: Optional[int] = None,
+             ) -> Dict[str, Any]:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    out_std = 1.0 / math.sqrt(2 * cfg.num_layers * F)
+    if cfg.act == "swiglu":
+        p = {
+            "w_gate": dense_init(kg(), D, F, dtype=dt),
+            "w_up": dense_init(kg(), D, F, dtype=dt),
+            "w_down": dense_init(kg(), F, D, std=out_std, dtype=dt),
+        }
+    else:
+        p = {
+            "w_up": dense_init(kg(), D, F, dtype=dt),
+            "w_down": dense_init(kg(), F, D, std=out_std, dtype=dt),
+        }
+    if cfg.mlp_bias:
+        p["b_up"] = zeros((F,), dt)
+        p["b_down"] = zeros((D,), dt)
+    return p
+
+
+def mlp_apply(p: Dict[str, Any], x: jax.Array, *, cfg: ModelConfig,
+              ) -> jax.Array:
+    if cfg.act == "swiglu":
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        if cfg.mlp_bias:
+            u = u + p["b_up"]
+        h = jax.nn.silu(g) * u
+    else:
+        h = x @ p["w_up"]
+        if cfg.mlp_bias:
+            h = h + p["b_up"]
+        h = jax.nn.gelu(h)
+    h = shd.logical(h, "batch", None, "ff")
+    out = shd.tp_row_matmul(h, p["w_down"])
+    if cfg.mlp_bias:
+        out = out + p["b_down"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def moe_init(kg: KeyGen, cfg: ModelConfig) -> Dict[str, Any]:
+    mo = cfg.moe
+    D = cfg.d_model
+    E = mo.num_experts
+    F = mo.d_ff_expert
+    dt = jnp.dtype(cfg.param_dtype)
+    out_std = 1.0 / math.sqrt(2 * cfg.num_layers * F)
+
+    def expert_stack(key, d_in, d_out, std):
+        return (jax.random.truncated_normal(
+            key, -2.0, 2.0, (E, d_in, d_out), jnp.float32) * std).astype(dt)
+
+    p = {
+        "router": dense_init(kg(), D, E, std=0.02, dtype=jnp.float32),
+        "w_gate": expert_stack(kg(), D, F, 1.0 / math.sqrt(D)),
+        "w_up": expert_stack(kg(), D, F, 1.0 / math.sqrt(D)),
+        "w_down": expert_stack(kg(), F, D, out_std),
+    }
+    if mo.router == "sigmoid":
+        p["router_bias"] = jnp.zeros((E,), jnp.float32)
+    if mo.num_shared_experts > 0:
+        p["shared"] = mlp_init(kg, cfg, d_ff=F * mo.num_shared_experts)
+    return p
+
+
+def _route(p, x2, mo):
+    """x2: (T, D) tokens. Returns (weights (T,k) f32, ids (T,k) i32, aux)."""
+    logits = x2.astype(jnp.float32) @ p["router"]            # (T, E)
+    if mo.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + p["router_bias"]                      # bias for top-k sel
+        w, ids = jax.lax.top_k(sel, mo.num_experts_per_tok)
+        w = jnp.take_along_axis(scores, ids, axis=-1)        # weight w/o bias
+        w = w / (jnp.sum(w, -1, keepdims=True) + 1e-9)
+        probs = scores / (jnp.sum(scores, -1, keepdims=True) + 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, -1)
+        w, ids = jax.lax.top_k(probs, mo.num_experts_per_tok)
+        w = w / (jnp.sum(w, -1, keepdims=True) + 1e-9)
+    # load-balance aux (Switch-style): E * sum_e f_e * P_e
+    E = logits.shape[-1]
+    f = jnp.mean(jax.nn.one_hot(ids, E, dtype=jnp.float32), axis=(0, 1)) \
+        * mo.num_experts_per_tok
+    pbar = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * pbar)
+    return w, ids, aux
+
+
+def _moe_local(p, x2, mo, act):
+    """Dropless MoE on local tokens. x2: (T, D). Returns (out (T,D), aux)."""
+    import os
+    T, D = x2.shape
+    k = mo.num_experts_per_tok
+    E = mo.num_experts
+    w, ids, aux = _route(p, x2, mo)
+    flat_ids = ids.reshape(-1)                               # (T*k,)
+    order = jnp.argsort(flat_ids)                            # stable
+    token_of = order // k                                    # source token
+    xs = jnp.take(x2, token_of, axis=0)                      # (T*k, D) sorted
+    group_sizes = jnp.bincount(flat_ids, length=E).astype(jnp.int32)
+    if os.environ.get("REPRO_COST_MODE"):
+        # Dry-run cost probes: XLA's cost model charges ragged_dot as if
+        # every token visited every expert (E-fold overcount). Regroup into
+        # an E-batched dense einsum with the TRUE flop count (2*T*k*D*F)
+        # and the true weight traffic (all E experts read once). Numerics
+        # differ; probes are compile-only.
+        Tk = xs.shape[0]
+        pad = (-Tk) % E
+        xe = jnp.pad(xs, ((0, pad), (0, 0))).reshape(E, -1, D)
+        g = jnp.einsum("etd,edf->etf", xe, p["w_gate"])
+        u = jnp.einsum("etd,edf->etf", xe, p["w_up"])
+        h = (jax.nn.silu(g) * u) if act == "swiglu" else jax.nn.gelu(u + g)
+        y = jnp.einsum("etf,efd->etd", h, p["w_down"])
+        y = y.reshape(-1, D)[:Tk]                            # (T*k, D)
+    else:
+        g = jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)
+        u = jax.lax.ragged_dot(xs, p["w_up"], group_sizes)
+        h = (jax.nn.silu(g) * u) if act == "swiglu" else jax.nn.gelu(u + g)
+        y = jax.lax.ragged_dot(h, p["w_down"], group_sizes)  # (T*k, D)
+    wsort = jnp.take(w.reshape(-1), order)                   # (T*k,)
+    y = y * wsort[:, None].astype(y.dtype)
+    out = jnp.zeros((T, D), y.dtype).at[token_of].add(y)
+    return out, aux
+
+
+def moe_apply(p: Dict[str, Any], x: jax.Array, *, cfg: ModelConfig,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B,S,D), aux_loss scalar)."""
+    mo = cfg.moe
+    B, S, D = x.shape
+    mesh = shd.active_mesh()
+
+    def local(px, xloc):
+        x2 = xloc.reshape(-1, D)
+        out, aux = _moe_local(px, x2, mo, cfg.act)
+        return out.reshape(xloc.shape), aux
+
+    if mesh is None:
+        out, aux = local(p, x)
+    else:
+        # axes already Manual in an enclosing shard_map (e.g. the int8pod
+        # cross-pod step) must be excluded: this inner region only binds
+        # the remaining axes, against the ambient abstract mesh.
+        manual = shd.manual_axes()
+        sm_mesh = shd.shard_map_mesh()
+        batch_axes = tuple(a for a in ("pod", "data")
+                           if a in mesh.shape and a not in manual)
+        dp = 1
+        for a in batch_axes:
+            dp *= mesh.shape[a]
+        if dp > 1 and B % dp != 0:
+            # batch not shardable (e.g. global_batch=1 long-context decode):
+            # replicate tokens across the DP axes; experts stay F-sharded.
+            batch_axes = ()
+        model_ax = "model" if ("model" in mesh.shape
+                               and "model" not in manual) else None
+        wspec = {k: P(None, None, "model") if k in
+                 ("w_gate", "w_up") else
+                 (P(None, "model", None) if k == "w_down" else P())
+                 for k in p if k != "shared"}
+        if "shared" in p:
+            wspec["shared"] = {
+                k: (P(None, "model") if k in ("w_gate", "w_up")
+                    else P("model", None) if k == "w_down" else P())
+                for k in p["shared"]}
+
+        def body(px, xloc):
+            out, aux = local(px, xloc)
+            if model_ax is not None:
+                out = jax.lax.psum(out, model_ax)
+            if batch_axes:
+                aux = jax.lax.pmean(aux, batch_axes)
+            return out, aux
+
+        axis_names = {a for a in ("pod", "data", "model")
+                      if a in mesh.shape and a not in manual}
+        out, aux = jax.shard_map(
+            body, mesh=sm_mesh,
+            in_specs=(wspec, P(batch_axes or None, None, None)),
+            out_specs=(P(batch_axes or None, None, None), P()),
+            axis_names=axis_names,
+            check_vma=False,
+        )(p, x)
+
+    if mo.num_shared_experts > 0:
+        out = out + mlp_apply(p["shared"], x, cfg=cfg)
+    return out, aux

@@ -1,0 +1,62 @@
+"""Parameter initialization + pytree utilities (pure JAX, no flax)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+class KeyGen:
+    """Splits a PRNGKey on demand: ``k = kg()``."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def trunc_normal(key, shape, std=0.02, dtype=jnp.bfloat16):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, *, std=None, dtype=jnp.bfloat16):
+    std = std if std is not None else (1.0 / math.sqrt(d_in))
+    return trunc_normal(key, (d_in, d_out), std=std, dtype=dtype)
+
+
+def embed_init(key, vocab, d, *, dtype=jnp.bfloat16):
+    return trunc_normal(key, (vocab, d), std=0.02, dtype=dtype)
+
+
+def zeros(shape, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.bfloat16):
+    return jnp.ones(shape, dtype)
+
+
+def count_params(params: Params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(params))
+
+
+def stack_trees(trees):
+    """Stack a list of identically-structured pytrees along a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *trees)
+
+
+def tree_slice(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)

@@ -1,0 +1,76 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for the even half of the head dim. (head_dim//2,)"""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., D) with D even, cos/sin broadcastable to (..., D//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(
+    x: jax.Array,                  # (B, S, H, D)
+    positions: jax.Array,          # (B, S) or (S,) int32
+    theta: float = 10_000.0,
+) -> jax.Array:
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                             # (D/2,)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * freqs                             # (B,S,D/2) or (S,D/2)
+    if ang.ndim == 2:                                        # (S, D/2)
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+def apply_mrope(
+    x: jax.Array,                  # (B, S, H, D)
+    positions: jax.Array,          # (3, B, S) — (temporal, height, width)
+    theta: float = 10_000.0,
+    sections: Optional[Sequence[int]] = None,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the D/2 frequency channels are split into
+    (t, h, w) sections, each rotated by its own position stream. For pure
+    text all three streams are equal and M-RoPE == RoPE."""
+    D = x.shape[-1]
+    half = D // 2
+    if sections is None:
+        # qwen2-vl default proportions 16/24/24 for head_dim 128, scaled
+        t = half // 4
+        hw = (half - t) // 2
+        sections = (t, hw, half - t - hw)
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(D, theta)                             # (half,)
+    pos = positions.astype(jnp.float32)                      # (3,B,S)
+    ang = pos[..., None] * freqs                             # (3,B,S,half)
+    # select section i from stream i
+    parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[i, :, :, off:off + sec])
+        off += sec
+    ang = jnp.concatenate(parts, -1)                         # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+def positions_for(
+    batch: int, seq: int, offset=0,
+) -> jax.Array:
+    """(B, S) absolute positions starting at ``offset`` (scalar or (B,))."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :]
+    off = jnp.asarray(offset, jnp.int32)
+    off = off.reshape(-1, 1) if off.ndim else off[None, None]
+    return jnp.broadcast_to(pos + off, (batch, seq))

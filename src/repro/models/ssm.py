@@ -1,0 +1,277 @@
+"""SSM mixers: RWKV-6 ("Finch") time-mix/channel-mix and Mamba-1 (Jamba).
+
+Both are attention-free recurrent mixers with O(1) decode state, which is why
+rwkv6-3b and jamba run the ``long_500k`` cell. Heavy lifting (the actual
+recurrences) is in ``repro.kernels.ops`` (Pallas on TPU, chunked XLA
+elsewhere); this module holds the projections, token-shift plumbing, and
+decode-state management.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.launch.sharding import logical
+from repro.models.params import KeyGen, dense_init, trunc_normal, zeros, ones
+
+Cache = Optional[Dict[str, Any]]
+
+RWKV_LORA_RANK = 32          # ddlerp lora rank (paper uses 32 for small models)
+RWKV_DECAY_RANK = 64
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 time mix
+# ---------------------------------------------------------------------------
+
+
+def rwkv_tmix_init(kg: KeyGen, cfg: ModelConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    H = cfg.num_heads
+    K = cfg.ssm.head_dim
+    assert H * K == D, (H, K, D)
+    dt = jnp.dtype(cfg.param_dtype)
+    r = RWKV_LORA_RANK
+    p = {
+        # ddlerp: 5 interpolation targets (r, k, v, w, g) + base mu
+        "mu_x": trunc_normal(kg(), (D,), std=0.02, dtype=dt),
+        "mu_rkvwg": trunc_normal(kg(), (5, D), std=0.02, dtype=dt),
+        "lora_a": dense_init(kg(), D, 5 * r, dtype=dt),
+        "lora_b": trunc_normal(kg(), (5, r, D), std=0.01, dtype=dt),
+        "wr": dense_init(kg(), D, D, dtype=dt),
+        "wk": dense_init(kg(), D, D, dtype=dt),
+        "wv": dense_init(kg(), D, D, dtype=dt),
+        "wg": dense_init(kg(), D, D, dtype=dt),
+        "wo": dense_init(kg(), D, D,
+                         std=1.0 / math.sqrt(2 * cfg.num_layers * D),
+                         dtype=dt),
+        # decay: w = exp(-exp(w0 + tanh(x @ da) @ db))
+        "w0": jnp.full((D,), -2.0, dt),
+        "decay_a": dense_init(kg(), D, RWKV_DECAY_RANK, dtype=dt),
+        "decay_b": trunc_normal(kg(), (RWKV_DECAY_RANK, D), std=0.01,
+                                dtype=dt),
+        "u": trunc_normal(kg(), (H, K), std=0.02, dtype=jnp.float32),
+        # per-head group norm on the wkv output
+        "gn_scale": ones((D,), dt),
+        "gn_bias": zeros((D,), dt),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1}; position 0 uses ``last`` (decode cache) or zeros."""
+    if x.shape[1] == 1:
+        return (jnp.zeros_like(x) if last is None
+                else last[:, None].astype(x.dtype))
+    prev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    if last is not None:
+        prev = prev.at[:, 0].set(last.astype(x.dtype))
+    return prev
+
+
+def _group_norm(y: jax.Array, scale, bias, H: int, eps: float) -> jax.Array:
+    """LayerNorm per head over the K dim. y: (B,S,D) with D = H*K."""
+    B, S, D = y.shape
+    yf = y.astype(jnp.float32).reshape(B, S, H, D // H)
+    mean = jnp.mean(yf, -1, keepdims=True)
+    var = jnp.var(yf, -1, keepdims=True)
+    yf = (yf - mean) * jax.lax.rsqrt(var + eps)
+    yf = yf.reshape(B, S, D)
+    return (yf * scale.astype(jnp.float32) +
+            bias.astype(jnp.float32)).astype(y.dtype)
+
+
+def rwkv_tmix_apply(
+    p: Dict[str, Any],
+    x: jax.Array,                  # (B, S, D)
+    *,
+    cfg: ModelConfig,
+    mode: str = "train",
+    cache: Cache = None,           # {"last_x": (B,D), "state": (B,H,K,V)}
+) -> Tuple[jax.Array, Cache]:
+    B, S, D = x.shape
+    H = cfg.num_heads
+    K = cfg.ssm.head_dim
+    last_x = cache.get("last_x") if cache else None
+    prev = _token_shift(x, last_x)
+    delta = prev - x
+
+    # data-dependent interpolation (ddlerp)
+    xx = x + delta * p["mu_x"]
+    lora = jnp.tanh(xx @ p["lora_a"]).reshape(B, S, 5, RWKV_LORA_RANK)
+    offs = jnp.einsum("bsnr,nrd->nbsd", lora, p["lora_b"])   # (5,B,S,D)
+    mixed = x[None] + delta[None] * (p["mu_rkvwg"][:, None, None] + offs)
+    xr, xk, xv, xw, xg = mixed[0], mixed[1], mixed[2], mixed[3], mixed[4]
+
+    r = (xr @ p["wr"]).reshape(B, S, H, K)
+    k = (xk @ p["wk"]).reshape(B, S, H, K)
+    v = (xv @ p["wv"]).reshape(B, S, H, K)
+    g = xg @ p["wg"]
+    w_raw = p["w0"] + jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32))).reshape(B, S, H, K)
+    r = logical(r, "batch", None, "heads", None)
+    k = logical(k, "batch", None, "heads", None)
+    v = logical(v, "batch", None, "heads", None)
+
+    s0 = cache.get("state") if cache else None
+    if mode == "decode":
+        y, s_out = ops.wkv6_decode(r, k, v.astype(r.dtype), w.astype(r.dtype),
+                                   p["u"], s0)
+    else:
+        y, s_out = ops.wkv6(r, k, v, w.astype(r.dtype), p["u"], s0)
+    y = y.reshape(B, S, D)
+    y = _group_norm(y, p["gn_scale"], p["gn_bias"], H, cfg.norm_eps * 64)
+    out = (y * jax.nn.silu(g)) @ p["wo"]
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"last_x": x[:, -1], "state": s_out}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 channel mix
+# ---------------------------------------------------------------------------
+
+
+def rwkv_cmix_init(kg: KeyGen, cfg: ModelConfig) -> Dict[str, Any]:
+    D, F = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "mu_k": trunc_normal(kg(), (D,), std=0.02, dtype=dt),
+        "mu_r": trunc_normal(kg(), (D,), std=0.02, dtype=dt),
+        "wk": dense_init(kg(), D, F, dtype=dt),
+        "wv": dense_init(kg(), F, D,
+                         std=1.0 / math.sqrt(2 * cfg.num_layers * F),
+                         dtype=dt),
+        "wr": dense_init(kg(), D, D, dtype=dt),
+    }
+
+
+def rwkv_cmix_apply(
+    p: Dict[str, Any],
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    mode: str = "train",
+    cache: Cache = None,           # {"last_x": (B, D)}
+) -> Tuple[jax.Array, Cache]:
+    last_x = cache.get("last_x") if cache else None
+    prev = _token_shift(x, last_x)
+    delta = prev - x
+    xk = x + delta * p["mu_k"]
+    xr = x + delta * p["mu_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    h = logical(h, "batch", None, "ff")
+    kv = h @ p["wv"]
+    out = jax.nn.sigmoid(xr @ p["wr"]) * kv
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"last_x": x[:, -1]}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (Jamba flavour: RMSNorm on dt/B/C)
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(kg: KeyGen, cfg: ModelConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    s = cfg.ssm
+    Din = s.expand * D
+    N = s.d_state
+    dt_rank = s.dt_rank or max(1, D // 16)
+    dtype = jnp.dtype(cfg.param_dtype)
+    # S4D-real init for A; dt bias init so softplus(dt_bias) in [1e-3, 1e-1]
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (Din, N))
+    u = jax.random.uniform(kg(), (Din,), minval=math.log(1e-3),
+                           maxval=math.log(1e-1))
+    dt_init = jnp.exp(u)
+    dt_bias = dt_init + jnp.log1p(-jnp.exp(-dt_init))        # inv softplus
+    return {
+        "in_proj": dense_init(kg(), D, 2 * Din, dtype=dtype),
+        "conv_w": trunc_normal(kg(), (s.d_conv, Din),
+                               std=1.0 / math.sqrt(s.d_conv), dtype=dtype),
+        "conv_b": zeros((Din,), dtype),
+        "x_proj": dense_init(kg(), Din, dt_rank + 2 * N, dtype=dtype),
+        "dt_proj": dense_init(kg(), dt_rank, Din,
+                              std=dt_rank ** -0.5, dtype=dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": ones((Din,), jnp.float32),
+        "out_proj": dense_init(kg(), Din, D,
+                               std=1.0 / math.sqrt(2 * cfg.num_layers * Din),
+                               dtype=dtype),
+        "norm_dt": ones((dt_rank,), dtype),
+        "norm_B": ones((N,), dtype),
+        "norm_C": ones((N,), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array]) -> jax.Array:
+    """Depthwise causal conv1d. x: (B,S,Din), w: (k,Din), prev: (B,k-1,Din)."""
+    kk = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)  # (B,S+k-1,Din)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(kk))
+    return out + b
+
+
+def mamba_apply(
+    p: Dict[str, Any],
+    x: jax.Array,                  # (B, S, D)
+    *,
+    cfg: ModelConfig,
+    mode: str = "train",
+    cache: Cache = None,           # {"conv": (B,k-1,Din), "h": (B,Din,N)}
+) -> Tuple[jax.Array, Cache]:
+    from repro.kernels import ref as _ref  # rmsnorm oracle (cheap, fused)
+    B, S, D = x.shape
+    s = cfg.ssm
+    Din = s.expand * D
+    N = s.d_state
+    dt_rank = s.dt_rank or max(1, D // 16)
+
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = logical(xin, "batch", None, "ff")
+    prev_conv = cache.get("conv") if cache else None
+    xc = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"], prev_conv))
+
+    proj = xc @ p["x_proj"]                                   # (B,S,r+2N)
+    dt_low = _ref.rmsnorm(proj[..., :dt_rank], p["norm_dt"], cfg.norm_eps)
+    Bm = _ref.rmsnorm(proj[..., dt_rank:dt_rank + N], p["norm_B"],
+                      cfg.norm_eps)
+    C = _ref.rmsnorm(proj[..., dt_rank + N:], p["norm_C"], cfg.norm_eps)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] +
+                         p["dt_bias"].astype(x.dtype))
+    A = -jnp.exp(p["A_log"])
+
+    h0 = cache.get("h") if cache else None
+    if mode == "decode":
+        y, h_out = ops.mamba_decode(xc, dt, A, Bm, C, p["D"], h0)
+    else:
+        y, h_out = ops.mamba_scan(xc, dt, A, Bm, C, p["D"], h0)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        kk = p["conv_w"].shape[0]
+        if mode == "decode":
+            conv_new = jnp.concatenate(
+                [prev_conv[:, 1:].astype(xin.dtype), xin], axis=1) \
+                if prev_conv is not None else \
+                jnp.zeros((B, kk - 1, Din), xin.dtype)
+        else:
+            pad = jnp.zeros((B, kk - 1, Din), xin.dtype)
+            conv_new = jnp.concatenate([pad, xin], axis=1)[:, -(kk - 1):]
+        new_cache = {"conv": conv_new, "h": h_out}
+    return out, new_cache

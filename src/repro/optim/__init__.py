@@ -1,0 +1,9 @@
+"""Optimizer substrate: raw-JAX AdamW (cosine + warmup, global-norm clip,
+ZeRO-1 state sharding) and int8 error-feedback gradient compression for the
+slow (cross-pod DCN) tier."""
+from repro.optim.adamw import (OptState, adamw_update, clip_by_global_norm,  # noqa: F401
+                               cosine_lr, global_norm, init_opt_state,
+                               opt_state_spec)
+from repro.optim.compress import (compressed_pseudo_grad,  # noqa: F401
+                                  hierarchical_grad_reduce,
+                                  quantize_roundtrip)

@@ -1,0 +1,160 @@
+"""AdamW + cosine schedule + global-norm clipping, raw JAX (no optax).
+
+ZeRO-1 style sharding: optimizer moments get the *parameter's* sharding
+plus, when ``zero1`` is on, an extra shard of the leading dimension over the
+pure-DP ("ddp") axes where divisible. Under GSPMD this lowers to
+reduce-scatter(grad) -> sharded moment update -> all-gather(param delta),
+which is exactly the ZeRO-1 communication schedule — no hand-written
+collectives needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.launch import sharding as shd
+
+Params = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array                   # i32 scalar
+    mu: Params                        # first moment
+    nu: Params                        # second moment
+
+
+def cosine_lr(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to ``min_lr_frac * lr``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(1.0, cfg.warmup_steps)
+    total = jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps)
+    frac = jnp.clip((step - cfg.warmup_steps) / total, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * \
+        (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(cfg: OptimizerConfig, params: Params) -> OptState:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+_NO_DECAY_SUFFIXES = ("scale", "bias", "b_up", "b_down", "bq", "bk", "bv",
+                      "dt_bias", "u", "w0", "mu_x", "mu_k", "mu_r",
+                      "gn_scale", "gn_bias", "router_bias")
+
+
+def _decay_mask(params: Params) -> Params:
+    """1.0 for matrices (decayed), 0.0 for norms/biases/gains."""
+    def fn(path, leaf):
+        name = path.split("/")[-1]
+        if name in _NO_DECAY_SUFFIXES or leaf.ndim <= 1:
+            return 0.0
+        return 1.0
+    from repro.models.transformer import _map_with_paths
+    return _map_with_paths(params, fn)
+
+
+def adamw_update(
+    cfg: OptimizerConfig,
+    params: Params,
+    grads: Params,
+    state: OptState,
+) -> Tuple[Params, OptState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    decay = _decay_mask(params)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v, wd):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32)
+        v32 = v.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * g32
+        v_new = b2 * v32 + (1 - b2) * jnp.square(g32)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * wd * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(sdt), v_new.astype(sdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_w = jax.tree.leaves(_tree_like(decay, params))
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, wd in zip(flat_p, flat_g, flat_m, flat_v, flat_w):
+        pn, mn, vn = upd(p, g, m, v, wd)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    params_new = jax.tree.unflatten(treedef, new_p)
+    mu_new = jax.tree.unflatten(treedef, new_m)
+    nu_new = jax.tree.unflatten(treedef, new_v)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return params_new, OptState(step, mu_new, nu_new), metrics
+
+
+def _tree_like(scalar_tree, ref_tree):
+    # decay mask is built with the same structure; passthrough
+    return scalar_tree
+
+
+def opt_state_spec(cfg: OptimizerConfig, params: Params, pspec) -> OptState:
+    """PartitionSpec tree for the optimizer state.
+
+    With ``zero1``, moments additionally shard their largest replicated dim
+    over the "ddp" (pure data-parallel) axes when divisible — the classic
+    ZeRO-1 memory split; otherwise they just mirror the parameter specs.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def zspec(leaf, spec):
+        if not cfg.zero1:
+            return spec
+        mesh = shd.active_mesh()
+        if mesh is None:
+            return spec
+        ddp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        if not ddp_axes:
+            return spec
+        ddp = 1
+        for a in ddp_axes:
+            ddp *= mesh.shape[a]
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        # shard the first dim that is unsharded and divisible by ddp
+        for i, e in enumerate(entries):
+            if e is None and leaf.shape[i] % ddp == 0 and leaf.shape[i] > 1:
+                entries[i] = ddp_axes if len(ddp_axes) > 1 else ddp_axes[0]
+                return P(*entries)
+        return spec
+
+    mspec = jax.tree.map(zspec, params, pspec)
+    return OptState(step=jax.sharding.PartitionSpec(), mu=mspec,
+                    nu=jax.tree.map(lambda s: s, mspec))

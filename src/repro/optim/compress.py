@@ -1,0 +1,116 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Int8 quantization targets the *slow tier*: on a multi-pod mesh, gradients are
+reduced in full precision over the fast intra-pod axes (ICI), then exchanged
+across pods (DCN — the oversubscribed tier from the paper's fabric study) as
+int8 with per-block scales, via a ring of ``ppermute`` steps that keeps the
+wire format int8 end-to-end. Quantization error is fed back into the next
+step's gradient (error-feedback / EF-SGD), which keeps convergence unbiased
+in practice.
+
+On a single-axis (single-pod) mesh the compressor is the identity — the fast
+tier never pays quantization cost.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any
+
+BLOCK = 256                           # quantization block (per-block scales)
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8. x: (n,) f32 -> (q (n,) i8, scale (n/B,) f32)."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK
+    xp = jnp.pad(x, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(xp), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(xp / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale[:, 0]
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, n: int) -> jax.Array:
+    x = q.astype(jnp.float32) * scale[:, None]
+    return x.reshape(-1)[:n]
+
+
+def quantize_roundtrip(x: jax.Array) -> jax.Array:
+    """Reference: quantize + dequantize (for error-feedback residuals)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    q, s = _quantize(flat)
+    return _dequantize(q, s, flat.shape[0]).reshape(x.shape)
+
+
+def _int8_ring_all_reduce(x: jax.Array, axis_name: str, axis_size: int
+                          ) -> jax.Array:
+    """All-reduce(mean) over ``axis_name`` with an int8 wire format.
+
+    Ring of ``axis_size - 1`` ppermute steps; each step sends the local
+    partial as (int8, f32 block scales) and accumulates in f32. Wire bytes
+    ~= bytes(int8) + bytes(scales) ~ 0.26x of f32 per step.
+    """
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+
+    def body(i, carry):
+        acc, send = carry
+        q, s = _quantize(send)
+        q = jax.lax.ppermute(q, axis_name, perm)
+        s = jax.lax.ppermute(s, axis_name, perm)
+        recv = _dequantize(q, s, n)
+        return acc + recv, recv
+
+    acc, _ = jax.lax.fori_loop(0, axis_size - 1, body, (flat, flat))
+    return (acc / axis_size).reshape(x.shape).astype(x.dtype)
+
+
+def hierarchical_grad_reduce(
+    grads: Params,
+    *,
+    mesh: jax.sharding.Mesh,
+    fast_axes: Tuple[str, ...] = ("data",),
+    slow_axis: Optional[str] = "pod",
+    compress: str = "int8",
+) -> Params:
+    """Reduce gradients: full precision over ``fast_axes`` (psum/mean),
+    int8-EF ring over ``slow_axis``. Call *inside* shard_map."""
+    fast = tuple(a for a in fast_axes if a in mesh.shape)
+
+    def one(g):
+        if fast:
+            g = jax.lax.pmean(g, fast)
+        if slow_axis and slow_axis in mesh.shape and \
+                mesh.shape[slow_axis] > 1:
+            if compress == "int8":
+                g = _int8_ring_all_reduce(g, slow_axis,
+                                          mesh.shape[slow_axis])
+            else:
+                g = jax.lax.pmean(g, slow_axis)
+        return g
+
+    return jax.tree.map(one, grads)
+
+
+def compressed_pseudo_grad(grads: Params, residual: Optional[Params]
+                           ) -> Tuple[Params, Params]:
+    """Error feedback: g_eff = Q(g + r); r' = (g + r) - g_eff.
+
+    Used when the transport quantizes: the optimizer sees the quantized
+    gradient, and the information lost re-enters next step.
+    """
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                grads)
+    acc = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                       grads, residual)
+    q = jax.tree.map(quantize_roundtrip, acc)
+    new_residual = jax.tree.map(lambda a, qq: a - qq, acc, q)
+    q = jax.tree.map(lambda qq, g: qq.astype(g.dtype), q, grads)
+    return q, new_residual

@@ -1,0 +1,220 @@
+"""Unit tests for the paper's coordination layer (core/)."""
+import math
+
+import pytest
+
+from repro.configs.base import PacingConfig
+from repro.core import (CollectiveTrace, CoordinationAgent, PacingController,
+                        diagnose, expected_max_factor, summarize)
+from repro.core.instrumentation import IterationRecord, PhaseRecorder
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += dt
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def mk_cfg(**kw):
+    base = dict(enabled=True, window=8, cv_threshold=0.05,
+                skew_threshold=0.05, max_delay_frac=0.5, gain=0.8,
+                decay=0.8, warmup_iters=4)
+    base.update(kw)
+    return PacingConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# PacingController
+# ---------------------------------------------------------------------------
+
+
+def test_pacing_disabled_never_delays():
+    c = PacingController(mk_cfg(enabled=False))
+    for _ in range(20):
+        c.observe(0.5, 1.0)
+        assert c.decide().delay == 0.0
+
+
+def test_pacing_inactive_during_warmup():
+    c = PacingController(mk_cfg(warmup_iters=10))
+    for _ in range(9):
+        c.observe(0.5, 1.0)
+        assert c.decide().delay == 0.0
+
+
+def test_pacing_activates_on_persistent_skew():
+    c = PacingController(mk_cfg())
+    for _ in range(10):
+        c.observe(0.3, 1.0)           # persistently 30% early
+    d = c.decide()
+    assert d.active and d.delay > 0.0
+    # paces by gain * min(window earliness)
+    assert d.delay == pytest.approx(0.8 * 0.3, rel=0.2)
+
+
+def test_pacing_no_activation_below_threshold():
+    c = PacingController(mk_cfg())
+    for _ in range(20):
+        c.observe(0.01, 1.0)          # 1% wait: below skew_threshold
+    assert c.decide().delay == 0.0
+
+
+def test_pacing_bounded_by_step_fraction():
+    c = PacingController(mk_cfg(max_delay_frac=0.25, gain=1.0))
+    for _ in range(10):
+        c.observe(0.9, 1.0)           # enormous wait
+        d = c.decide()
+    assert d.delay <= 0.25 * 1.0 + 1e-9
+
+
+def test_pacing_self_limits_when_imbalance_subsides():
+    c = PacingController(mk_cfg())
+    for _ in range(10):
+        c.observe(0.3, 1.0)
+        c.decide()
+    assert c.current_delay > 0.0
+    # imbalance disappears: the delay disengages geometrically (rate ~gain)
+    deltas = []
+    for _ in range(25):
+        c.observe(0.0, 1.0)
+        d = c.decide()
+        deltas.append(d.delay)
+    assert d.delay < 0.01
+    assert all(b <= a + 1e-12 for a, b in zip(deltas, deltas[1:]))
+
+
+def test_pacing_never_chases_transient_jitter():
+    """A single spike of wait must not trigger pacing (min-window)."""
+    c = PacingController(mk_cfg())
+    for i in range(20):
+        c.observe(0.5 if i == 12 else 0.0, 1.0)
+        d = c.decide()
+        assert d.delay == 0.0
+
+
+def test_pacing_delay_nonnegative_property():
+    import random
+    rng = random.Random(0)
+    c = PacingController(mk_cfg())
+    for _ in range(200):
+        c.observe(rng.uniform(0, 2), rng.uniform(0.5, 2))
+        d = c.decide()
+        assert d.delay >= 0.0
+        assert d.delay <= 0.5 * 2 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# instrumentation
+# ---------------------------------------------------------------------------
+
+
+def test_phase_recorder_accumulates_and_resets():
+    clk = FakeClock()
+    rec = PhaseRecorder(clock=clk)
+    with rec.phase("compute"):
+        clk.advance(0.2)
+    with rec.phase("comm"):
+        clk.advance(0.1)
+    r = rec.finish(step=0)
+    assert r.compute_time == pytest.approx(0.2)
+    assert r.comm_time == pytest.approx(0.1)
+    assert r.total_time == pytest.approx(0.3)
+    r2 = rec.finish(step=1)
+    assert r2.compute_time == 0.0
+
+
+def test_collective_trace_wait_inference():
+    clk = FakeClock()
+    tr = CollectiveTrace(clock=clk)
+    # first collective: pure transfer 0.1 (the floor)
+    tr.enter(); clk.advance(0.1); tr.exit()
+    # second: 0.4 inside => 0.3 inferred wait
+    tr.enter(); clk.advance(0.4); tr.exit()
+    assert tr.transfer_floor() == pytest.approx(0.1)
+    assert tr.wait_estimate() == pytest.approx(0.3)
+
+
+def test_agent_paces_with_injected_clock_and_sleep():
+    clk = FakeClock()
+    agent = CoordinationAgent(mk_cfg(warmup_iters=2), clock=clk,
+                              sleep=clk.sleep, comm_floor=0.0)
+    slept_before = clk.t
+    for step in range(12):
+        def work():
+            clk.advance(0.1 if step % 1 == 0 else 0.1)
+            return None
+        agent.timed_step(work)
+        agent.recorder.add("wait", 0.3)      # pretend barrier wait
+        agent.end_iteration(step, step_time=0.4)
+    assert agent.controller.activations > 0
+    assert clk.t > slept_before
+    s = agent.summary()
+    assert s["pacing_activations"] > 0
+
+
+# ---------------------------------------------------------------------------
+# diagnostics / taxonomy
+# ---------------------------------------------------------------------------
+
+
+def _mk_records(n_ranks, n_iters, compute_fn, wait_fn, comm=0.05):
+    per_rank = []
+    for r in range(n_ranks):
+        recs = []
+        for t in range(n_iters):
+            c = compute_fn(r, t)
+            w = wait_fn(r, t)
+            recs.append(IterationRecord(step=t, compute_time=c,
+                                        comm_time=comm, wait_time=w,
+                                        total_time=c + comm + w))
+        per_rank.append(recs)
+    return per_rank
+
+
+def test_diagnose_flags_locality_variance():
+    # rank 3 persistently slow: same ranks slow every iteration
+    recs = _mk_records(4, 50,
+                       compute_fn=lambda r, t: 0.2 + (0.15 if r == 3 else 0),
+                       wait_fn=lambda r, t: 0.15 if r != 3 else 0.0)
+    rep = diagnose(recs, transfer_floor=0.05)
+    assert rep.dominant in ("locality_variance", "sync_amplification")
+    scores = {s.mode: s.score for s in rep.scores}
+    assert scores["locality_variance"] > 0.2
+
+
+def test_diagnose_flags_contention():
+    import math
+    # comm time far above floor, correlated across ranks per iteration
+    recs = []
+    for r in range(4):
+        rr = []
+        for t in range(50):
+            comm = 0.3 + 0.2 * math.sin(t / 3.0)
+            rr.append(IterationRecord(step=t, compute_time=0.1,
+                                      comm_time=comm, wait_time=0.0,
+                                      total_time=0.1 + comm))
+        recs.append(rr)
+    rep = diagnose(recs, transfer_floor=0.05)
+    assert rep.dominant == "fabric_contention"
+
+
+def test_expected_max_factor_monotone():
+    vals = [expected_max_factor(n) for n in (2, 4, 16, 64, 256)]
+    assert all(b > a for a, b in zip(vals, vals[1:]))
+    assert expected_max_factor(64) == pytest.approx(math.sqrt(2 * math.log(64)))
+
+
+def test_summarize_cv():
+    recs = [IterationRecord(step=i, compute_time=0.1, total_time=0.2)
+            for i in range(10)]
+    s = summarize(recs)
+    assert s["cv_step"] == pytest.approx(0.0)
+    assert s["mean_step"] == pytest.approx(0.2)

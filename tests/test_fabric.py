@@ -1,0 +1,188 @@
+"""Fabric substrate tests: topology, collective cost models, congestion,
+simulator, and the paper-reproduction properties."""
+import math
+
+import pytest
+
+from repro.core import diagnose
+from repro.fabric import (CongestionConfig, CongestionModel, SimConfig,
+                          StragglerConfig, all_reduce, fat_tree,
+                          hierarchical_all_reduce, ring_all_reduce, simulate,
+                          tpu_pod, tree_all_reduce)
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+
+def test_fat_tree_hop_links():
+    topo = fat_tree(16, nodes_per_leaf=8)
+    assert topo.hop_links(0, 1) == ["leaf0"]
+    assert topo.hop_links(7, 8) == ["up0", "spine", "up1"]
+    assert topo.n_ranks == 16
+
+
+def test_tpu_pod_hop_links():
+    topo = tpu_pod(2, ranks_per_pod=4)
+    assert topo.hop_links(0, 1) == ["ici0"]
+    assert topo.hop_links(3, 4) == ["dcn0", "dcn_core", "dcn1"]
+
+
+# ---------------------------------------------------------------------------
+# collective cost models
+# ---------------------------------------------------------------------------
+
+
+def test_ring_all_reduce_scales_with_bytes():
+    topo = fat_tree(8)
+    c1 = ring_all_reduce(topo, range(8), 1e9)
+    c2 = ring_all_reduce(topo, range(8), 2e9)
+    assert c2.total_s == pytest.approx(2 * c1.total_s, rel=0.01)
+    assert c1.steps == 2 * 7
+
+
+def test_ring_all_reduce_approaches_bandwidth_bound():
+    """Within one non-blocking leaf, ring time -> 2*bytes/port_bw."""
+    nbytes = 1e9
+    topo = fat_tree(8, leaf_bw=50.0)
+    c = ring_all_reduce(topo, range(8), nbytes)
+    bound = 2 * (8 - 1) / 8 * nbytes / 50e9
+    assert c.total_s == pytest.approx(bound, rel=0.01)
+
+
+def test_tree_beats_ring_latency_for_tiny_payloads():
+    topo = fat_tree(64)
+    tiny = 1e3
+    ring = ring_all_reduce(topo, range(64), tiny)
+    tree = tree_all_reduce(topo, range(64), tiny)
+    assert tree.total_s < ring.total_s       # 2log2(64) << 2*63 latencies
+
+
+def test_hierarchical_reduces_shared_tier_bytes():
+    topo = fat_tree(32, nodes_per_leaf=8)
+    nbytes = 1e9
+    ring = ring_all_reduce(topo, range(32), nbytes)
+    hier = hierarchical_all_reduce(topo, range(32), nbytes, group=8)
+    ring_shared = sum(b for ln, b in ring.per_link_bytes.items()
+                      if topo.link(ln).shared)
+    hier_shared = sum(b for ln, b in hier.per_link_bytes.items()
+                      if topo.link(ln).shared)
+    assert hier_shared < ring_shared
+
+
+def test_congested_link_slows_collective():
+    topo = fat_tree(16, nodes_per_leaf=8)
+    free = all_reduce(topo, range(16), 1e9)
+    jam = all_reduce(topo, range(16), 1e9,
+                     link_eff={"up0": 0.05, "up1": 0.05, "spine": 0.05})
+    assert jam.total_s > free.total_s
+
+
+# ---------------------------------------------------------------------------
+# congestion dynamics
+# ---------------------------------------------------------------------------
+
+
+def test_congestion_ar1_stays_bounded():
+    topo = fat_tree(32)
+    cm = CongestionModel(CongestionConfig(u_sigma=0.5, u_max=0.9), topo)
+    for _ in range(500):
+        cm.advance()
+        for u in cm.u.values():
+            assert 0.0 <= u <= 0.9
+
+
+def test_congestion_kick_persists_and_decays():
+    topo = fat_tree(32)
+    cm = CongestionModel(CongestionConfig(u_mean=0.1, u_sigma=0.0,
+                                          u_rho=0.9, k_kick=0.2), topo)
+    base = dict(cm.u)
+    cm.kick(2.0)
+    kicked = dict(cm.u)
+    assert all(kicked[k] > base[k] for k in base)
+    for _ in range(100):
+        cm.advance()
+    assert all(abs(cm.u[k] - 0.1) < 0.05 for k in base)
+
+
+def test_burst_derates_only_shared_links():
+    topo = fat_tree(16)
+    cm = CongestionModel(CongestionConfig(), topo)
+    eff = cm.link_eff(skew_ratio=2.0, spanning_groups=2)
+    assert set(eff) == {n for n, l in topo.links.items() if l.shared}
+    assert all(v < 1.0 for v in eff.values())
+
+
+# ---------------------------------------------------------------------------
+# simulator: paper-reproduction properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def paper_runs():
+    out = {}
+    for n in (4, 16, 64):
+        out[n] = {
+            "base": simulate(SimConfig.paper(n, coordination=False)),
+            "coord": simulate(SimConfig.paper(n, coordination=True)),
+        }
+    return out
+
+
+def test_scaling_efficiency_decreases(paper_runs):
+    eff = {n: r["base"].throughput / n for n, r in paper_runs.items()}
+    assert eff[16] < eff[4]
+    assert eff[64] < eff[16]
+
+
+def test_instability_grows_with_scale(paper_runs):
+    assert paper_runs[64]["base"].cv > paper_runs[4]["base"].cv
+
+
+def test_coordination_cuts_cv_at_scale(paper_runs):
+    base = paper_runs[64]["base"].cv
+    coord = paper_runs[64]["coord"].cv
+    assert coord < 0.75 * base
+
+
+def test_coordination_improves_throughput_at_scale_only(paper_runs):
+    d64 = paper_runs[64]["coord"].throughput / \
+        paper_runs[64]["base"].throughput - 1
+    d4 = paper_runs[4]["coord"].throughput / \
+        paper_runs[4]["base"].throughput - 1
+    assert d64 > 0.05                  # paper: +11% at 64 nodes
+    assert abs(d4) < 0.02              # paper: -0.6% at 4 nodes
+
+
+def test_throughput_matches_paper_table1(paper_runs):
+    targets = {4: 1024, 16: 3600, 64: 8200}
+    for n, tgt in targets.items():
+        thr = paper_runs[n]["base"].throughput
+        assert abs(thr / tgt - 1) < 0.10, (n, thr, tgt)
+
+
+def test_simulator_records_feed_diagnostics(paper_runs):
+    res = paper_runs[64]["base"]
+    rep = diagnose(res.per_rank_records())
+    assert rep.n_ranks == 64
+    assert rep.dominant in ("sync_amplification", "fabric_contention",
+                            "locality_variance")
+    # with congestion + stragglers at 64 nodes, waits must be significant
+    scores = {s.mode: s.score for s in rep.scores}
+    assert scores["sync_amplification"] > 0.02
+
+
+def test_simulator_deterministic_given_seed():
+    a = simulate(SimConfig.paper(8, coordination=False, seed=3))
+    b = simulate(SimConfig.paper(8, coordination=False, seed=3))
+    assert a.step_times == b.step_times
+
+
+def test_pacing_bounded_in_simulation():
+    res = simulate(SimConfig.paper(32, coordination=True))
+    for rank_recs in res.records:
+        meds = sorted(r.total_time for r in rank_recs)
+        med = meds[len(meds) // 2]
+        for rec in rank_recs:
+            assert rec.pacing_delay <= 0.6 * med * 1.5  # frac=0.6 + slack

@@ -1,0 +1,362 @@
+"""Per-kernel validation: Pallas (interpret mode) and chunked-XLA paths vs the
+pure-jnp oracles in ``repro.kernels.ref``, swept over shapes/dtypes, plus
+gradient checks for the custom-VJP dispatch in ``repro.kernels.ops``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref, xla_impl
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan as mamba_pallas
+from repro.kernels.rmsnorm import rmsnorm as rmsnorm_pallas
+from repro.kernels.wkv6 import wkv6 as wkv6_pallas
+from repro.kernels import ops
+
+jax.config.update("jax_enable_x64", False)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, Sq, Sk, H, KV, D, causal, window, q_offset)
+    (1, 8, 8, 2, 2, 16, True, 0, 0),
+    (2, 64, 64, 4, 2, 32, True, 0, 0),
+    (2, 64, 64, 4, 1, 32, False, 0, 0),
+    (1, 128, 128, 2, 2, 64, True, 32, 0),      # sliding window
+    (1, 16, 80, 2, 2, 32, True, 0, 64),        # chunked prefill (q offset)
+    (1, 40, 40, 3, 1, 24, True, 0, 0),         # non-pow2 everything
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_pallas_interpret(case, dtype):
+    B, Sq, Sk, H, KV, D, causal, window, q_off = case
+    kq, kk, kv = keys(3)
+    q = jax.random.normal(kq, (B, Sq, H, D), dtype)
+    k = jax.random.normal(kk, (B, Sk, KV, D), dtype)
+    v = jax.random.normal(kv, (B, Sk, KV, D), dtype)
+    want = ref.attention(q, k, v, causal=causal, window=window, q_offset=q_off)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=q_off, block_q=32, block_k=32,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_xla(case):
+    B, Sq, Sk, H, KV, D, causal, window, q_off = case
+    kq, kk, kv = keys(3, seed=1)
+    q = jax.random.normal(kq, (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, Sk, KV, D), jnp.float32)
+    v = jax.random.normal(kv, (B, Sk, KV, D), jnp.float32)
+    want = ref.attention(q, k, v, causal=causal, window=window, q_offset=q_off)
+    got = xla_impl.flash_attention_xla(q, k, v, causal=causal, window=window,
+                                       q_offset=q_off, block_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_xla_grads_match_ref():
+    B, S, H, KV, D = 2, 48, 4, 2, 16
+    kq, kk, kv = keys(3, seed=2)
+    q = jax.random.normal(kq, (B, S, H, D))
+    k = jax.random.normal(kk, (B, S, KV, D))
+    v = jax.random.normal(kv, (B, S, KV, D))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention(q, k, v, causal=True) ** 2)
+
+    def loss_xla(q, k, v):
+        return jnp.sum(xla_impl.flash_attention_xla(q, k, v, causal=True,
+                                                    block_k=16) ** 2)
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    g_xla = jax.grad(loss_xla, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_xla):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_xla_sliding_window_grads():
+    B, S, H, KV, D = 1, 64, 2, 2, 16
+    kq, kk, kv = keys(3, seed=3)
+    q = jax.random.normal(kq, (B, S, H, D))
+    k = jax.random.normal(kk, (B, S, KV, D))
+    v = jax.random.normal(kv, (B, S, KV, D))
+    gr = jax.grad(lambda q: jnp.sum(
+        ref.attention(q, k, v, causal=True, window=16)))(q)
+    gx = jax.grad(lambda q: jnp.sum(xla_impl.flash_attention_xla(
+        q, k, v, causal=True, window=16, block_k=16)))(q)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_matches_ref_with_cache():
+    B, S, H, KV, D = 2, 32, 4, 2, 16
+    kq, kk, kv = keys(3, seed=4)
+    q = jax.random.normal(kq, (B, 1, H, D))
+    kc = jax.random.normal(kk, (B, S, KV, D))
+    vc = jax.random.normal(kv, (B, S, KV, D))
+    kv_len = jnp.array([20, 32], jnp.int32)
+    # oracle: causal decode == full attention at q position kv_len-1
+    want = ref.attention(q, kc, vc, causal=True,
+                         q_offset=kv_len - 1, kv_len=kv_len)
+    got = xla_impl.decode_attention_xla(q, kc, vc, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 32), (2, 8, 64), (1, 5, 3, 128),
+                                   (7, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_pallas_interpret(shape, dtype):
+    kx, ks = keys(2, seed=5)
+    x = jax.random.normal(kx, shape, dtype)
+    s = jax.random.normal(ks, (shape[-1],), dtype)
+    want = ref.rmsnorm(x, s)
+    got = rmsnorm_pallas(x, s, block_rows=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+WKV_CASES = [
+    # (B, S, H, K, V, chunk)
+    (1, 8, 1, 8, 8, 4),
+    (2, 33, 2, 16, 16, 8),        # ragged S vs chunk
+    (1, 64, 3, 32, 16, 16),       # K != V
+    (2, 16, 2, 8, 8, 16),         # single chunk
+]
+
+
+def wkv_inputs(B, S, H, K, V, seed=6, dtype=jnp.float32):
+    kr, kk, kv, kw, ku, ks = keys(6, seed=seed)
+    r = jax.random.normal(kr, (B, S, H, K), dtype)
+    k = jax.random.normal(kk, (B, S, H, K), dtype)
+    v = jax.random.normal(kv, (B, S, H, V), dtype)
+    # decay in (0,1) with log w in [-2.7, -0.003): the range real RWKV-6
+    # parameterizations produce (w = exp(-exp(raw)), raw in [-6, 1])
+    raw = jax.random.uniform(kw, (B, S, H, K), minval=-6.0, maxval=1.0)
+    w = jnp.exp(-jnp.exp(raw)).astype(dtype)
+    u = jax.random.normal(ku, (H, K), dtype)
+    s0 = jax.random.normal(ks, (B, H, K, V), jnp.float32) * 0.1
+    return r, k, v, w, u, s0
+
+
+@pytest.mark.parametrize("case", WKV_CASES)
+def test_wkv6_chunked_xla(case):
+    B, S, H, K, V, chunk = case
+    r, k, v, w, u, s0 = wkv_inputs(B, S, H, K, V)
+    y_want, s_want = ref.wkv6(r, k, v, w, u, s0)
+    y_got, s_got = xla_impl.wkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("case", WKV_CASES[:2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_pallas_interpret(case, dtype):
+    B, S, H, K, V, chunk = case
+    r, k, v, w, u, s0 = wkv_inputs(B, S, H, K, V, dtype=dtype)
+    y_want, s_want = ref.wkv6(r, k, v, w, u, s0)
+    y_got, s_got = wkv6_pallas(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_got, np.float32),
+                               np.asarray(y_want, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 2e-4,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 2e-4)
+
+
+def test_wkv6_chunked_grads_match_ref():
+    B, S, H, K, V = 1, 24, 2, 8, 8
+    r, k, v, w, u, s0 = wkv_inputs(B, S, H, K, V, seed=7)
+
+    def loss(fn):
+        def f(r, k, v, w, u):
+            y, s = fn(r, k, v, w, u, s0)
+            return jnp.sum(y ** 2) + jnp.sum(s ** 2)
+        return f
+
+    g_ref = jax.grad(loss(ref.wkv6), argnums=(0, 1, 2, 3, 4))(r, k, v, w, u)
+    g_xla = jax.grad(loss(lambda *a: xla_impl.wkv6_chunked(*a, chunk=8)),
+                     argnums=(0, 1, 2, 3, 4))(r, k, v, w, u)
+    for a, b in zip(g_ref, g_xla):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_wkv6_decode_step_matches_scan():
+    B, S, H, K, V = 2, 5, 2, 8, 8
+    r, k, v, w, u, s0 = wkv_inputs(B, S, H, K, V, seed=8)
+    y_want, s_want = ref.wkv6(r, k, v, w, u, s0)
+    state = s0
+    ys = []
+    for t in range(S):
+        y, state = xla_impl.wkv6_decode(
+            r[:, t:t + 1], k[:, t:t + 1], v[:, t:t + 1], w[:, t:t + 1], u,
+            state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_want), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+MAMBA_CASES = [
+    # (B, S, D, N, chunk)
+    (1, 8, 16, 4, 4),
+    (2, 33, 32, 8, 8),
+    (1, 64, 48, 16, 16),
+]
+
+
+def mamba_inputs(B, S, D, N, seed=9, dtype=jnp.float32):
+    kx, kdt, ka, kb, kc, kd, kh = keys(7, seed=seed)
+    x = jax.random.normal(kx, (B, S, D), dtype)
+    dt = jax.nn.softplus(jax.random.normal(kdt, (B, S, D))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ka, (D, N)) * 0.5)
+    Bm = jax.random.normal(kb, (B, S, N), dtype)
+    C = jax.random.normal(kc, (B, S, N), dtype)
+    Dd = jax.random.normal(kd, (D,))
+    h0 = jax.random.normal(kh, (B, D, N), jnp.float32) * 0.1
+    return x, dt, A, Bm, C, Dd, h0
+
+
+@pytest.mark.parametrize("case", MAMBA_CASES)
+def test_mamba_chunked_xla(case):
+    B, S, D, N, chunk = case
+    x, dt, A, Bm, C, Dd, h0 = mamba_inputs(B, S, D, N)
+    y_want, h_want = ref.mamba_scan(x, dt, A, Bm, C, Dd, h0)
+    y_got, h_got = xla_impl.mamba_chunked(x, dt, A, Bm, C, Dd, h0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("case", MAMBA_CASES[:2])
+def test_mamba_pallas_interpret(case):
+    B, S, D, N, chunk = case
+    x, dt, A, Bm, C, Dd, h0 = mamba_inputs(B, S, D, N, seed=10)
+    y_want, h_want = ref.mamba_scan(x, dt, A, Bm, C, Dd, h0)
+    y_got, h_got = mamba_pallas(x, dt, A, Bm, C, Dd, h0, chunk=chunk,
+                                block_d=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_chunked_grads_match_ref():
+    B, S, D, N = 1, 16, 8, 4
+    x, dt, A, Bm, C, Dd, h0 = mamba_inputs(B, S, D, N, seed=11)
+
+    def loss(fn):
+        def f(x, dt, Bm, C):
+            y, h = fn(x, dt, A, Bm, C, Dd, h0)
+            return jnp.sum(y ** 2) + jnp.sum(h ** 2)
+        return f
+
+    g_ref = jax.grad(loss(ref.mamba_scan), argnums=(0, 1, 2, 3))(x, dt, Bm, C)
+    g_xla = jax.grad(loss(lambda *a: xla_impl.mamba_chunked(*a, chunk=8)),
+                     argnums=(0, 1, 2, 3))(x, dt, Bm, C)
+    for a, b in zip(g_ref, g_xla):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_mamba_decode_step_matches_scan():
+    B, S, D, N = 2, 5, 8, 4
+    x, dt, A, Bm, C, Dd, h0 = mamba_inputs(B, S, D, N, seed=12)
+    y_want, h_want = ref.mamba_scan(x, dt, A, Bm, C, Dd, h0)
+    h = h0
+    ys = []
+    for t in range(S):
+        y, h = xla_impl.mamba_decode(x[:, t:t + 1], dt[:, t:t + 1], A,
+                                     Bm[:, t:t + 1], C[:, t:t + 1], Dd, h)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_want), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch layer
+# ---------------------------------------------------------------------------
+
+
+def test_ops_backend_selection_and_grad():
+    ops.set_backend("xla")
+    try:
+        B, S, H, KV, D = 1, 16, 2, 1, 8
+        kq, kk, kv = keys(3, seed=13)
+        q = jax.random.normal(kq, (B, S, H, D))
+        k = jax.random.normal(kk, (B, S, KV, D))
+        v = jax.random.normal(kv, (B, S, KV, D))
+        out = ops.attention(q, k, v)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        g = jax.grad(lambda q: jnp.sum(ops.attention(q, k, v)))(q)
+        assert g.shape == q.shape and bool(jnp.all(jnp.isfinite(g)))
+    finally:
+        ops.set_backend("auto")
+
+
+def test_ops_interpret_backend_grads_flow_through_custom_vjp():
+    ops.set_backend("interpret")
+    try:
+        x = jax.random.normal(jax.random.PRNGKey(14), (4, 32))
+        s = jnp.ones((32,))
+        g = jax.grad(lambda x: jnp.sum(ops.rmsnorm(x, s) ** 2))(x)
+        g_ref = jax.grad(lambda x: jnp.sum(ref.rmsnorm(x, s) ** 2))(x)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                                   rtol=1e-4, atol=1e-4)
+    finally:
+        ops.set_backend("auto")
+
+
+def test_wkv6_chunked_extreme_decay_stays_finite():
+    """Decays below the LOGW_MIN clamp must not produce inf/nan (fwd or bwd)."""
+    B, S, H, K, V = 1, 32, 1, 8, 8
+    kr, kk, kv = keys(3, seed=20)
+    r = jax.random.normal(kr, (B, S, H, K))
+    k = jax.random.normal(kk, (B, S, H, K))
+    v = jax.random.normal(kv, (B, S, H, V))
+    w = jnp.full((B, S, H, K), 1e-9)          # log w ~ -20.7, well below clamp
+    u = jnp.ones((H, K))
+    y, s = xla_impl.wkv6_chunked(r, k, v, w, u, chunk=16)
+    assert bool(jnp.all(jnp.isfinite(y))) and bool(jnp.all(jnp.isfinite(s)))
+    g = jax.grad(lambda r: jnp.sum(
+        xla_impl.wkv6_chunked(r, k, v, w, u, chunk=16)[0] ** 2))(r)
+    assert bool(jnp.all(jnp.isfinite(g)))

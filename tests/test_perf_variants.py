@@ -1,0 +1,64 @@
+"""Tests for the §Perf hillclimb machinery: variant parsing, microbatch
+gradient accumulation, chunked cross-entropy, int8 compression plumbing."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import OptimizerConfig, get_model_config
+from repro.launch.dryrun_variants import apply_variant_pure
+from repro.launch.steps import make_train_step
+from repro.models.api import build_model
+from repro.optim import init_opt_state
+
+
+def test_variant_parsing():
+    cfg = get_model_config("qwen2-7b", smoke=True)
+    out, mb, int8, noz1, rules, env = apply_variant_pure(cfg, "opt+mb8+lc2048")
+    assert out.pad_heads_to == 16 and out.loss_chunk == 2048
+    assert mb == 8 and not int8 and not noz1
+    _, _, int8, _, rules, _ = apply_variant_pure(cfg, "int8pod+seqkv")
+    assert int8 and rules == {"seq": "model"}
+    _, _, _, noz1, _, env = apply_variant_pure(cfg, "noz1+nf32")
+    assert noz1 and env.get("REPRO_NORM_BF16") == "1"
+    with pytest.raises(ValueError):
+        apply_variant_pure(cfg, "bogus")
+
+
+def test_loss_chunk_matches_full():
+    cfg = get_model_config("mixtral-8x7b", smoke=True)
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 33), 0,
+                              cfg.vocab_size)
+    l_full, _ = m.loss(p, {"tokens": toks})
+    mc = build_model(cfg.replace(loss_chunk=8))
+    l_chunk, _ = mc.loss(p, {"tokens": toks})
+    assert abs(float(l_full) - float(l_chunk)) < 2e-3
+
+
+def test_microbatch_step_equivalence():
+    cfg = get_model_config("qwen2-7b", smoke=True)
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    opt = OptimizerConfig(warmup_steps=1, total_steps=4)
+    s0 = init_opt_state(opt, p)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 33), 0,
+                              cfg.vocab_size)
+    p1, _, m1 = jax.jit(make_train_step(m, opt))(p, s0, {"tokens": toks})
+    p4, _, m4 = jax.jit(make_train_step(m, opt, microbatches=4))(
+        p, s0, {"tokens": toks})
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-3
+    d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+    assert d < 0.05   # bf16 params; accumulation order differs
+
+
+def test_tp_row_matmul_identity_when_disabled(monkeypatch):
+    from repro.launch import sharding as shd
+    monkeypatch.delenv("REPRO_BF16_TP", raising=False)
+    h = jnp.ones((2, 3, 8))
+    w = jnp.ones((8, 4))
+    out = shd.tp_row_matmul(h, w)
+    assert out.shape == (2, 3, 4)
+    assert bool(jnp.allclose(out, h @ w))

@@ -1,0 +1,201 @@
+"""Optimizer / data / checkpoint / fault-tolerance substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.configs.base import OptimizerConfig
+from repro.data import Prefetcher, SyntheticLM
+from repro.ft import (FailureDetector, HeartbeatConfig, RestartPolicy,
+                      plan_elastic_mesh)
+from repro.optim import (adamw_update, clip_by_global_norm,
+                         compressed_pseudo_grad, cosine_lr, global_norm,
+                         init_opt_state, quantize_roundtrip)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_cosine_schedule_shape():
+    cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=110,
+                          min_lr_frac=0.1)
+    lrs = [float(cosine_lr(cfg, jnp.asarray(s))) for s in
+           (0, 5, 10, 60, 110)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3, rel=0.01)
+    assert lrs[2] > lrs[3] > lrs[4]
+    assert lrs[4] == pytest.approx(1e-4, rel=0.05)
+
+
+def test_grad_clip():
+    tree = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(10.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-3)
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                          weight_decay=0.0, grad_clip=100.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = init_opt_state(cfg, params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_adamw_weight_decay_mask():
+    cfg = OptimizerConfig(lr=0.01, warmup_steps=1, total_steps=10,
+                          weight_decay=10.0, grad_clip=1e9)
+    params = {"w": jnp.ones((2, 2)), "scale": jnp.ones((2,))}
+    state = init_opt_state(cfg, params)
+    grads = jax.tree.map(jnp.zeros_like, params)
+    p2, _, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(p2["w"] - 1.0))) > 1e-4   # decayed
+    assert float(jnp.max(jnp.abs(p2["scale"] - 1.0))) < 1e-6  # masked
+
+
+def test_int8_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3.0
+    q = quantize_roundtrip(x)
+    # blockwise symmetric int8: |err| <= blockmax/127/2 per element
+    err = jnp.abs(q - x)
+    assert float(jnp.max(err)) <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+def test_error_feedback_preserves_signal():
+    """Sum of EF-compressed grads converges to sum of true grads."""
+    key = jax.random.PRNGKey(1)
+    true = [jax.random.normal(jax.random.fold_in(key, i), (256,)) * 0.01
+            for i in range(50)]
+    residual = None
+    sent = []
+    for g in true:
+        q, residual = compressed_pseudo_grad({"g": g}, residual)
+        sent.append(q["g"])
+    total_true = sum(jnp.sum(g) for g in true)
+    total_sent = sum(jnp.sum(s) for s in sent)
+    # EF: cumulative transmitted signal tracks cumulative true signal
+    assert float(jnp.abs(total_sent - total_true)) < 0.05 * \
+        abs(float(total_true)) + 0.01
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_host_sharded():
+    mk = lambda h: SyntheticLM(vocab_size=4096, seq_len=32, global_batch=8,
+                               seed=11, num_hosts=2, host_index=h)
+    a0, a1 = mk(0).batch(3), mk(1).batch(3)
+    b0 = mk(0).batch(3)
+    assert np.array_equal(a0["tokens"], b0["tokens"])
+    assert not np.array_equal(a0["tokens"], a1["tokens"])
+    assert a0["tokens"].shape == (4, 33)
+    assert a0["tokens"].max() < 4096 and a0["tokens"].min() >= 0
+
+
+def test_data_prefetcher_ordered_and_stops():
+    src = SyntheticLM(vocab_size=128, seq_len=8, global_batch=2, seed=0)
+    pf = Prefetcher(src, start_step=2, max_steps=5)
+    for step in (2, 3, 4):
+        assert np.array_equal(pf.next()["tokens"], src.batch(step)["tokens"])
+    with pytest.raises(StopIteration):
+        pf.next()
+    pf.close()
+
+
+def test_data_nontrivial_distribution():
+    src = SyntheticLM(vocab_size=1000, seq_len=256, global_batch=4, seed=0)
+    toks = src.batch(0)["tokens"]
+    # zipfian: top tokens much more frequent than tail
+    counts = np.bincount(toks.ravel(), minlength=1000)
+    assert counts[:10].sum() > 5 * counts[500:510].sum()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"layer": {"w": jnp.arange(6.0).reshape(2, 3),
+                      "b": jnp.ones((3,), jnp.bfloat16)},
+            "stack": [jnp.zeros((2, 2)), jnp.full((1,), 7, jnp.int32)]}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = _tree()
+    mgr.save(10, tree, metadata={"next_step": 10}, block=True)
+    assert mgr.latest_step() == 10
+    restored, meta = mgr.restore(10, tree)
+    assert meta["next_step"] == 10
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a, np.float32),
+                              np.asarray(b, np.float32))
+
+
+def test_checkpoint_retention_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(5, _tree(), block=True)
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_failure_detector_virtual_clock():
+    t = {"now": 0.0}
+    det = FailureDetector([0, 1, 2], HeartbeatConfig(timeout_s=10),
+                          clock=lambda: t["now"])
+    t["now"] = 5.0
+    det.heartbeat(0)
+    det.heartbeat(1)
+    t["now"] = 12.0
+    assert det.suspected() == [2]
+    assert det.healthy() == [0, 1]
+
+
+def test_restart_policy_backoff_and_reset():
+    p = RestartPolicy(max_restarts=3, backoff_s=1.0, backoff_mult=2.0)
+    assert p.next_delay() == 1.0
+    assert p.next_delay() == 2.0
+    p.record_success()
+    assert p.next_delay() == 1.0
+    p.next_delay()
+    p.next_delay()
+    assert p.next_delay() is None     # exhausted
+
+
+def test_elastic_mesh_plan():
+    assert plan_elastic_mesh(512, model_parallel=16) == \
+        ((2, 16, 16), ("pod", "data", "model"))
+    assert plan_elastic_mesh(256, model_parallel=16) == \
+        ((16, 16), ("data", "model"))
+    # 255 survivors: drop to 240 usable = 15 DP groups
+    shape, axes = plan_elastic_mesh(255, model_parallel=16)
+    assert shape == (15, 16)
+    # catastrophic: fewer than one model group
+    shape, axes = plan_elastic_mesh(12, model_parallel=16)
+    assert shape == (1, 8)
