@@ -1,0 +1,21 @@
+# Local equivalents of the CI jobs (see .github/workflows/ci.yml).
+PY := python
+export PYTHONPATH := src
+
+.PHONY: test test-slow test-all bench-smoke bench
+
+test:            ## default tier-1 (slow marker excluded via pytest.ini)
+	$(PY) -m pytest -x -q
+
+test-slow:       ## full-fidelity runs only
+	$(PY) -m pytest -q -m slow
+
+test-all:        ## everything
+	$(PY) -m pytest -q -m ""
+
+bench-smoke:     ## the CI benchmark smoke sections
+	$(PY) -m benchmarks.run --only table1
+	$(PY) -m benchmarks.run --only multitenant
+
+bench:           ## all benchmark sections
+	$(PY) -m benchmarks.run

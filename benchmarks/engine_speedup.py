@@ -1,0 +1,47 @@
+"""Wall-clock of the compiled-schedule engine vs the seed per-call loop.
+
+The seed implementation (kept verbatim as the executable spec in
+:mod:`repro.fabric._reference`) re-derives the full collective cost
+structure and eagerly builds every per-rank record each iteration; the
+engine compiles the schedule once and materializes records lazily. The
+issue's acceptance bar is >= 5x at ``SimConfig.paper(64)``.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.fabric import SimConfig, simulate
+from repro.fabric._reference import simulate_reference
+
+REPEATS = 3
+
+
+def _best(fn, cfg) -> float:
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        fn(cfg)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def rows() -> List[str]:
+    lines = ["config,reference_ms,engine_ms,speedup_x"]
+    for n, coordination in ((16, False), (64, False), (64, True)):
+        cfg = SimConfig.paper(n, coordination=coordination)
+        t_ref = _best(simulate_reference, cfg)
+        t_new = _best(simulate, cfg)
+        label = f"paper({n}{',coord' if coordination else ''})"
+        lines.append(f"{label},{t_ref * 1e3:.1f},{t_new * 1e3:.1f},"
+                     f"{t_ref / t_new:.2f}")
+    return lines
+
+
+def main() -> None:
+    for ln in rows():
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper §3.2/§3.3 multi-tenant scenarios on the shared-fabric engine.
+
+Two tables:
+
+  * **contention** — a fixed primary job (12 nodes spanning leaves 0-1)
+    stepped against a co-tenant (leaves 1-2, shares up-link ``up1``) whose
+    gradient payload sweeps from absent to 8 GB: topology-induced
+    contention from traffic the primary job does not own.
+  * **placement** — the same 8-rank job under each placement policy, solo
+    and with a scattered 16-rank co-tenant: locality-driven variance (the
+    scheduler's node choice moves the job between the non-blocking leaf
+    tier and the oversubscribed spine tier).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.fabric import FabricEngine, JobSpec, fat_tree, place
+from repro.fabric.placement import POLICIES, spanning_groups
+
+ITERS, WARMUP = 220, 30
+
+
+def _fabric():
+    return fat_tree(64, nodes_per_leaf=8)
+
+
+def contention_rows() -> List[str]:
+    lines = ["cotenant_grad_gb,primary_step_ms,cotenant_step_ms,"
+             "primary_slowdown_pct"]
+    primary = JobSpec("primary", 12, nodes=tuple(range(12)))
+    solo = FabricEngine(_fabric(), [primary], base_seed=0) \
+        .run(ITERS, WARMUP).job("primary").mean_step
+    lines.append(f"0.0,{solo * 1e3:.2f},,+0.0")
+    for gb in (0.5, 1.0, 2.0, 4.0, 8.0):
+        cotenant = JobSpec("cotenant", 12, nodes=tuple(range(12, 24)),
+                           grad_bytes=gb * 1e9)
+        res = FabricEngine(_fabric(), [primary, cotenant], base_seed=0) \
+            .run(ITERS, WARMUP)
+        step = res.job("primary").mean_step
+        lines.append(
+            f"{gb},{step * 1e3:.2f},"
+            f"{res.job('cotenant').mean_step * 1e3:.2f},"
+            f"{100 * (step / solo - 1):+.1f}")
+    return lines
+
+
+def placement_rows() -> List[str]:
+    lines = ["policy,span_leaves,solo_step_ms,with_cotenant_step_ms,"
+             "cotenant_slowdown_pct"]
+    for policy in POLICIES:
+        topo = _fabric()
+        nodes = tuple(place(policy, topo, 8, seed=0))
+        job = JobSpec("job", 8, nodes=nodes)
+        cotenant = JobSpec("cotenant", 16, placement="scattered",
+                           grad_bytes=2e9)
+        solo = FabricEngine(_fabric(), [job], base_seed=0) \
+            .run(ITERS, WARMUP).job("job").mean_step
+        duo = FabricEngine(_fabric(), [job, cotenant], base_seed=0) \
+            .run(ITERS, WARMUP).job("job").mean_step
+        lines.append(
+            f"{policy},{spanning_groups(topo, nodes)},{solo * 1e3:.2f},"
+            f"{duo * 1e3:.2f},{100 * (duo / solo - 1):+.1f}")
+    return lines
+
+
+def rows() -> List[str]:
+    return (["-- contention vs co-tenant load (shared up-link up1) --"]
+            + contention_rows()
+            + ["", "-- placement sweep (solo and under scattered "
+               "co-tenant) --"]
+            + placement_rows())
+
+
+def main() -> None:
+    for ln in rows():
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,12 @@
 """Benchmark aggregator: one section per paper artifact.
 
-  table1    — paper Table 1 (baseline vs coordination, 5 node counts)
-  scaling   — paper Fig. 1/5 (observed vs ideal curves + CVs)
-  taxonomy  — paper Fig. 2 / §3.3 (failure-mode attribution)
-  kernels   — substrate kernel micro-benchmarks
-  roofline  — per-cell roofline terms from the dry-run artifacts
+  table1      — paper Table 1 (baseline vs coordination, 5 node counts)
+  scaling     — paper Fig. 1/5 (observed vs ideal curves + CVs)
+  taxonomy    — paper Fig. 2 / §3.3 (failure-mode attribution)
+  multitenant — §3.2/§3.3 co-tenant contention + placement sweeps (engine)
+  speedup     — compiled-schedule engine vs seed per-call loop wall-clock
+  kernels     — substrate kernel micro-benchmarks
+  roofline    — per-cell roofline terms from the dry-run artifacts
 
 Run everything: ``PYTHONPATH=src python -m benchmarks.run``
 One section:    ``PYTHONPATH=src python -m benchmarks.run --only table1``
@@ -19,8 +21,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
-                    choices=["table1", "scaling", "taxonomy", "kernels",
-                             "roofline"])
+                    choices=["table1", "scaling", "taxonomy", "multitenant",
+                             "speedup", "kernels", "roofline"])
     args = ap.parse_args()
 
     sections = []
@@ -37,6 +39,14 @@ def main() -> None:
         from benchmarks import bottleneck_taxonomy
         sections.append(("bottleneck_taxonomy (paper Fig. 2 / §3.3)",
                          bottleneck_taxonomy.rows))
+    if args.only in (None, "multitenant"):
+        from benchmarks import multitenant
+        sections.append(("multitenant (paper §3.2/§3.3, shared-fabric "
+                         "engine)", multitenant.rows))
+    if args.only in (None, "speedup"):
+        from benchmarks import engine_speedup
+        sections.append(("engine_speedup (compiled schedules vs seed loop)",
+                         engine_speedup.rows))
     if args.only in (None, "kernels"):
         from benchmarks import kernel_bench
         sections.append(("kernel_bench (substrate)", kernel_bench.rows))

@@ -1,0 +1,24 @@
+"""Repo-root pytest bootstrap.
+
+1. Put src/ on sys.path so `python -m pytest` works from a clean checkout
+   (equivalent to PYTHONPATH=src, the documented tier-1 invocation).
+2. Initialize the jax backend before any test module imports.
+   `repro.launch.dryrun` appends ``--xla_force_host_platform_device_count
+   =512`` to XLA_FLAGS at import time (the dry-run machinery wants a fake
+   512-device CPU backend when it owns the process, e.g. benchmarks
+   roofline). Inside the test suite that flag must stay inert: if a test
+   module imports dryrun before anything has touched the backend, every
+   later jitted computation (train-integration tests) gets sharded across
+   512 virtual CPU devices and crawls. Initializing here pins the
+   real-device backend regardless of test selection and ordering.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import jax  # noqa: E402
+
+jax.devices()

@@ -4,7 +4,8 @@ skew, and bounded adaptive pacing of early-arriving ranks — plus the
 failure-mode taxonomy diagnostics (paper §3.3-§5)."""
 from repro.core.coordination import CoordinationAgent           # noqa: F401
 from repro.core.diagnostics import (DiagnosticReport, ModeScore,  # noqa: F401
-                                    diagnose, expected_max_factor)
+                                    diagnose, diagnose_jobs,
+                                    expected_max_factor)
 from repro.core.instrumentation import (CollectiveTrace,        # noqa: F401
                                         IterationRecord, LocalityInfo,
                                         PhaseRecorder, sample_locality,

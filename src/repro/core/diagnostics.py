@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.instrumentation import IterationRecord
 
@@ -158,3 +158,21 @@ def diagnose(per_rank: Sequence[Sequence[IterationRecord]],
     return DiagnosticReport(
         n_ranks=R, n_iters=T, mean_step=mean_step, cv_step=cv_step,
         scores=scores, dominant=dominant, principles=list(PRINCIPLES))
+
+
+def diagnose_jobs(engine_result,
+                  transfer_floors: Optional[Dict[str, float]] = None
+                  ) -> Dict[str, DiagnosticReport]:
+    """Per-tenant diagnostic reports for a shared-fabric engine run.
+
+    ``engine_result`` is a :class:`repro.fabric.engine.EngineResult`; each
+    job's lazily-materialized record matrix is diagnosed independently, so
+    cross-tenant contention shows up as ``fabric_contention`` on the victim
+    job. ``transfer_floors`` optionally maps job name -> uncongested
+    collective time (the job's compiled-schedule floor) to sharpen the
+    contention attribution.
+    """
+    floors = transfer_floors or {}
+    return {jr.name: diagnose(jr.per_rank_records(),
+                              transfer_floor=floors.get(jr.name, 0.0))
+            for jr in engine_result.jobs}

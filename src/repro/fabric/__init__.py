@@ -1,13 +1,21 @@
 """Fabric study substrate: topology graphs, link-structural collective cost
-models, congestion dynamics, straggler/locality models, and the BSP
-training-step simulator that reproduces the paper's empirical results."""
-from repro.fabric.collectives import (CollectiveCost, all_reduce,  # noqa: F401
+models (per-call and compiled), congestion dynamics, straggler/locality
+models, placement policies, and the shared-fabric BSP engine that steps one
+or many tenant jobs and reproduces the paper's empirical results."""
+from repro.fabric.collectives import (CollectiveCost,              # noqa: F401
+                                      CompiledSchedule, all_reduce,
+                                      compile_schedule,
                                       hierarchical_all_reduce,
                                       ring_all_reduce, tree_all_reduce)
 from repro.fabric.congestion import (CongestionConfig,             # noqa: F401
                                      CongestionModel)
+from repro.fabric.engine import (EngineResult, FabricEngine,       # noqa: F401
+                                 JobResult, JobSpec)
+from repro.fabric.placement import (POLICIES, place,               # noqa: F401
+                                    spanning_groups)
 from repro.fabric.simulator import (SimConfig, SimResult,          # noqa: F401
-                                    efficiency_curve, simulate)
+                                    efficiency_curve, job_spec_from,
+                                    simulate)
 from repro.fabric.stragglers import ComputeModel, StragglerConfig  # noqa: F401
 from repro.fabric.topology import (FatTree, Link, Topology,        # noqa: F401
                                    TpuPod, fat_tree, tpu_pod)

@@ -154,3 +154,248 @@ def all_reduce(topo: Topology, ranks: Sequence[int], nbytes: float, *,
         return hierarchical_all_reduce(topo, ranks, nbytes,
                                        group=group or 8, link_eff=link_eff)
     return ALGOS[algo](topo, ranks, nbytes, link_eff=link_eff)
+
+
+# ---------------------------------------------------------------------------
+# compiled schedules
+# ---------------------------------------------------------------------------
+#
+# The per-call functions above re-walk every ring hop and re-count per-link
+# flows on each invocation — fine for a one-off cost query, ruinous inside
+# the simulator's iteration loop where only the congestion state (link_eff)
+# changes between calls. A compiled schedule performs that walk once and
+# freezes the flow structure into flat tuples, so evaluating the cost under
+# a new congestion state is a short loop over links instead of a walk over
+# hops. The arithmetic (operand order, dict insertion order, tie-breaking)
+# replicates the per-call path exactly, so compiled costs are bit-identical
+# to the legacy functions — tests/test_compiled_schedules.py holds the two
+# paths equal across topologies, algorithms, and congestion states.
+
+
+class _StepPlan:
+    """One algorithm step with its flow structure frozen.
+
+    ``entries`` is one row per distinct link, ordered by first encounter
+    while walking the hop list (the legacy flows-dict insertion order, which
+    fixes bottleneck tie-breaking): ``(name, num, bw1e9, latency)`` where
+    ``num = conc * chunk_bytes`` is the serialized bytes on the link and
+    ``bw1e9 = bw_gbps * 1e9`` the uncongested bandwidth in B/s.
+    """
+
+    __slots__ = ("entries", "step_bytes")
+
+    def __init__(self, hop_links: List[List[str]], chunk_bytes: float,
+                 topo: Topology):
+        flows: Dict[str, int] = {}
+        for links in hop_links:
+            for ln in links:
+                flows[ln] = flows.get(ln, 0) + 1
+        entries = []
+        step_bytes: Dict[str, float] = {}
+        for ln, f in flows.items():
+            link = topo.link(ln)
+            conc = f if link.shared else 1
+            entries.append((ln, conc * chunk_bytes, link.bw_gbps * 1e9,
+                            link.latency_s))
+            step_bytes[ln] = f * chunk_bytes
+        self.entries = tuple(entries)
+        self.step_bytes = step_bytes
+
+    def time(self, link_eff: Optional[Dict[str, float]]
+             ) -> (float, str):
+        worst, worst_link = 0.0, ""
+        if link_eff is None:
+            for ln, num, bw, lat in self.entries:
+                t = num / bw + lat
+                if t > worst:
+                    worst, worst_link = t, ln
+        else:
+            get = link_eff.get
+            for ln, num, bw, lat in self.entries:
+                t = num / (bw * get(ln, 1.0)) + lat
+                if t > worst:
+                    worst, worst_link = t, ln
+        return worst, worst_link
+
+
+class CompiledSchedule:
+    """Base interface: a collective whose flow structure is precomputed.
+
+    ``cost(link_eff)`` returns a :class:`CollectiveCost` equal to the
+    corresponding per-call function; ``total_s(link_eff)`` is the scalar
+    fast path used by the simulator's hot loop (no byte dicts built).
+    """
+
+    algo: str = ""
+
+    def cost(self, link_eff: Optional[Dict[str, float]] = None
+             ) -> CollectiveCost:
+        raise NotImplementedError
+
+    def total_s(self, link_eff: Optional[Dict[str, float]] = None) -> float:
+        raise NotImplementedError
+
+    def bytes_per_call(self, link_eff: Optional[Dict[str, float]] = None
+                       ) -> Dict[str, float]:
+        """Per-link bytes one collective moves (== cost().per_link_bytes)."""
+        return self.cost(link_eff).per_link_bytes
+
+    def accumulate_bytes(self, link_eff: Optional[Dict[str, float]],
+                         totals: Dict[str, float]) -> None:
+        """Add one call's per-link bytes into ``totals`` (same add sequence
+        as the per-call accumulation in the seed loop)."""
+        get = totals.get
+        for ln, b in self.bytes_per_call(link_eff).items():
+            totals[ln] = get(ln, 0.0) + b
+
+
+class _ZeroSchedule(CompiledSchedule):
+    """Degenerate collective (<= 1 rank): free."""
+
+    def cost(self, link_eff=None) -> CollectiveCost:
+        return CollectiveCost(0.0, 0, "", {})
+
+    def total_s(self, link_eff=None) -> float:
+        return 0.0
+
+    def accumulate_bytes(self, link_eff, totals) -> None:
+        pass
+
+
+class _StaticBytesSchedule(CompiledSchedule):
+    """Schedule whose per-call link bytes are congestion-independent
+    (ring, tree): ``self._bytes`` is frozen at compile time."""
+
+    _bytes: Dict[str, float]
+
+    def bytes_per_call(self, link_eff=None) -> Dict[str, float]:
+        return dict(self._bytes)
+
+    def accumulate_bytes(self, link_eff, totals) -> None:
+        get = totals.get
+        for ln, b in self._bytes.items():
+            totals[ln] = get(ln, 0.0) + b
+
+
+class _RingSchedule(_StaticBytesSchedule):
+    algo = "ring"
+
+    def __init__(self, topo: Topology, ranks: Sequence[int], nbytes: float):
+        n = len(ranks)
+        self.steps = 2 * (n - 1)
+        self.plan = _StepPlan(topo.ring_hops(ranks), nbytes / n, topo)
+        self._bytes = {ln: b * self.steps
+                       for ln, b in self.plan.step_bytes.items()}
+
+    def cost(self, link_eff=None) -> CollectiveCost:
+        t, bott = self.plan.time(link_eff)
+        return CollectiveCost(t * self.steps, self.steps, bott,
+                              dict(self._bytes))
+
+    def total_s(self, link_eff=None) -> float:
+        return self.plan.time(link_eff)[0] * self.steps
+
+
+class _TreeSchedule(_StaticBytesSchedule):
+    algo = "tree"
+
+    def __init__(self, topo: Topology, ranks: Sequence[int], nbytes: float):
+        import math
+        n = len(ranks)
+        depth = math.ceil(math.log2(n))
+        self.steps = 2 * depth
+        self.levels: List[_StepPlan] = []
+        per_link_total: Dict[str, float] = {}
+        for level in range(depth):
+            stride = 1 << level
+            hops = [topo.hop_links(ranks[i], ranks[i + stride])
+                    for i in range(0, n - stride, stride * 2)]
+            if not hops:
+                continue
+            plan = _StepPlan(hops, nbytes, topo)
+            self.levels.append(plan)
+            for ln, b in plan.step_bytes.items():
+                per_link_total[ln] = per_link_total.get(ln, 0.0) + b
+        self._bytes = {ln: 2 * b for ln, b in per_link_total.items()}
+
+    def _walk(self, link_eff) -> (float, str):
+        total, worst_t, worst_link = 0.0, 0.0, ""
+        for plan in self.levels:
+            t, bott = plan.time(link_eff)
+            total += t
+            if t > worst_t:
+                worst_t, worst_link = t, bott
+        return total * 2.0, worst_link
+
+    def cost(self, link_eff=None) -> CollectiveCost:
+        total, bott = self._walk(link_eff)
+        return CollectiveCost(total, self.steps, bott, dict(self._bytes))
+
+    def total_s(self, link_eff=None) -> float:
+        return self._walk(link_eff)[0]
+
+
+class _HierSchedule(CompiledSchedule):
+    """Hierarchical = per-group ring schedules (slowest group binds) plus a
+    ring across group leaders. Which group is slowest depends on the
+    congestion state, so the intra winner is picked per evaluation — exactly
+    as the per-call path does."""
+
+    algo = "hierarchical"
+
+    def __init__(self, topo: Topology, ranks: Sequence[int], nbytes: float,
+                 group: int):
+        intra_groups = [list(ranks[i:i + group])
+                        for i in range(0, len(ranks), group)]
+        self.intra = [_RingSchedule(topo, g, nbytes)
+                      for g in intra_groups if len(g) > 1]
+        leaders = [g[0] for g in intra_groups]
+        self.inter = compile_schedule(topo, leaders, nbytes / group,
+                                      algo="ring")
+
+    def cost(self, link_eff=None) -> CollectiveCost:
+        intra = CollectiveCost(0.0, 0, "", {})
+        for sched in self.intra:            # first max wins, like max(key=)
+            c = sched.cost(link_eff)
+            if c.total_s > intra.total_s:
+                intra = c
+        inter = self.inter.cost(link_eff)
+        per_link = dict(intra.per_link_bytes)
+        for ln, b in inter.per_link_bytes.items():
+            per_link[ln] = per_link.get(ln, 0.0) + b
+        bott = inter.bottleneck_link if inter.total_s >= intra.total_s \
+            else intra.bottleneck_link
+        return CollectiveCost(intra.total_s + inter.total_s,
+                              intra.steps + inter.steps, bott, per_link)
+
+    def total_s(self, link_eff=None) -> float:
+        intra = 0.0
+        for sched in self.intra:
+            t = sched.total_s(link_eff)
+            if t > intra:
+                intra = t
+        return intra + self.inter.total_s(link_eff)
+
+
+def compile_schedule(topo: Topology, ranks: Sequence[int], nbytes: float, *,
+                     algo: str = "ring", group: int = 0) -> CompiledSchedule:
+    """Precompute the flow structure of one all-reduce over ``ranks``.
+
+    Returns a :class:`CompiledSchedule` whose ``cost(link_eff)`` equals
+    :func:`all_reduce` for the same arguments, evaluated without re-walking
+    the topology.
+    """
+    n = len(ranks)
+    if n <= 1:
+        return _ZeroSchedule()
+    if algo == "hierarchical":
+        g = group or 8
+        if n <= g:
+            return _RingSchedule(topo, ranks, nbytes)
+        return _HierSchedule(topo, ranks, nbytes, g)
+    if algo == "ring":
+        return _RingSchedule(topo, ranks, nbytes)
+    if algo == "tree":
+        return _TreeSchedule(topo, ranks, nbytes)
+    raise KeyError(f"unknown collective algo {algo!r}; "
+                   f"one of ('ring', 'tree', 'hierarchical')")

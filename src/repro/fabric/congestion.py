@@ -22,6 +22,7 @@ Queueing delay on a shared link additionally follows an M/M/1-style
 from __future__ import annotations
 
 import dataclasses
+import math
 import random
 from typing import Dict
 
@@ -48,12 +49,38 @@ class CongestionModel:
             name: cfg.u_mean for name, l in topo.links.items() if l.shared}
 
     def advance(self) -> None:
+        # Hot loop (once per simulated iteration): random.gauss inlined with
+        # its pair cache, AR(1) constants hoisted. Bit-identical to the seed
+        # implementation kept in repro.fabric._reference.
         c = self.cfg
-        for name in self.u:
-            innov = self.rng.gauss(0.0, c.u_sigma)
-            u = c.u_rho * self.u[name] + (1 - c.u_rho) * c.u_mean + \
-                (1 - c.u_rho) ** 0.5 * innov
-            self.u[name] = min(max(u, 0.0), c.u_max)
+        rng = self.rng
+        rnd = rng.random
+        rho = c.u_rho
+        drift = (1 - rho) * c.u_mean
+        iscale = (1 - rho) ** 0.5
+        sigma = c.u_sigma
+        u_max = c.u_max
+        cos, sin, log, sqrt = math.cos, math.sin, math.log, math.sqrt
+        twopi = 2.0 * math.pi
+        u_map = self.u
+        g_next = rng.gauss_next
+        rng.gauss_next = None
+        for name in u_map:
+            z = g_next
+            if z is None:
+                x2pi = rnd() * twopi
+                g2rad = sqrt(-2.0 * log(1.0 - rnd()))
+                z = cos(x2pi) * g2rad
+                g_next = sin(x2pi) * g2rad
+            else:
+                g_next = None
+            u = rho * u_map[name] + drift + iscale * (z * sigma)
+            if u < 0.0:
+                u = 0.0
+            elif u > u_max:
+                u = u_max
+            u_map[name] = u
+        rng.gauss_next = g_next
 
     def link_eff(self, skew_ratio: float, spanning_groups: int = 1
                  ) -> Dict[str, float]:
@@ -66,10 +93,9 @@ class CongestionModel:
         c = self.cfg
         burst = 1.0 + c.k_burst * max(0.0, skew_ratio)
         ecmp = 1.0 + c.ecmp_k * max(0, spanning_groups - 1)
-        out = {}
-        for name, u in self.u.items():
-            out[name] = max(1e-3, (1.0 - u) / (burst * ecmp))
-        return out
+        denom = burst * ecmp
+        return {name: max(1e-3, (1.0 - u) / denom)
+                for name, u in self.u.items()}
 
     def kick(self, skew_ratio: float) -> None:
         """Queue-buildup hysteresis: a skewed (bursty) collective leaves
@@ -81,9 +107,12 @@ class CongestionModel:
         c = self.cfg
         if c.k_kick <= 0.0 or skew_ratio <= 0.0:
             return
-        for name in self.u:
-            u = self.u[name] + c.k_kick * skew_ratio * (1.0 - self.u[name])
-            self.u[name] = min(u, c.u_max)
+        kk = c.k_kick * skew_ratio
+        u_max = c.u_max
+        u_map = self.u
+        for name, u in u_map.items():
+            u = u + kk * (1.0 - u)
+            u_map[name] = u_max if u > u_max else u
 
     def queue_delay(self, link_name: str) -> float:
         """M/M/1-style queueing delay on top of base latency."""

@@ -1,0 +1,121 @@
+"""Rank -> node placement policies (paper §3.3, "locality-driven variance").
+
+The paper's production traces show the *same* job, same fabric, scaling
+differently run-to-run because the scheduler handed it different node sets:
+a job packed under one leaf rides non-blocking links, a job scattered across
+leaves pays the oversubscribed tier on every ring hop. These policies turn
+that into a first-class experimental axis for the shared-fabric engine:
+
+  * ``compact``    — lowest-index free nodes, contiguous (best locality);
+  * ``scattered``  — round-robin one node per leaf/pod (worst locality: every
+    hop crosses the shared tier);
+  * ``striped``    — fixed-stride selection over the free list (the classic
+    "rank i on node i*stride" allocation that schedulers produce under
+    fragmentation);
+  * ``random``     — seeded shuffle of the free nodes (run-to-run variance).
+
+Every policy returns a bijective rank -> node mapping: ``len(nodes) == n``
+distinct node ids, ``nodes[r]`` hosting rank ``r``.
+"""
+from __future__ import annotations
+
+import random
+from typing import Iterable, List, Sequence
+
+from repro.fabric.topology import Topology
+
+
+def group_size(topo: Topology) -> int:
+    """Nodes per locality group (leaf for fat-tree, pod for TPU)."""
+    size = getattr(topo, "nodes_per_leaf", None) \
+        or getattr(topo, "ranks_per_pod", None)
+    return int(size) if size else topo.n_ranks
+
+
+def group_of(topo: Topology, node: int) -> int:
+    return node // group_size(topo)
+
+
+def _free_nodes(topo: Topology, taken: Iterable[int]) -> List[int]:
+    taken = set(taken)
+    return [i for i in range(topo.n_ranks) if i not in taken]
+
+
+def compact(topo: Topology, n: int, free: Sequence[int]) -> List[int]:
+    return list(free[:n])
+
+
+def scattered(topo: Topology, n: int, free: Sequence[int]) -> List[int]:
+    by_group: dict = {}
+    for node in free:
+        by_group.setdefault(group_of(topo, node), []).append(node)
+    queues = [by_group[g] for g in sorted(by_group)]
+    out: List[int] = []
+    while len(out) < n:
+        progressed = False
+        for q in queues:
+            if q and len(out) < n:
+                out.append(q.pop(0))
+                progressed = True
+        if not progressed:
+            break
+    return out
+
+
+def striped(topo: Topology, n: int, free: Sequence[int],
+            stride: int = 0) -> List[int]:
+    stride = stride or group_size(topo)
+    pool = list(free)
+    out: List[int] = []
+    offset = 0
+    while len(out) < n and pool:
+        picked = pool[offset::stride]
+        for node in picked:
+            if len(out) == n:
+                break
+            out.append(node)
+            pool.remove(node)
+        offset = (offset + 1) % max(1, stride)
+    return out
+
+
+def random_placement(topo: Topology, n: int, free: Sequence[int],
+                     seed: int = 0) -> List[int]:
+    pool = list(free)
+    random.Random(seed).shuffle(pool)
+    return pool[:n]
+
+
+POLICIES = ("compact", "scattered", "striped", "random")
+
+
+def place(policy: str, topo: Topology, n: int, *,
+          taken: Iterable[int] = (), seed: int = 0) -> List[int]:
+    """Map ``n`` ranks onto distinct free nodes of ``topo``.
+
+    ``taken`` holds node ids already owned by co-tenant jobs. Raises if the
+    fabric cannot host ``n`` more ranks or the policy is unknown.
+    """
+    free = _free_nodes(topo, taken)
+    if n > len(free):
+        raise ValueError(
+            f"placement {policy!r}: need {n} nodes, only {len(free)} free "
+            f"on {topo.name}")
+    if policy == "compact":
+        nodes = compact(topo, n, free)
+    elif policy == "scattered":
+        nodes = scattered(topo, n, free)
+    elif policy == "striped":
+        nodes = striped(topo, n, free)
+    elif policy == "random":
+        nodes = random_placement(topo, n, free, seed=seed)
+    else:
+        raise KeyError(f"unknown placement policy {policy!r}; "
+                       f"one of {POLICIES}")
+    assert len(nodes) == n and len(set(nodes)) == n
+    return nodes
+
+
+def spanning_groups(topo: Topology, nodes: Sequence[int]) -> int:
+    """Distinct leaves/pods a node set touches (ECMP spread of the job)."""
+    return max(1, len({group_of(topo, nd) for nd in nodes}))

@@ -8,6 +8,14 @@ derated by the arrival burst); BSP semantics make every rank finish at
 in per rank as a local :class:`PacingController`: it observes its own
 barrier wait, and its bounded delay shifts the rank's next release.
 
+:func:`simulate` is a thin single-job wrapper over the shared-fabric engine
+(:mod:`repro.fabric.engine`), which compiles the collective schedule once
+and steps the job without re-walking the topology per iteration — the
+step-time series is bit-identical to the seed implementation (kept as the
+executable spec in :mod:`repro.fabric._reference`) at a fraction of the
+wall-clock. Multi-tenant scenarios (co-tenant contention, placement
+variance) use the engine directly.
+
 This is the engine behind the paper-reproduction benchmarks (Table 1,
 Figures 1/5) and it emits standard :class:`IterationRecord` streams, so the
 taxonomy diagnostics (:mod:`repro.core.diagnostics`) run unchanged on
@@ -21,10 +29,8 @@ from typing import Dict, List, Optional
 
 from repro.configs.base import PacingConfig
 from repro.core.instrumentation import IterationRecord
-from repro.core.pacing import PacingController
-from repro.fabric import collectives
-from repro.fabric.congestion import CongestionConfig, CongestionModel
-from repro.fabric.stragglers import ComputeModel, StragglerConfig
+from repro.fabric.congestion import CongestionConfig
+from repro.fabric.stragglers import StragglerConfig
 from repro.fabric.topology import Topology, fat_tree
 
 
@@ -71,13 +77,43 @@ class SimConfig:
                 k_burst=0.4, ecmp_k=0.18, k_kick=0.10),
         )
 
+    @staticmethod
+    def fast(n_nodes: int, *, coordination: bool = False,
+             seed: int = 0) -> "SimConfig":
+        """Short-horizon preset for tests: the paper-calibrated stochastic
+        models at a third of the iterations. Statistical signatures (scaling
+        decay, CV growth, coordination benefit) survive the truncation;
+        absolute Table-1 numbers need the full :meth:`paper` horizon."""
+        cfg = SimConfig.paper(n_nodes, coordination=coordination, seed=seed)
+        return dataclasses.replace(cfg, iters=130, warmup=20)
 
-@dataclasses.dataclass
+
 class SimResult:
-    cfg: SimConfig
-    records: List[List[IterationRecord]]       # [rank][iter]
-    step_times: List[float]                    # post-warmup BSP step times
-    link_bytes: Dict[str, float]
+    """Single-job simulation outcome.
+
+    The per-rank record matrix is materialized lazily when constructed from
+    an engine trace: the hot loop stores one compact tuple per iteration and
+    ``.records`` expands them only when diagnostics/tests actually look.
+    """
+
+    def __init__(self, cfg: SimConfig,
+                 records: Optional[List[List[IterationRecord]]] = None,
+                 step_times: Optional[List[float]] = None,
+                 link_bytes: Optional[Dict[str, float]] = None,
+                 _job=None):
+        self.cfg = cfg
+        self._records = records
+        self._job = job = _job
+        self.step_times = step_times if step_times is not None \
+            else (job.step_times if job is not None else [])
+        self.link_bytes = link_bytes if link_bytes is not None \
+            else (job.link_bytes if job is not None else {})
+
+    @property
+    def records(self) -> List[List[IterationRecord]]:
+        if self._records is None:
+            self._records = self._job.records
+        return self._records
 
     @property
     def mean_step(self) -> float:
@@ -108,62 +144,25 @@ def build_topology(cfg: SimConfig) -> Topology:
     )
 
 
+def job_spec_from(cfg: SimConfig, name: str = "job0"):
+    """The engine job equivalent to a legacy single-job simulation."""
+    from repro.fabric.engine import JobSpec
+    spanning = max(1, (cfg.n_nodes + cfg.nodes_per_leaf - 1)
+                   // cfg.nodes_per_leaf)
+    return JobSpec(
+        name=name, n_ranks=cfg.n_nodes, grad_bytes=cfg.grad_bytes,
+        algo=cfg.algo, samples_per_rank=cfg.samples_per_node,
+        placement="compact", stragglers=cfg.stragglers, pacing=cfg.pacing,
+        spanning_override=spanning)
+
+
 def simulate(cfg: SimConfig, topo: Optional[Topology] = None) -> SimResult:
-    n = cfg.n_nodes
+    from repro.fabric.engine import FabricEngine
     topo = topo or build_topology(cfg)
-    compute_model = ComputeModel(cfg.stragglers, n, seed=cfg.seed + 1)
-    congestion = CongestionModel(cfg.congestion, topo, seed=cfg.seed + 2)
-    controllers = [PacingController(cfg.pacing) for _ in range(n)] \
-        if cfg.pacing is not None else None
-
-    ranks = list(range(n))
-    spanning = max(1, (n + cfg.nodes_per_leaf - 1) // cfg.nodes_per_leaf)
-    # serialization floor used to normalize skew (no congestion, no skew)
-    floor = collectives.all_reduce(
-        topo, ranks, cfg.grad_bytes, algo=cfg.algo).total_s
-
-    release = [0.0] * n
-    records: List[List[IterationRecord]] = [[] for _ in range(n)]
-    step_times: List[float] = []
-    link_totals: Dict[str, float] = {}
-    prev_finish = 0.0
-
-    for t in range(cfg.iters):
-        compute = compute_model.sample()
-        arrival = [release[r] + compute[r] for r in range(n)]
-        first, last = min(arrival), max(arrival)
-        skew_ratio = (last - first) / max(floor, 1e-9)
-
-        congestion.advance()
-        eff = congestion.link_eff(skew_ratio, spanning_groups=spanning)
-        coll = collectives.all_reduce(
-            topo, ranks, cfg.grad_bytes, algo=cfg.algo, link_eff=eff)
-        congestion.kick(skew_ratio)   # queue hysteresis for later iterations
-        finish = last + coll.total_s
-        for ln, b in coll.per_link_bytes.items():
-            link_totals[ln] = link_totals.get(ln, 0.0) + b
-
-        step = finish - prev_finish if t > 0 else finish
-        if t >= cfg.warmup:
-            step_times.append(step)
-
-        for r in range(n):
-            wait = last - arrival[r]
-            rec = IterationRecord(
-                step=t, compute_time=compute[r], comm_time=coll.total_s,
-                wait_time=wait, total_time=finish - release[r])
-            records[r].append(rec)
-            delay = 0.0
-            if controllers is not None:
-                controllers[r].observe(wait, finish - release[r])
-                decision = controllers[r].decide()
-                delay = decision.delay
-                rec.pacing_delay = delay
-            release[r] = finish + delay
-        prev_finish = finish
-
-    return SimResult(cfg=cfg, records=records, step_times=step_times,
-                     link_bytes=link_totals)
+    engine = FabricEngine(topo, [job_spec_from(cfg)],
+                          congestion=cfg.congestion, base_seed=cfg.seed)
+    result = engine.run(cfg.iters, warmup=cfg.warmup)
+    return SimResult(cfg=cfg, _job=result.jobs[0])
 
 
 def efficiency_curve(node_counts, *, coordination: bool, seed: int = 0

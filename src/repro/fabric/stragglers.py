@@ -29,7 +29,17 @@ class StragglerConfig:
 
 
 class ComputeModel:
-    """Samples per-rank compute time per iteration; owns straggler state."""
+    """Samples per-rank compute time per iteration; owns straggler state.
+
+    :meth:`sample` is the simulator's single hottest function (n_ranks RNG
+    draws per iteration), so its loop is hand-tightened: locals for every
+    attribute, the per-rank ``base * locality`` product precomputed, and
+    ``random.gauss`` inlined (same Box-Muller pair caching through
+    ``rng.gauss_next``). The draw sequence and float arithmetic are
+    bit-identical to the seed implementation, which is preserved as
+    :class:`repro.fabric._reference.ReferenceComputeModel` and held equal
+    by tests.
+    """
 
     def __init__(self, cfg: StragglerConfig, n_ranks: int, seed: int = 0):
         self.cfg = cfg
@@ -39,22 +49,49 @@ class ComputeModel:
         self.locality = [1.0 + cfg.locality_spread * self.rng.random()
                          for _ in range(n_ranks)]
         self.spiking = [0.0] * n_ranks   # 0 => healthy, else active multiplier
+        self._scale = [cfg.base_compute_s * loc for loc in self.locality]
 
     def sample(self) -> List[float]:
         cfg = self.cfg
+        rng = self.rng
+        rnd = rng.random
+        spiking = self.spiking
+        scale = self._scale
+        sigma = cfg.jitter_sigma
+        spike_prob = cfg.spike_prob
+        exit_prob = cfg.spike_exit_prob
+        heavy_frac = cfg.heavy_frac
+        heavy_mult = cfg.heavy_mult
+        spike_mult = cfg.spike_mult
+        exp, cos, sin, log, sqrt = \
+            math.exp, math.cos, math.sin, math.log, math.sqrt
+        twopi = 2.0 * math.pi
+        # take over the Box-Muller pair cache for the duration of the loop
+        g_next = rng.gauss_next
+        rng.gauss_next = None
         out = []
+        append = out.append
         for r in range(self.n):
-            if self.spiking[r]:
-                if self.rng.random() < cfg.spike_exit_prob:
-                    self.spiking[r] = 0.0
-            elif self.rng.random() < cfg.spike_prob:
-                heavy = self.rng.random() < cfg.heavy_frac
-                self.spiking[r] = cfg.heavy_mult if heavy else cfg.spike_mult
-            jitter = math.exp(self.rng.gauss(0.0, cfg.jitter_sigma))
-            t = cfg.base_compute_s * self.locality[r] * jitter
-            if self.spiking[r]:
-                t *= self.spiking[r]
-            out.append(t)
+            s = spiking[r]
+            if s:
+                if rnd() < exit_prob:
+                    spiking[r] = s = 0.0
+            elif rnd() < spike_prob:
+                heavy = rnd() < heavy_frac
+                spiking[r] = s = heavy_mult if heavy else spike_mult
+            z = g_next
+            if z is None:
+                x2pi = rnd() * twopi
+                g2rad = sqrt(-2.0 * log(1.0 - rnd()))
+                z = cos(x2pi) * g2rad
+                g_next = sin(x2pi) * g2rad
+            else:
+                g_next = None
+            t = scale[r] * exp(z * sigma)
+            if s:
+                t *= s
+            append(t)
+        rng.gauss_next = g_next
         return out
 
     def expected_max_wait(self) -> float:

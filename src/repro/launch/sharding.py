@@ -67,9 +67,25 @@ def active_mesh() -> Optional[Mesh]:
     return _ctx.mesh
 
 
+def _abstract_mesh():
+    """Ambient AbstractMesh, or None when this jax doesn't expose one.
+
+    ``jax.sharding.get_abstract_mesh`` landed after 0.4.x; on older
+    runtimes there is no manual-region trace context to consult, so the
+    callers below correctly fall through to the bound concrete mesh.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        return None
+    try:
+        return get()
+    except Exception:  # noqa: BLE001 — API drift fallback
+        return None
+
+
 def manual_axes() -> frozenset:
     """Mesh axes currently bound Manual by an enclosing shard_map."""
-    amesh = jax.sharding.get_abstract_mesh()
+    amesh = _abstract_mesh()
     if amesh is None or amesh.empty:
         return frozenset()
     try:
@@ -83,7 +99,7 @@ def manual_axes() -> frozenset:
 def shard_map_mesh():
     """Mesh object to hand to a nested shard_map: the ambient abstract
     mesh when inside a manual region, else the bound concrete mesh."""
-    amesh = jax.sharding.get_abstract_mesh()
+    amesh = _abstract_mesh()
     if amesh is not None and not amesh.empty and amesh._any_axis_manual:
         return amesh
     return _ctx.mesh
@@ -150,7 +166,7 @@ def logical(x: jax.Array, *spec: Union[str, None, Tuple[str, ...]]):
     # Inside a shard_map manual region the trace context carries an
     # AbstractMesh with Manual axis types; constraints must be built
     # against it (rules must not mention the manual axes there).
-    amesh = jax.sharding.get_abstract_mesh()
+    amesh = _abstract_mesh()
     if amesh is not None and not amesh.empty and amesh._any_axis_manual:
         return jax.lax.with_sharding_constraint(x, NamedSharding(amesh, p))
     return jax.lax.with_sharding_constraint(

@@ -14,6 +14,10 @@ from repro.configs import (ARCH_IDS, SHAPES_BY_NAME, OptimizerConfig,
 from repro.models.api import build_model, input_specs, make_concrete
 from repro.optim import adamw_update, init_opt_state
 
+# Full-model forward/train/decode smoke runs dominate suite wall-clock
+# (minutes); default tier-1 excludes them, CI's slow job runs them.
+pytestmark = pytest.mark.slow
+
 SMALL = dataclasses.replace(SHAPES_BY_NAME["train_4k"], seq_len=24,
                             global_batch=2)
 

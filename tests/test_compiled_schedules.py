@@ -1,0 +1,87 @@
+"""Compiled collective schedules must be cost-identical to the per-call
+models: exact per-link bytes, bottleneck link, and total_s, across
+algorithms, topologies, and congestion (link_eff) states."""
+import random
+
+import pytest
+
+from repro.fabric import (all_reduce, compile_schedule, fat_tree, tpu_pod)
+
+TOPOS = {
+    "fat_tree": lambda: fat_tree(32, nodes_per_leaf=8),
+    "fat_tree_ragged": lambda: fat_tree(20, nodes_per_leaf=8),
+    "tpu_pod": lambda: tpu_pod(2, ranks_per_pod=16),
+}
+ALGOS = ("ring", "tree", "hierarchical")
+
+
+def _eff_states(topo, seed=0):
+    """None (uncongested) plus several random shared-tier congestion maps."""
+    rng = random.Random(seed)
+    shared = [ln for ln, l in topo.links.items() if l.shared]
+    states = [None, {}]
+    for _ in range(4):
+        states.append({ln: 0.05 + 0.9 * rng.random() for ln in shared})
+    # single-link jams move the bottleneck around
+    states.extend({ln: 0.02} for ln in shared[:3])
+    return states
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOS))
+@pytest.mark.parametrize("algo", ALGOS)
+def test_compiled_cost_equals_per_call_cost(topo_name, algo):
+    topo = TOPOS[topo_name]()
+    ranks = list(range(topo.n_ranks))
+    sched = compile_schedule(topo, ranks, 1.3e9, algo=algo)
+    for eff in _eff_states(topo, seed=hash((topo_name, algo)) % 1000):
+        legacy = all_reduce(topo, ranks, 1.3e9, algo=algo, link_eff=eff)
+        comp = sched.cost(eff)
+        assert comp.total_s == legacy.total_s
+        assert comp.steps == legacy.steps
+        assert comp.bottleneck_link == legacy.bottleneck_link
+        assert comp.per_link_bytes == legacy.per_link_bytes
+        # scalar fast path agrees with the full evaluation
+        assert sched.total_s(eff) == legacy.total_s
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_compiled_subset_ranks(algo):
+    """Schedules over non-contiguous rank subsets (engine placements)."""
+    topo = fat_tree(32, nodes_per_leaf=8)
+    ranks = [0, 3, 8, 9, 17, 21, 25, 30]
+    sched = compile_schedule(topo, ranks, 7e8, algo=algo)
+    for eff in _eff_states(topo, seed=7):
+        legacy = all_reduce(topo, ranks, 7e8, algo=algo, link_eff=eff)
+        assert sched.cost(eff).total_s == legacy.total_s
+        assert sched.cost(eff).per_link_bytes == legacy.per_link_bytes
+
+
+def test_compiled_accumulate_matches_per_iter_adds():
+    """accumulate_bytes replicates the seed loop's per-iteration dict adds."""
+    topo = fat_tree(16, nodes_per_leaf=8)
+    ranks = list(range(16))
+    sched = compile_schedule(topo, ranks, 1.1e9, algo="ring")
+    want, got = {}, {}
+    for _ in range(100):
+        cost = all_reduce(topo, ranks, 1.1e9, algo="ring")
+        for ln, b in cost.per_link_bytes.items():
+            want[ln] = want.get(ln, 0.0) + b
+        sched.accumulate_bytes(None, got)
+    assert got == want
+
+
+def test_compiled_trivial_and_unknown():
+    topo = fat_tree(8)
+    zero = compile_schedule(topo, [0], 1e9, algo="ring")
+    assert zero.total_s() == 0.0 and zero.cost().per_link_bytes == {}
+    with pytest.raises(KeyError):
+        compile_schedule(topo, [0, 1], 1e9, algo="nope")
+
+
+def test_compiled_hierarchical_group_fallback():
+    """n <= group degenerates to a plain ring, like the per-call path."""
+    topo = fat_tree(8, nodes_per_leaf=8)
+    ranks = list(range(4))
+    sched = compile_schedule(topo, ranks, 1e9, algo="hierarchical", group=8)
+    legacy = all_reduce(topo, ranks, 1e9, algo="hierarchical", group=8)
+    assert sched.cost(None).total_s == legacy.total_s

@@ -116,6 +116,10 @@ def test_burst_derates_only_shared_links():
 
 # ---------------------------------------------------------------------------
 # simulator: paper-reproduction properties
+#
+# The full-fidelity (SimConfig.paper) runs carry the quantitative Table-1
+# comparison and are marked slow; the fast-preset section below keeps the
+# qualitative signatures in default tier-1.
 # ---------------------------------------------------------------------------
 
 
@@ -130,22 +134,26 @@ def paper_runs():
     return out
 
 
+@pytest.mark.slow
 def test_scaling_efficiency_decreases(paper_runs):
     eff = {n: r["base"].throughput / n for n, r in paper_runs.items()}
     assert eff[16] < eff[4]
     assert eff[64] < eff[16]
 
 
+@pytest.mark.slow
 def test_instability_grows_with_scale(paper_runs):
     assert paper_runs[64]["base"].cv > paper_runs[4]["base"].cv
 
 
+@pytest.mark.slow
 def test_coordination_cuts_cv_at_scale(paper_runs):
     base = paper_runs[64]["base"].cv
     coord = paper_runs[64]["coord"].cv
     assert coord < 0.75 * base
 
 
+@pytest.mark.slow
 def test_coordination_improves_throughput_at_scale_only(paper_runs):
     d64 = paper_runs[64]["coord"].throughput / \
         paper_runs[64]["base"].throughput - 1
@@ -155,6 +163,7 @@ def test_coordination_improves_throughput_at_scale_only(paper_runs):
     assert abs(d4) < 0.02              # paper: -0.6% at 4 nodes
 
 
+@pytest.mark.slow
 def test_throughput_matches_paper_table1(paper_runs):
     targets = {4: 1024, 16: 3600, 64: 8200}
     for n, tgt in targets.items():
@@ -162,6 +171,7 @@ def test_throughput_matches_paper_table1(paper_runs):
         assert abs(thr / tgt - 1) < 0.10, (n, thr, tgt)
 
 
+@pytest.mark.slow
 def test_simulator_records_feed_diagnostics(paper_runs):
     res = paper_runs[64]["base"]
     rep = diagnose(res.per_rank_records())
@@ -171,6 +181,47 @@ def test_simulator_records_feed_diagnostics(paper_runs):
     # with congestion + stragglers at 64 nodes, waits must be significant
     scores = {s.mode: s.score for s in rep.scores}
     assert scores["sync_amplification"] > 0.02
+
+
+# ---------------------------------------------------------------------------
+# simulator: fast-preset signatures (default tier-1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fast_runs():
+    out = {}
+    for n in (4, 64):
+        out[n] = {
+            "base": simulate(SimConfig.fast(n)),
+            "coord": simulate(SimConfig.fast(n, coordination=True)),
+        }
+    return out
+
+
+def test_fast_scaling_efficiency_decreases(fast_runs):
+    assert fast_runs[64]["base"].throughput / 64 \
+        < fast_runs[4]["base"].throughput / 4
+
+
+def test_fast_instability_grows_with_scale(fast_runs):
+    assert fast_runs[64]["base"].cv > fast_runs[4]["base"].cv
+
+
+def test_fast_coordination_helps_at_scale(fast_runs):
+    # At the truncated horizon the robust signature is the CV cut; the
+    # throughput win needs the full paper horizon (slow section above).
+    assert fast_runs[64]["coord"].cv < 0.8 * fast_runs[64]["base"].cv
+    assert fast_runs[64]["coord"].throughput \
+        > 0.95 * fast_runs[64]["base"].throughput
+
+
+def test_fast_records_feed_diagnostics(fast_runs):
+    rep = diagnose(fast_runs[64]["base"].per_rank_records())
+    assert rep.n_ranks == 64
+    assert {s.mode for s in rep.scores} == {
+        "sync_amplification", "fabric_contention", "locality_variance",
+        "runtime_jitter"}
 
 
 def test_simulator_deterministic_given_seed():

@@ -192,6 +192,7 @@ def test_wkv6_pallas_interpret(case, dtype):
                                atol=2e-2 if dtype == jnp.bfloat16 else 2e-4)
 
 
+@pytest.mark.slow
 def test_wkv6_chunked_grads_match_ref():
     B, S, H, K, V = 1, 24, 2, 8, 8
     r, k, v, w, u, s0 = wkv_inputs(B, S, H, K, V, seed=7)
@@ -276,6 +277,7 @@ def test_mamba_pallas_interpret(case):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_mamba_chunked_grads_match_ref():
     B, S, D, N = 1, 16, 8, 4
     x, dt, A, Bm, C, Dd, h0 = mamba_inputs(B, S, D, N, seed=11)

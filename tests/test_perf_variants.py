@@ -10,6 +10,10 @@ from repro.launch.steps import make_train_step
 from repro.models.api import build_model
 from repro.optim import init_opt_state
 
+# Microbatch/loss-chunk equivalence jits full train steps (tens of
+# seconds); default tier-1 excludes them, CI's slow job runs them.
+pytestmark = pytest.mark.slow
+
 
 def test_variant_parsing():
     cfg = get_model_config("qwen2-7b", smoke=True)

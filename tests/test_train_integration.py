@@ -11,6 +11,10 @@ from repro.launch.train import train
 from repro.launch.serve import generate
 
 
+# The three full train-loop runs below are the suite's heaviest individual
+# tests (~45 s combined); the generate tests keep the train/serve stack and
+# the sharding shim covered in default tier-1.
+@pytest.mark.slow
 def test_train_loss_decreases():
     res = train(arch="qwen2-7b", smoke=True, steps=30, seq_len=64,
                 global_batch=4, log_every=0, seed=0)
@@ -20,6 +24,7 @@ def test_train_loss_decreases():
     assert last < first - 0.1, (first, last)
 
 
+@pytest.mark.slow
 def test_train_checkpoint_resume_bitwise(tmp_path):
     """Train 10 steps straight vs 5 + restart + 5: identical loss stream."""
     kw = dict(arch="qwen2-vl-2b", smoke=True, seq_len=32, global_batch=2,
@@ -31,6 +36,7 @@ def test_train_checkpoint_resume_bitwise(tmp_path):
     np.testing.assert_allclose(resumed.losses, full.losses[5:], rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_train_summary_has_phase_breakdown():
     res = train(arch="rwkv6-3b", smoke=True, steps=6, seq_len=32,
                 global_batch=2, log_every=0)
