@@ -16,6 +16,8 @@ test-all:        ## everything
 bench-smoke:     ## the CI benchmark smoke sections
 	$(PY) -m benchmarks.run --only table1
 	$(PY) -m benchmarks.run --only multitenant
+	$(PY) -m benchmarks.run --only lifecycle
+	$(PY) -m benchmarks.run --only pacing
 
 bench:           ## all benchmark sections
 	$(PY) -m benchmarks.run

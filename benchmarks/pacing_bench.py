@@ -1,0 +1,104 @@
+"""Pacing-path speedup: vectorized PacingBank vs N scalar controllers.
+
+The ROADMAP flagged the coordination run as controller-bound: per rank per
+iteration the scalar path appends to three deques, sorts two windows, and
+sums three more. The engine now drives one :class:`PacingBank` per job
+(float-exact against the scalar controllers — held equal by
+``tests/test_coordination.py``), so this section shows the before/after:
+
+  * **micro** — a synthetic observe/decide stream through 64 scalar
+    controllers vs one 64-rank bank;
+  * **end-to-end** — ``SimConfig.paper(64, coordination=True)`` wall-clock
+    on the reference loop (scalar controllers) vs the engine (bank), next
+    to the coordination-off pair to isolate the controller share.
+"""
+from __future__ import annotations
+
+import random
+import time
+from typing import List
+
+import numpy as np
+
+from repro.configs.base import PacingConfig
+from repro.core.pacing import PacingBank, PacingController
+from repro.fabric import SimConfig, simulate
+from repro.fabric._reference import simulate_reference
+
+N_RANKS, ITERS = 64, 1000
+REPEATS = 3
+
+
+def _cfg() -> PacingConfig:
+    return PacingConfig(enabled=True, window=6, cv_threshold=0.05,
+                        skew_threshold=0.04, max_delay_frac=0.6, gain=0.85,
+                        decay=0.8, warmup_iters=8)
+
+
+def _stream(seed: int = 0):
+    rng = random.Random(seed)
+    for _ in range(ITERS):
+        yield ([abs(rng.gauss(0.01, 0.02)) for _ in range(N_RANKS)],
+               [0.2 + rng.gauss(0.0, 0.02) for _ in range(N_RANKS)])
+
+
+def _time_scalar() -> float:
+    ctrls = [PacingController(_cfg()) for _ in range(N_RANKS)]
+    t0 = time.perf_counter()
+    for waits, steps in _stream():
+        for r in range(N_RANKS):
+            ctrls[r].observe(waits[r], steps[r])
+            ctrls[r].decide()
+    return time.perf_counter() - t0
+
+
+def _time_bank() -> float:
+    bank = PacingBank(_cfg(), N_RANKS)
+    t0 = time.perf_counter()
+    for waits, steps in _stream():
+        bank.observe(np.asarray(waits), np.asarray(steps))
+        bank.decide()
+    return time.perf_counter() - t0
+
+
+def _best(fn) -> float:
+    return min(fn() for _ in range(REPEATS))
+
+
+def _best_sim(fn, cfg) -> float:
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        fn(cfg)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def rows() -> List[str]:
+    lines = ["-- micro: observe+decide for 64 ranks x 1000 iters --",
+             "path,ms,speedup_x"]
+    t_scalar = _best(_time_scalar)
+    t_bank = _best(_time_bank)
+    lines.append(f"scalar_controllers,{t_scalar * 1e3:.1f},1.00")
+    lines.append(f"pacing_bank,{t_bank * 1e3:.1f},"
+                 f"{t_scalar / t_bank:.2f}")
+
+    lines += ["", "-- end-to-end: paper(64) wall-clock, reference vs "
+              "engine --", "config,reference_ms,engine_ms,speedup_x"]
+    for coordination in (False, True):
+        cfg = SimConfig.paper(64, coordination=coordination)
+        t_ref = _best_sim(simulate_reference, cfg)
+        t_new = _best_sim(simulate, cfg)
+        label = "coordination" if coordination else "baseline"
+        lines.append(f"{label},{t_ref * 1e3:.1f},{t_new * 1e3:.1f},"
+                     f"{t_ref / t_new:.2f}")
+    return lines
+
+
+def main() -> None:
+    for ln in rows():
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,9 @@
   scaling     — paper Fig. 1/5 (observed vs ideal curves + CVs)
   taxonomy    — paper Fig. 2 / §3.3 (failure-mode attribution)
   multitenant — §3.2/§3.3 co-tenant contention + placement sweeps (engine)
+  lifecycle   — event-driven scenarios: arrivals, failure recovery,
+                max-min vs offered-bytes fairness (lifecycle engine)
+  pacing      — vectorized PacingBank vs scalar controllers (before/after)
   speedup     — compiled-schedule engine vs seed per-call loop wall-clock
   kernels     — substrate kernel micro-benchmarks
   roofline    — per-cell roofline terms from the dry-run artifacts
@@ -22,7 +25,8 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     choices=["table1", "scaling", "taxonomy", "multitenant",
-                             "speedup", "kernels", "roofline"])
+                             "lifecycle", "pacing", "speedup", "kernels",
+                             "roofline"])
     args = ap.parse_args()
 
     sections = []
@@ -43,6 +47,14 @@ def main() -> None:
         from benchmarks import multitenant
         sections.append(("multitenant (paper §3.2/§3.3, shared-fabric "
                          "engine)", multitenant.rows))
+    if args.only in (None, "lifecycle"):
+        from benchmarks import lifecycle
+        sections.append(("lifecycle (event-driven tenant scenarios)",
+                         lifecycle.rows))
+    if args.only in (None, "pacing"):
+        from benchmarks import pacing_bench
+        sections.append(("pacing (vectorized bank vs scalar controllers)",
+                         pacing_bench.rows))
     if args.only in (None, "speedup"):
         from benchmarks import engine_speedup
         sections.append(("engine_speedup (compiled schedules vs seed loop)",

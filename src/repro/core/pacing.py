@@ -24,6 +24,8 @@ import math
 from collections import deque
 from typing import Deque, Optional
 
+import numpy as np
+
 from repro.configs.base import PacingConfig
 
 
@@ -42,7 +44,10 @@ def _cv(xs) -> float:
     mean = sum(xs) / n
     if mean <= 0:
         return 0.0
-    var = sum((x - mean) ** 2 for x in xs) / n
+    # (x - mean) * (x - mean), not ** 2: multiplication is a single correctly
+    # rounded operation on every platform, so the vectorized PacingBank can
+    # reproduce these floats exactly without depending on libm's pow.
+    var = sum((x - mean) * (x - mean) for x in xs) / n
     return math.sqrt(var) / mean
 
 
@@ -136,3 +141,116 @@ class PacingController:
         self._steps.clear()
         self._delay = 0.0
         self._seen = 0
+
+
+class PacingBank:
+    """All of a job's per-rank controllers, vectorized across ranks.
+
+    The fabric engine steps every rank of a job in lockstep, so the N
+    per-rank :class:`PacingController` calls per iteration (deque appends,
+    two sorts, three window sums — the coordination run is controller-bound)
+    collapse into one ``observe``/``decide`` pair over ``(n_ranks, window)``
+    arrays.
+
+    The bank is **float-exact** against N scalar controllers fed the same
+    observations (``tests/test_coordination.py`` holds them equal): window
+    sums accumulate column-by-column left to right (Python ``sum()`` order —
+    never a numpy axis-reduction, whose pairwise summation rounds
+    differently for window >= 8), medians index sorted rows with the scalar
+    ``_median`` formula, and the delay update replicates the scalar branch
+    structure with masks. This is what lets the engine keep its bit-equality
+    contract with the per-rank reference loop while dropping the per-rank
+    Python overhead (``benchmarks.run --only pacing``).
+    """
+
+    def __init__(self, cfg: PacingConfig, n_ranks: int):
+        self.cfg = cfg
+        self.n = n_ranks
+        w = cfg.window
+        self._w = w
+        self._bw = np.zeros((n_ranks, w))   # waits
+        self._be = np.zeros((n_ranks, w))   # earliness = wait + delay
+        self._bs = np.zeros((n_ranks, w))   # step times
+        self._pos = 0                       # next write column
+        self._count = 0                     # filled columns (<= window)
+        self._delay = np.zeros(n_ranks)     # unbounded internal delay state
+        self._seen = 0
+        self.activations = np.zeros(n_ranks, dtype=np.int64)
+
+    # -- observation -------------------------------------------------------
+    def observe(self, wait_times: np.ndarray, step_times: np.ndarray) -> None:
+        """One iteration's observations for every rank at once."""
+        pos = self._pos
+        w = np.maximum(0.0, wait_times)
+        self._bw[:, pos] = w
+        self._be[:, pos] = w + self._delay
+        self._bs[:, pos] = np.maximum(0.0, step_times)
+        self._pos = (pos + 1) % self._w
+        if self._count < self._w:
+            self._count += 1
+        self._seen += 1
+
+    def _window(self, buf: np.ndarray) -> np.ndarray:
+        """The rolling window in deque order (oldest -> newest)."""
+        if self._count < self._w:
+            return buf[:, :self._count]
+        if self._pos == 0:
+            return buf
+        idx = np.arange(self._w)
+        idx = (idx + self._pos) % self._w
+        return buf[:, idx]
+
+    @staticmethod
+    def _rowsum(a: np.ndarray) -> np.ndarray:
+        # Left-to-right accumulation per row: bit-equal to Python's sum()
+        # over the deque for any window length.
+        s = a[:, 0].copy()
+        for j in range(1, a.shape[1]):
+            s += a[:, j]
+        return s
+
+    @staticmethod
+    def _rowmedian(sorted_rows: np.ndarray) -> np.ndarray:
+        c = sorted_rows.shape[1]
+        if c % 2:
+            return sorted_rows[:, c // 2]
+        return 0.5 * (sorted_rows[:, c // 2 - 1] + sorted_rows[:, c // 2])
+
+    # -- decision ----------------------------------------------------------
+    def decide(self) -> np.ndarray:
+        """Bounded per-rank delays (same values as N scalar ``decide()``)."""
+        cfg = self.cfg
+        if not cfg.enabled or self._seen < cfg.warmup_iters \
+                or self._count < 2:
+            return np.zeros(self.n)
+
+        waits = self._window(self._bw)
+        c = waits.shape[1]
+        mean = self._rowsum(waits) / c
+        dev = waits - mean[:, None]
+        var = self._rowsum(dev * dev) / c
+        mean_pos = mean > 0
+        cv_wait = np.where(
+            mean_pos, np.sqrt(var) / np.where(mean_pos, mean, 1.0), 0.0)
+
+        med_wait = self._rowmedian(np.sort(waits, axis=1))
+        med_step = self._rowmedian(np.sort(self._window(self._bs), axis=1))
+        own_wait = waits[:, -1]
+        min_early = self._window(self._be).min(axis=1)
+
+        step_pos = med_step > 0
+        safe_step = np.where(step_pos, med_step, 1.0)
+        rel_med = np.where(step_pos, med_wait / safe_step, 0.0)
+        rel_last = np.where(step_pos, own_wait / safe_step, 0.0)
+
+        imbalanced = (rel_med > cfg.skew_threshold) | \
+            ((cv_wait > cfg.cv_threshold) & (rel_last > cfg.skew_threshold))
+        active = imbalanced & (min_early > 0)
+
+        decayed = self._delay * cfg.decay
+        decayed[decayed < 1e-6 * np.maximum(med_step, 1e-9)] = 0.0
+        self._delay = np.where(active, cfg.gain * min_early, decayed)
+        self.activations += active
+
+        bound = cfg.max_delay_frac * med_step
+        return np.minimum(self._delay, bound)

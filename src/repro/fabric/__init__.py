@@ -6,13 +6,19 @@ from repro.fabric.collectives import (CollectiveCost,              # noqa: F401
                                       CompiledSchedule, all_reduce,
                                       compile_schedule,
                                       hierarchical_all_reduce,
-                                      ring_all_reduce, tree_all_reduce)
+                                      ring_all_reduce, select_algo,
+                                      tree_all_reduce)
 from repro.fabric.congestion import (CongestionConfig,             # noqa: F401
-                                     CongestionModel)
-from repro.fabric.engine import (EngineResult, FabricEngine,       # noqa: F401
-                                 JobResult, JobSpec)
+                                     CongestionModel, maxmin_shares)
+from repro.fabric.engine import (FAIRNESS_MODES, EngineResult,     # noqa: F401
+                                 FabricEngine, JobResult, JobSpec)
+from repro.fabric.events import (Arrival, Departure,               # noqa: F401
+                                 LifecycleEngine, LifecycleResult,
+                                 NodeFailure)
 from repro.fabric.placement import (POLICIES, place,               # noqa: F401
                                     spanning_groups)
+from repro.fabric.workloads import (InferenceSpec, InferenceTenant,  # noqa: F401,E501
+                                    Tenant, TrainingTenant)
 from repro.fabric.simulator import (SimConfig, SimResult,          # noqa: F401
                                     efficiency_curve, job_spec_from,
                                     simulate)

@@ -14,7 +14,7 @@ bend the curve well before link peak is reached.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.fabric.topology import Topology
 
@@ -399,3 +399,37 @@ def compile_schedule(topo: Topology, ranks: Sequence[int], nbytes: float, *,
         return _TreeSchedule(topo, ranks, nbytes)
     raise KeyError(f"unknown collective algo {algo!r}; "
                    f"one of ('ring', 'tree', 'hierarchical')")
+
+
+AUTO_CANDIDATES = ("ring", "tree", "hierarchical")
+
+
+def select_algo(topo: Topology, ranks: Sequence[int], nbytes: float, *,
+                group: int = 0,
+                candidates: Sequence[str] = AUTO_CANDIDATES,
+                ) -> Tuple[str, CompiledSchedule]:
+    """Pick the all-reduce schedule for this placement by measuring, not
+    guessing: compile every candidate and rank them by uncongested duration,
+    breaking ties by how many bytes the schedule exposes to the shared
+    (oversubscribed) tier — the compiled schedules' per-link byte exposure
+    is exactly the data the engine already has at (re)placement time.
+
+    ``group=0`` resolves the hierarchical group to the topology's locality
+    group (nodes per leaf / ranks per pod), so "hierarchical" means "keep
+    the oversubscribed tier at bytes/leaf-group" for the fabric at hand.
+
+    Returns ``(algo, schedule)``. Deterministic: candidate order breaks any
+    remaining tie.
+    """
+    from repro.fabric.placement import group_size
+    g = group or group_size(topo)
+    best = None
+    for algo in candidates:
+        sched = compile_schedule(topo, ranks, nbytes, algo=algo, group=g)
+        shared_bytes = sum(
+            b for ln, b in sched.bytes_per_call(None).items()
+            if topo.link(ln).shared)
+        key = (sched.total_s(None), shared_bytes)
+        if best is None or key < best[0]:
+            best = (key, algo, sched)
+    return best[1], best[2]

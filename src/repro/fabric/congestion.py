@@ -18,15 +18,78 @@ Two coupled effects on every *shared* (oversubscribed) link:
 
 Queueing delay on a shared link additionally follows an M/M/1-style
 ``u/(1-u)`` term on the link latency.
+
+Co-tenant bandwidth sharing on a contended link is resolved by
+:func:`maxmin_shares` (progressive-filling max-min fairness — the behavior
+of per-flow fair queueing, and what TCP-like transports approximate), with
+the engine's original offered-bytes proportional split kept behind the
+``fairness="offered"`` switch.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import random
-from typing import Dict
+from typing import Dict, List, Sequence, Tuple
 
 from repro.fabric.topology import Topology
+
+
+def maxmin_shares(demands: Sequence[float], capacity: float = 1.0
+                  ) -> List[float]:
+    """Progressive-filling max-min fair allocation of one link's capacity.
+
+    ``demands[j]`` is flow j's rate demand in the same units as
+    ``capacity``. Flows are filled in increasing-demand order; at each turn
+    a flow receives ``min(demand, remaining / flows_left)``, so unused
+    headroom from small flows is redistributed to larger ones. Properties
+    (held by ``tests/test_fairness.py``):
+
+      * no flow exceeds its demand;
+      * the link saturates iff total demand >= capacity
+        (``sum(alloc) == min(capacity, sum(demands))``);
+      * no flow is starved below its bottleneck share
+        ``min(demand, capacity / n_flows)`` — the delta versus the
+        offered-bytes split, which scales shares by byte volume and can
+        starve small flows next to heavy ones;
+      * equal demands split capacity equally (offered-bytes equivalence for
+        symmetric flows).
+    """
+    n = len(demands)
+    alloc = [0.0] * n
+    if n == 0:
+        return alloc
+    remaining = capacity
+    order = sorted(range(n), key=demands.__getitem__)
+    for pos, j in enumerate(order):
+        fair = remaining / (n - pos)
+        give = demands[j] if demands[j] < fair else fair
+        alloc[j] = give
+        remaining -= give
+    return alloc
+
+
+def offered_share(own_bytes: float, d_i: float,
+                  flows: Sequence[Tuple[float, float]]) -> float:
+    """Offered-bytes proportional share of one link for a collective of
+    duration ``d_i``: each co-tenant flow ``(overlap_s, offered_bytes)``
+    contributes its bytes scaled by how much of the window it overlaps;
+    the owner keeps ``own / total``. Shared by both engines so the model
+    cannot fork."""
+    total = own_bytes
+    for ov, b in flows:
+        total += b if ov >= d_i else (ov / d_i) * b
+    return own_bytes / total if total > own_bytes else 1.0
+
+
+def maxmin_share(d_i: float, owner_overlaps: Sequence[float]) -> float:
+    """Max-min share of one link for a collective of duration ``d_i``:
+    every co-tenant is one flow whose rate demand is the fraction of the
+    window its traffic occupies (aggregated per owner, capped at the full
+    window); the owner demands the whole link and receives its
+    progressive-filling allocation."""
+    demands = [1.0] + [min(1.0, ov / d_i) for ov in owner_overlaps]
+    return maxmin_shares(demands)[0]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -18,8 +18,19 @@ setup, so the per-iteration cost under a fresh congestion state is a short
 loop over links instead of a re-walk of every ring hop. Background (non-job)
 cross traffic remains the AR(1) :class:`CongestionModel`; *modeled* jobs
 additionally contend with each other explicitly: when two jobs' collectives
-overlap in time on a shared link, the link's effective bandwidth is
-partitioned between them in proportion to offered bytes.
+overlap in time on a shared link, the link's effective bandwidth is split
+between them by progressive-filling **max-min fairness** over the
+overlapping flows (``fairness="maxmin"``, the default — per-flow fair
+queueing behavior, no flow starved below its bottleneck share) or in
+proportion to offered bytes (``fairness="offered"``, the original model,
+kept for comparison; ``benchmarks.run --only multitenant`` tables both).
+
+Dynamic tenant populations — jobs arriving at t > 0, failing, departing,
+and mixing with open-loop inference traffic — are the event-driven
+:class:`repro.fabric.events.LifecycleEngine`, which drives the same
+compiled schedules, congestion state, and fairness allocator from a
+virtual-clock event timeline. This engine remains the fixed-population
+lockstep stepper whose single-job path is the bit-equal executable spec.
 
 Iteration order per simulated step (identical to the seed loop when N = 1,
 so ``simulate()`` step-time series are bit-equal to the executable spec in
@@ -46,14 +57,19 @@ import dataclasses
 import statistics
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import PacingConfig
 from repro.core.instrumentation import IterationRecord
-from repro.core.pacing import PacingController
-from repro.fabric.collectives import CompiledSchedule, compile_schedule
-from repro.fabric.congestion import CongestionConfig, CongestionModel
+from repro.core.pacing import PacingBank
+from repro.fabric.collectives import compile_schedule, select_algo
+from repro.fabric.congestion import (CongestionConfig, CongestionModel,
+                                     maxmin_share, offered_share)
 from repro.fabric.placement import place, spanning_groups
 from repro.fabric.stragglers import ComputeModel, StragglerConfig
 from repro.fabric.topology import Topology
+
+FAIRNESS_MODES = ("maxmin", "offered")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +78,7 @@ class JobSpec:
     name: str
     n_ranks: int
     grad_bytes: float = 1.1e9
-    algo: str = "ring"
+    algo: str = "ring"                # "ring"|"tree"|"hierarchical"|"auto"
     group: int = 0                    # hierarchical group size (0 = default)
     samples_per_rank: int = 64
     placement: str = "compact"        # policy name (repro.fabric.placement)
@@ -74,6 +90,11 @@ class JobSpec:
     # Seed-simulator compatibility: the legacy loop derived the ECMP span
     # from ceil(n / nodes_per_leaf) regardless of actual placement.
     spanning_override: Optional[int] = None
+    # Lifecycle-engine fields (repro.fabric.events): depart after this many
+    # completed steps (None = run until the horizon), and the model-parallel
+    # width the elastic re-mesh plan must keep intact after a node failure.
+    iters: Optional[int] = None
+    model_parallel: int = 1
 
 
 def _materialize_records(trace, n: int) -> List[List[IterationRecord]]:
@@ -99,10 +120,11 @@ class JobResult:
 
     def __init__(self, spec: JobSpec, nodes: List[int],
                  step_times: List[float], link_bytes: Dict[str, float],
-                 trace: list):
+                 trace: list, algo: Optional[str] = None):
         self.spec = spec
         self.name = spec.name
         self.nodes = nodes
+        self.algo = algo if algo is not None else spec.algo
         self.step_times = step_times
         self.link_bytes = link_bytes
         self._trace = trace
@@ -149,9 +171,9 @@ class EngineResult:
 class _JobRuntime:
     """Mutable per-job state owned by the engine loop."""
 
-    __slots__ = ("spec", "n", "nodes", "cm", "controllers", "schedule",
+    __slots__ = ("spec", "n", "nodes", "cm", "bank", "algo", "schedule",
                  "spanning", "floor_denom", "shared_demand", "release",
-                 "release_list", "prev_finish", "step_times", "link_totals",
+                 "release_arr", "prev_finish", "step_times", "link_totals",
                  "trace", "compute", "arrival", "first", "last", "skew",
                  "eff", "dur")
 
@@ -162,11 +184,16 @@ class _JobRuntime:
         self.nodes = nodes
         self.cm = ComputeModel(spec.stragglers, spec.n_ranks,
                                seed=compute_seed)
-        self.controllers = [PacingController(spec.pacing)
-                            for _ in range(spec.n_ranks)] \
+        self.bank = PacingBank(spec.pacing, spec.n_ranks) \
             if spec.pacing is not None else None
-        self.schedule: CompiledSchedule = compile_schedule(
-            topo, nodes, spec.grad_bytes, algo=spec.algo, group=spec.group)
+        if spec.algo == "auto":
+            self.algo, self.schedule = select_algo(
+                topo, nodes, spec.grad_bytes, group=spec.group)
+        else:
+            self.algo = spec.algo
+            self.schedule = compile_schedule(
+                topo, nodes, spec.grad_bytes, algo=spec.algo,
+                group=spec.group)
         self.spanning = spec.spanning_override \
             if spec.spanning_override is not None \
             else spanning_groups(topo, nodes)
@@ -179,8 +206,8 @@ class _JobRuntime:
             if topo.link(ln).shared}
         # scalar release clock while no pacing delay differentiates ranks
         self.release = 0.0
-        self.release_list = [0.0] * spec.n_ranks \
-            if self.controllers is not None else None
+        self.release_arr = np.zeros(spec.n_ranks) \
+            if self.bank is not None else None
         self.prev_finish = 0.0
         self.step_times: List[float] = []
         self.link_totals: Dict[str, float] = {}
@@ -192,9 +219,13 @@ class FabricEngine:
 
     def __init__(self, topo: Topology, jobs: Sequence[JobSpec], *,
                  congestion: Optional[CongestionConfig] = None,
-                 base_seed: int = 0):
+                 base_seed: int = 0, fairness: str = "maxmin"):
+        if fairness not in FAIRNESS_MODES:
+            raise KeyError(f"unknown fairness mode {fairness!r}; "
+                           f"one of {FAIRNESS_MODES}")
         self.topo = topo
         self.base_seed = base_seed
+        self.fairness = fairness
         self.congestion = CongestionModel(
             congestion if congestion is not None else CongestionConfig(),
             topo, seed=base_seed + 2)
@@ -235,12 +266,19 @@ class FabricEngine:
         (same-round contention) and the recorded busy **segments** of their
         past collectives (BSP clocks drift apart, so a fast job steps many
         times inside one long co-tenant collective — the segment keeps that
-        link occupied across those rounds). Demand is weighted by overlap
-        fraction; job i keeps ``own / total`` of the link (offered-bytes
-        proportional share), stacked on the background congestion derate.
+        link occupied across those rounds).
+
+        ``fairness="offered"`` weights demand by overlap-scaled offered
+        bytes; job i keeps ``own / total`` of the link. ``fairness="maxmin"``
+        (default) treats every overlapping co-tenant as one flow whose rate
+        demand is the fraction of job i's window it occupies, and gives job
+        i its progressive-filling max-min share (:func:`maxmin_shares`) —
+        small flows are never starved below their bottleneck share by heavy
+        co-tenants. Either share stacks on the background congestion derate.
         """
         jobs = self._jobs
         segments = self._segments
+        offered = self.fairness == "offered"
         spans = [(jr.last, jr.last + d0) for jr, d0 in zip(jobs, durs0)]
         effs: List[Dict[str, float]] = []
         for i, jr in enumerate(jobs):
@@ -249,7 +287,12 @@ class FabricEngine:
             adj: Optional[Dict[str, float]] = None
             if d_i > 0.0:
                 for ln, own in jr.shared_demand.items():
-                    total = own
+                    # co-tenant flows overlapping job i's window: tentative
+                    # same-round collectives, then recorded past segments
+                    # — offered weights each flow by its bytes; max-min
+                    # aggregates activity per owner (capped at the window)
+                    flows: List[Tuple[float, float]] = []
+                    activity: Dict[int, float] = {}
                     for k, other in enumerate(jobs):
                         if k == i:
                             continue
@@ -257,20 +300,24 @@ class FabricEngine:
                         if not d_k:
                             continue
                         ov = min(e_i, spans[k][1]) - max(s_i, spans[k][0])
-                        if ov <= 0.0:
-                            continue
-                        total += d_k if ov >= d_i else (ov / d_i) * d_k
+                        if ov > 0.0:
+                            flows.append((ov, d_k))
+                            activity[k] = activity.get(k, 0.0) + ov
                     for (s_k, e_k, d_k, k) in segments.get(ln, ()):
                         if k == i:
                             continue
                         ov = min(e_i, e_k) - max(s_i, s_k)
-                        if ov <= 0.0:
-                            continue
-                        total += d_k if ov >= d_i else (ov / d_i) * d_k
-                    if total > own:
+                        if ov > 0.0:
+                            flows.append((ov, d_k))
+                            activity[k] = activity.get(k, 0.0) + ov
+                    if not flows:
+                        continue
+                    share = offered_share(own, d_i, flows) if offered \
+                        else maxmin_share(d_i, list(activity.values()))
+                    if share < 1.0:
                         if adj is None:
                             adj = dict(jr.eff)
-                        adj[ln] = jr.eff[ln] * (own / total)
+                        adj[ln] = jr.eff[ln] * share
             effs.append(adj if adj is not None else jr.eff)
         return effs
 
@@ -314,19 +361,19 @@ class FabricEngine:
             for jr in jobs:
                 compute = jr.cm.sample()
                 jr.compute = compute
-                if jr.release_list is None:
+                if jr.release_arr is None:
                     rel = jr.release
                     # addition is weakly monotone, so the extremes of
                     # (rel + c) are rel + extremes of c, bit-exactly
                     jr.first = rel + min(compute)
                     jr.last = rel + max(compute)
                 else:
-                    rel_list = jr.release_list
-                    arrival = [rel_list[r] + compute[r]
-                               for r in range(jr.n)]
+                    # elementwise add == the scalar rel[r] + compute[r];
+                    # ndarray min/max pick the same floats as Python's
+                    arrival = jr.release_arr + np.asarray(compute)
                     jr.arrival = arrival
-                    jr.first = min(arrival)
-                    jr.last = max(arrival)
+                    jr.first = float(arrival.min())
+                    jr.last = float(arrival.max())
                 jr.skew = (jr.last - jr.first) / jr.floor_denom
 
             # 2. background congestion advances once per fabric step
@@ -360,30 +407,27 @@ class FabricEngine:
                 if t >= warmup:
                     jr.step_times.append(step)
 
-                if jr.controllers is None:
+                if jr.bank is None:
                     jr.trace.append((jr.compute, jr.last, finish,
                                      jr.release, jr.dur, None))
                     jr.release = finish
                 else:
-                    rel_list = jr.release_list
-                    rel_snapshot = tuple(rel_list)
+                    # one vectorized observe/decide for the whole job; the
+                    # bank is float-exact against per-rank controllers, so
+                    # the reference-equality contract survives
+                    rel_arr = jr.release_arr
+                    rel_snapshot = tuple(rel_arr.tolist())
                     arrival = jr.arrival
-                    last = jr.last
-                    delays = []
-                    controllers = jr.controllers
-                    for r in range(jr.n):
-                        ctrl = controllers[r]
-                        ctrl.observe(last - arrival[r],
-                                     finish - rel_list[r])
-                        delay = ctrl.decide().delay
-                        delays.append(delay)
-                        rel_list[r] = finish + delay
-                    jr.trace.append((jr.compute, last, finish,
-                                     rel_snapshot, jr.dur, delays))
+                    jr.bank.observe(jr.last - arrival, finish - rel_arr)
+                    delays = jr.bank.decide()
+                    jr.release_arr = finish + delays
+                    jr.trace.append((jr.compute, jr.last, finish,
+                                     rel_snapshot, jr.dur, delays.tolist()))
                 jr.prev_finish = finish
 
         results = [JobResult(jr.spec, jr.nodes, jr.step_times,
-                             jr.link_totals, jr.trace) for jr in jobs]
+                             jr.link_totals, jr.trace, algo=jr.algo)
+                   for jr in jobs]
         if not multi:
             fabric_totals = dict(results[0].link_bytes)
         return EngineResult(topo=self.topo, jobs=results,

@@ -1,0 +1,459 @@
+"""Event-driven tenant lifecycle engine: the step from "N static jobs" to
+"a cluster with a schedule".
+
+:class:`~repro.fabric.engine.FabricEngine` steps a fixed population of
+training jobs that all start at t = 0 and never change. The paper's failure
+modes, though, emerge from *dynamic* sharing: jobs arriving while an
+incumbent holds the fabric, nodes failing mid-run, and bursty
+latency-sensitive inference fleets mixing with BSP training on the same
+oversubscribed links. :class:`LifecycleEngine` drives that dynamics from a
+**virtual-clock event timeline**:
+
+  * :class:`Arrival` events admit tenants (training
+    :class:`~repro.fabric.engine.JobSpec` or open-loop inference
+    :class:`~repro.fabric.workloads.InferenceSpec`) at any virtual time,
+    placing them on the free-node pool with their placement policy; when
+    the pool cannot host an arrival it blocks and retries as soon as
+    capacity frees up.
+  * :class:`NodeFailure` events kill nodes. The owning tenant's
+    :class:`~repro.ft.failure.FailureDetector` — running on the engine's
+    *virtual clock*, threaded explicitly — notices when the silent node's
+    heartbeat timeout expires; the tenant then releases its nodes back to
+    the pool, shrinks by its elastic plan
+    (:func:`repro.ft.failure.plan_elastic_mesh` keeps the model-parallel
+    width intact), re-places on surviving nodes, and re-compiles its
+    collective schedule (re-running ``algo="auto"`` selection for the new
+    placement) — mid-run, without touching other tenants.
+  * :class:`Departure` events (or ``JobSpec.iters``) retire tenants and
+    return their nodes.
+
+Between events, the engine resolves tenants' collectives in global
+window-start order. Each tenant owns an independent background-congestion
+AR(1) stream (seeded per tenant), so *modeled* co-tenants interact only
+through the explicit flow-contention model: progressive-filling **max-min
+fairness** over the flows overlapping a collective's window
+(:func:`repro.fabric.congestion.maxmin_shares`; ``fairness="offered"``
+keeps the PR-1 offered-bytes split for comparison). That isolation is a
+testable property: a tenant's step-time series is bit-identical whether or
+not a co-tenant runs on disjoint links, and degrades exactly while a
+co-tenant's collectives overlap its own on shared links. Same seed + same
+event list => bit-identical series, including across a mid-run failure and
+re-placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.fabric.congestion import (CongestionConfig, CongestionModel,
+                                     maxmin_share, offered_share)
+from repro.fabric.engine import FAIRNESS_MODES, JobSpec
+from repro.fabric.placement import place
+from repro.fabric.topology import Topology
+from repro.fabric.workloads import (InferenceSpec, InferenceTenant, Tenant,
+                                    TrainingTenant)
+from repro.ft.failure import HeartbeatConfig, simulated_clock_scope
+
+TenantSpec = Union[JobSpec, InferenceSpec]
+
+
+# ---------------------------------------------------------------------------
+# timeline events
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """A tenant enters the cluster at virtual time ``t``."""
+    t: float
+    spec: TenantSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Departure:
+    """The named tenant retires at virtual time ``t``."""
+    t: float
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFailure:
+    """Node ``node`` dies at virtual time ``t`` and never comes back."""
+    t: float
+    node: int
+
+
+Event = Union[Arrival, Departure, NodeFailure]
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+
+class LifecycleResult:
+    """Outcome of one lifecycle run: tenant runtimes plus the event log."""
+
+    def __init__(self, topo: Topology, tenants: List[Tenant],
+                 log: List[Tuple[float, str, str]],
+                 link_bytes: Dict[str, float], horizon: float):
+        self.topo = topo
+        self.tenants = tenants
+        self.log = log
+        self.link_bytes = link_bytes
+        self.horizon = horizon
+
+    def tenant(self, name: str) -> Tenant:
+        for t in self.tenants:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+    @property
+    def training(self) -> List[TrainingTenant]:
+        return [t for t in self.tenants if t.kind == "training"]
+
+    @property
+    def inference(self) -> List[InferenceTenant]:
+        return [t for t in self.tenants if t.kind == "inference"]
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+class LifecycleEngine:
+    """Steps a dynamic tenant population on one topology (virtual clock)."""
+
+    def __init__(self, topo: Topology, events: Sequence[Event], *,
+                 congestion: Optional[CongestionConfig] = None,
+                 heartbeat: Optional[HeartbeatConfig] = None,
+                 fairness: str = "maxmin",
+                 replan_delay_s: float = 0.5,
+                 base_seed: int = 0):
+        if fairness not in FAIRNESS_MODES:
+            raise KeyError(f"unknown fairness mode {fairness!r}; "
+                           f"one of {FAIRNESS_MODES}")
+        self.topo = topo
+        self.fairness = fairness
+        self.congestion_cfg = congestion if congestion is not None \
+            else CongestionConfig()
+        # simulated steps are ~0.2 s, so the wall-clock-scale defaults of
+        # HeartbeatConfig would stall a failed job for simulated minutes
+        self.heartbeat = heartbeat if heartbeat is not None \
+            else HeartbeatConfig(interval_s=0.2, timeout_s=1.0)
+        self.replan_delay_s = replan_delay_s
+        self.base_seed = base_seed
+        self._timeline: List[Tuple[float, int, Event]] = sorted(
+            (ev.t, i, ev) for i, ev in enumerate(events))
+        self._now = 0.0
+        self._active: List[Tenant] = []
+        self._finished: List[Tenant] = []
+        self._blocked: List[TenantSpec] = []
+        self._taken: Dict[int, str] = {}          # node -> tenant name
+        self._dead: set = set()
+        # per shared link: (start, end, demand_bytes, owner_name) windows
+        self._segments: Dict[str, list] = {}
+        self._log: List[Tuple[float, str, str]] = []
+        self.link_bytes: Dict[str, float] = {}
+        self._tenant_seq = 0
+        self._ran = False
+
+    # the virtual clock every FailureDetector consumes
+    def _clock(self) -> float:
+        return self._now
+
+    def _record(self, kind: str, detail: str) -> None:
+        self._log.append((self._now, kind, detail))
+
+    # -- admission ---------------------------------------------------------
+    def _admit(self, spec: TenantSpec) -> None:
+        n = spec.n_ranks
+        blocked_free = set(self._taken) | self._dead
+        if spec.nodes is not None:
+            nodes = list(spec.nodes)
+            if len(set(nodes)) != n:
+                raise ValueError(
+                    f"tenant {spec.name!r}: needs {n} distinct nodes, got "
+                    f"{nodes}")
+            dead = self._dead.intersection(nodes)
+            if dead:
+                # pinned to nodes that will never come back: reject
+                self._record("rejected",
+                             f"{spec.name}: pinned nodes {sorted(dead)} "
+                             f"are dead")
+                return
+            taken = set(self._taken).intersection(nodes)
+            if taken:
+                # pinned nodes owned by a co-tenant: wait for them
+                self._blocked.append(spec)
+                self._record("blocked",
+                             f"{spec.name}: pinned nodes {sorted(taken)} "
+                             f"are taken")
+                return
+        else:
+            try:
+                nodes = place(spec.placement, self.topo, n,
+                              taken=blocked_free,
+                              seed=self.base_seed + 101 * self._tenant_seq)
+            except ValueError:
+                self._blocked.append(spec)
+                self._record("blocked",
+                             f"{spec.name}: no capacity for {n} ranks")
+                return
+        seed = spec.seed if spec.seed is not None \
+            else self.base_seed + 1 + 1009 * self._tenant_seq
+        if isinstance(spec, JobSpec):
+            tenant: Tenant = TrainingTenant(spec, seed)
+        else:
+            tenant = InferenceTenant(spec, seed)
+        # per-tenant background congestion stream: co-tenants interact only
+        # through the explicit contention model, so a tenant's series is
+        # independent of who shares the fabric on *disjoint* links
+        tenant.congestion = CongestionModel(
+            self.congestion_cfg, self.topo,
+            seed=self.base_seed + 2 + 1013 * self._tenant_seq)
+        self._tenant_seq += 1
+        for nd in nodes:
+            self._taken[nd] = spec.name
+        tenant.place(self.topo, nodes, self._now, self._clock,
+                     self.heartbeat)
+        tenant.prepare()
+        self._active.append(tenant)
+        self._record("arrival",
+                     f"{spec.name} ({tenant.kind}) on nodes {nodes} "
+                     f"algo={tenant.algo}")
+
+    def _free_nodes(self, tenant: Tenant) -> None:
+        for nd in tenant.nodes:
+            if self._taken.get(nd) == tenant.name:
+                del self._taken[nd]
+
+    def _retry_blocked(self) -> None:
+        blocked, self._blocked = self._blocked, []
+        for spec in blocked:
+            self._admit(spec)
+
+    def _depart(self, tenant: Tenant, t: float, why: str) -> None:
+        tenant.departed_t = t
+        tenant.pending_start = None
+        self._free_nodes(tenant)
+        self._active.remove(tenant)
+        self._finished.append(tenant)
+        self._record("departure", f"{tenant.name}: {why}")
+        self._retry_blocked()
+
+    # -- events ------------------------------------------------------------
+    def _apply_event(self, ev: Event) -> None:
+        if isinstance(ev, Arrival):
+            self._admit(ev.spec)
+        elif isinstance(ev, Departure):
+            for tenant in list(self._active):
+                if tenant.name == ev.name:
+                    self._depart(tenant, ev.t, "scheduled departure")
+                    return
+            # a tenant still waiting for capacity retires from the queue —
+            # otherwise a late admission would outlive its own departure
+            for spec in self._blocked:
+                if spec.name == ev.name:
+                    self._blocked.remove(spec)
+                    self._record("departure",
+                                 f"{ev.name}: departed while blocked")
+                    return
+            self._record("departure_noop", f"{ev.name} not active")
+        elif isinstance(ev, NodeFailure):
+            self._dead.add(ev.node)
+            owner = self._taken.get(ev.node, None)
+            self._record("failure",
+                         f"node {ev.node} died"
+                         + (f" (owned by {owner})" if owner else " (idle)"))
+        else:
+            raise TypeError(f"unknown event {ev!r}")
+
+    # -- failure recovery --------------------------------------------------
+    def _recover(self, tenant: Tenant, dead: List[int]) -> None:
+        """A tenant hit the barrier with dead ranks: it stalls until its
+        FailureDetector times the silent nodes out (virtual clock), then
+        releases its nodes, shrinks by its elastic plan, re-places, and
+        re-compiles its schedule."""
+        det = tenant.detector
+        hb = self.heartbeat
+        # the silent node is suspected one monitoring tick after its
+        # timeout window expires — but never before the engine clock,
+        # which has already passed the failure event itself (a tenant
+        # whose step outlasts the heartbeat window would otherwise log a
+        # detection timestamped before the node died)
+        t_detect = max(det.last_seen[nd] for nd in dead) \
+            + hb.timeout_s + hb.interval_s
+        t_detect = max(t_detect, self._now)
+        self._now = max(self._now, t_detect)
+        suspected = set(det.suspected())
+        assert suspected.intersection(dead), \
+            "virtual clock passed the timeout; detector must agree"
+        tenant.recovery.record(
+            "failure", step=getattr(tenant, "iters_done", 0),
+            detail=f"nodes {sorted(dead)} detected t={t_detect:.3f}")
+        self._record("detected",
+                     f"{tenant.name} lost nodes {sorted(dead)}")
+        self._free_nodes(tenant)
+        survivors = len(tenant.nodes) - len(dead)
+        new_n = tenant.shrink_plan(survivors)
+        if new_n < 2:
+            self._depart(tenant, self._now, "too few survivors")
+            return
+        try:
+            spec = tenant.spec
+            nodes = place(spec.placement, self.topo, new_n,
+                          taken=set(self._taken) | self._dead,
+                          seed=self.base_seed + 101 * self._tenant_seq
+                          + tenant.generation)
+        except ValueError:
+            self._depart(tenant, self._now, "no capacity to re-place")
+            return
+        for nd in nodes:
+            self._taken[nd] = tenant.name
+        resume_t = t_detect + self.replan_delay_s
+        tenant.place(self.topo, nodes, resume_t, self._clock,
+                     self.heartbeat)
+        tenant.recovery.record(
+            "resume", step=getattr(tenant, "iters_done", 0),
+            detail=f"{new_n} ranks on nodes {nodes} algo={tenant.algo} "
+                   f"t={resume_t:.3f}")
+        self._record("replaced",
+                     f"{tenant.name} -> {new_n} ranks on {nodes} "
+                     f"algo={tenant.algo}")
+        tenant.prepare()
+        self._retry_blocked()
+
+    # -- contention --------------------------------------------------------
+    def _contend(self, tenant: Tenant, eff: Dict[str, float], d0: float
+                 ) -> Dict[str, float]:
+        """Split shared-link bandwidth between the resolving tenant's
+        collective and every co-tenant flow overlapping its window (other
+        tenants' pending collectives, estimated at their uncongested floor,
+        plus recorded busy segments of already-resolved collectives)."""
+        if d0 <= 0.0 or not tenant.pending_demand:
+            return eff
+        s_i = tenant.pending_start
+        e_i = s_i + d0
+        segments = self._segments
+        offered = self.fairness == "offered"
+        adj: Optional[Dict[str, float]] = None
+        for ln, own in tenant.pending_demand.items():
+            # same flow accounting as FabricEngine._contended_effs, via the
+            # shared helpers in repro.fabric.congestion: offered weights
+            # each flow by its bytes; max-min aggregates activity per owner
+            flows: List[Tuple[float, float]] = []
+            activity: Dict[str, float] = {}
+            for other in self._active:
+                if other is tenant or other.pending_start is None:
+                    continue
+                d_k = other.pending_demand.get(ln)
+                if not d_k:
+                    continue
+                ov = min(e_i, other.pending_start + other.pending_floor) \
+                    - max(s_i, other.pending_start)
+                if ov > 0.0:
+                    flows.append((ov, d_k))
+                    activity[other.name] = activity.get(other.name, 0.0) \
+                        + ov
+            for (s_k, e_k, b_k, kname) in segments.get(ln, ()):
+                if kname == tenant.name:
+                    continue
+                ov = min(e_i, e_k) - max(s_i, s_k)
+                if ov > 0.0:
+                    flows.append((ov, b_k))
+                    activity[kname] = activity.get(kname, 0.0) + ov
+            if not flows:
+                continue
+            share = offered_share(own, d0, flows) if offered \
+                else maxmin_share(d0, list(activity.values()))
+            if share < 1.0:
+                if adj is None:
+                    adj = dict(eff)
+                adj[ln] = eff[ln] * share
+        return adj if adj is not None else eff
+
+    def _prune_segments(self) -> None:
+        starts = [t.pending_start for t in self._active
+                  if t.pending_start is not None]
+        horizon = min(starts) if starts else self._now
+        for ln, segs in self._segments.items():
+            self._segments[ln] = [s for s in segs if s[1] > horizon]
+
+    # -- main loop ---------------------------------------------------------
+    def _resolve(self, tenant: Tenant) -> None:
+        dead = [nd for nd in tenant.nodes if nd in self._dead]
+        if dead:
+            self._recover(tenant, dead)
+            return
+        self._now = max(self._now, tenant.pending_start)
+        congestion = tenant.congestion
+        congestion.advance()
+        eff = congestion.link_eff(tenant.pending_skew,
+                                  spanning_groups=tenant.spanning)
+        d0 = tenant.pending_schedule.total_s(eff)
+        eff = self._contend(tenant, eff, d0)
+        dur = tenant.pending_schedule.total_s(eff)
+        start = tenant.pending_start
+        finish = start + dur
+        for ln, b in tenant.pending_demand.items():
+            self._segments.setdefault(ln, []).append(
+                (start, finish, b, tenant.name))
+        self._prune_segments()
+        congestion.kick(tenant.pending_skew)
+        tenant.pending_schedule.accumulate_bytes(eff, tenant.link_bytes)
+        tenant.pending_schedule.accumulate_bytes(eff, self.link_bytes)
+        self._now = max(self._now, finish)
+        tenant.resolved(finish, dur)
+        if tenant.detector is not None:
+            for nd in tenant.nodes:
+                if nd not in self._dead:
+                    tenant.detector.heartbeat(nd)
+        if tenant.wants_departure():
+            self._depart(tenant, finish, "completed its iteration budget")
+        else:
+            tenant.prepare()
+
+    def run(self, until: float) -> LifecycleResult:
+        """Advance the virtual clock to ``until`` (simulated seconds).
+        One-shot: construct a fresh engine per scenario."""
+        if self._ran:
+            raise RuntimeError(
+                "LifecycleEngine.run() is one-shot (tenant clocks and "
+                "congestion state carry over); construct a fresh engine "
+                "per scenario")
+        self._ran = True
+        timeline = self._timeline
+        ei = 0
+        with simulated_clock_scope():
+            while True:
+                nxt: Optional[Tenant] = None
+                for tenant in self._active:
+                    if tenant.pending_start is None:
+                        continue
+                    if nxt is None or tenant.pending_start \
+                            < nxt.pending_start:
+                        nxt = tenant
+                ev_t = timeline[ei][0] if ei < len(timeline) else None
+                if nxt is None and ev_t is None:
+                    break
+                if ev_t is not None and (
+                        nxt is None or ev_t <= nxt.pending_start):
+                    if ev_t > until:
+                        break
+                    self._now = max(self._now, ev_t)
+                    self._apply_event(timeline[ei][2])
+                    ei += 1
+                    continue
+                if nxt.pending_start > until:
+                    break
+                self._resolve(nxt)
+        for tenant in self._active:
+            tenant.pending_start = None
+        tenants = self._finished + self._active
+        tenants.sort(key=lambda t: (t.arrived_t if t.arrived_t is not None
+                                    else float("inf")))
+        return LifecycleResult(self.topo, tenants, self._log,
+                               dict(self.link_bytes), until)

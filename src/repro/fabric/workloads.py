@@ -1,0 +1,341 @@
+"""Tenant runtimes for the event-driven lifecycle engine.
+
+The static :class:`repro.fabric.engine.FabricEngine` steps one population of
+BSP training jobs in lockstep rounds. A real cluster is a *schedule*: jobs
+arrive and depart, nodes fail, and latency-sensitive inference fleets share
+the same oversubscribed tier as training traffic. This module gives the
+:class:`repro.fabric.events.LifecycleEngine` a uniform tenant abstraction
+over that mix:
+
+  * :class:`TrainingTenant` — a BSP data-parallel job (the existing
+    :class:`~repro.fabric.engine.JobSpec`): per-rank compute from the
+    straggler model, one gradient all-reduce per step, optional vectorized
+    pacing (:class:`~repro.core.pacing.PacingBank`);
+  * :class:`InferenceTenant` — an **open-loop** serving fleet shaped like
+    the ``launch/serve`` path: requests arrive by a Poisson process
+    (exponential interarrivals, independent of service state — queueing
+    delay builds when the fabric slows the fleet down), and each request is
+    one *prefill* phase (compute + one large collective) followed by
+    ``decode_tokens`` *decode* iterations (compute + one small collective
+    each). Decode fleets are bursts of frequent small collectives — exactly
+    the co-tenant traffic mix the paper's contention analysis worries
+    about.
+
+Every tenant exposes one *pending collective* (window start, skew, compiled
+schedule, shared-link demand) that the engine resolves against congestion
+and co-tenant contention; ``resolved()`` advances the tenant's own virtual
+clock and forms the next pending collective. Placement (and re-placement
+after failures) compiles schedules via ``algo="auto"``
+(:func:`repro.fabric.collectives.select_algo`) when requested.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import statistics
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.pacing import PacingBank
+from repro.fabric.collectives import (CompiledSchedule, compile_schedule,
+                                      select_algo)
+from repro.fabric.engine import JobSpec
+from repro.fabric.placement import spanning_groups
+from repro.fabric.stragglers import ComputeModel
+from repro.fabric.topology import Topology
+from repro.ft.failure import FailureDetector, HeartbeatConfig, RecoveryLog
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceSpec:
+    """One open-loop serving fleet sharing the fabric with training jobs."""
+    name: str
+    n_ranks: int
+    rate_rps: float = 10.0            # Poisson request arrival rate
+    prefill_bytes: float = 2e8        # collective payload of the prefill
+    decode_bytes: float = 1.6e7       # per-token collective payload
+    decode_tokens: int = 16           # decode iterations per request
+    prefill_compute_s: float = 0.02
+    decode_compute_s: float = 0.004
+    algo: str = "auto"
+    group: int = 0
+    placement: str = "compact"
+    nodes: Optional[Tuple[int, ...]] = None
+    seed: Optional[int] = None
+
+
+def _compile(topo: Topology, nodes: Sequence[int], nbytes: float,
+             algo: str, group: int) -> Tuple[str, CompiledSchedule]:
+    if algo == "auto":
+        return select_algo(topo, nodes, nbytes, group=group)
+    return algo, compile_schedule(topo, nodes, nbytes, algo=algo,
+                                  group=group)
+
+
+def _shared_demand(topo: Topology, sched: CompiledSchedule
+                   ) -> Dict[str, float]:
+    return {ln: b for ln, b in sched.bytes_per_call(None).items()
+            if topo.link(ln).shared}
+
+
+class Tenant:
+    """Base runtime the lifecycle engine drives.
+
+    State contract with the engine: ``pending_start`` is ``None`` when the
+    tenant has nothing in flight (departed, or an inference fleet idle
+    until its next request); otherwise the pending collective starts at
+    ``pending_start``, runs ``pending_schedule`` with entry skew
+    ``pending_skew``, and offers ``pending_demand`` bytes to shared links
+    over roughly ``pending_floor`` seconds.
+    """
+
+    kind: str = ""
+
+    def __init__(self, name: str, seed: int):
+        self.name = name
+        self.seed = seed
+        self.nodes: List[int] = []
+        self.arrived_t: Optional[float] = None
+        self.departed_t: Optional[float] = None
+        self.generation = 0           # bumped on every (re)placement
+        self.placements: List[Tuple[float, Tuple[int, ...]]] = []
+        self.recovery = RecoveryLog()
+        self.link_bytes: Dict[str, float] = {}
+        self.detector: Optional[FailureDetector] = None
+        self.congestion = None        # per-tenant AR(1), set by the engine
+        self.algo: str = ""
+        self.spanning: int = 1
+        self.pending_start: Optional[float] = None
+        self.pending_skew: float = 0.0
+        self.pending_schedule: Optional[CompiledSchedule] = None
+        self.pending_demand: Dict[str, float] = {}
+        self.pending_floor: float = 0.0
+
+    # -- engine hooks ------------------------------------------------------
+    def place(self, topo: Topology, nodes: Sequence[int], t: float,
+              clock: Callable[[], float], heartbeat: HeartbeatConfig
+              ) -> None:
+        """(Re)bind the tenant to a node set at virtual time ``t``."""
+        self.nodes = list(nodes)
+        self.placements.append((t, tuple(nodes)))
+        self.spanning = spanning_groups(topo, nodes)
+        self.detector = FailureDetector(list(nodes), heartbeat, clock)
+        if self.arrived_t is None:
+            self.arrived_t = t
+        self.generation += 1
+        self._bind(topo, t)
+
+    def _bind(self, topo: Topology, t: float) -> None:
+        raise NotImplementedError
+
+    def prepare(self) -> None:
+        """Form the next pending collective (sets ``pending_*``)."""
+        raise NotImplementedError
+
+    def resolved(self, finish: float, dur: float) -> None:
+        """The pending collective completed at ``finish``."""
+        raise NotImplementedError
+
+    def shrink_plan(self, survivors: int) -> int:
+        """Ranks to run with after a failure left ``survivors`` nodes."""
+        return survivors
+
+    def wants_departure(self) -> bool:
+        return False
+
+
+class TrainingTenant(Tenant):
+    kind = "training"
+
+    def __init__(self, spec: JobSpec, seed: int):
+        super().__init__(spec.name, seed)
+        self.spec = spec
+        self.step_times: List[float] = []
+        self.iters_done = 0
+        self._release = 0.0
+        self._release_arr: Optional[np.ndarray] = None
+        self._bank: Optional[PacingBank] = None
+        self._prev_finish: Optional[float] = None
+        self._arrival: Optional[np.ndarray] = None
+        self._last = 0.0
+
+    def _bind(self, topo: Topology, t: float) -> None:
+        spec = self.spec
+        n = len(self.nodes)
+        self.n = n
+        # fresh streams per generation: a re-placed job is a restart
+        gen_seed = self.seed + 7919 * (self.generation - 1)
+        self.cm = ComputeModel(spec.stragglers, n, seed=gen_seed)
+        self._bank = PacingBank(spec.pacing, n) \
+            if spec.pacing is not None else None
+        self.algo, self.schedule = _compile(
+            topo, self.nodes, spec.grad_bytes, spec.algo, spec.group)
+        self.floor_denom = max(self.schedule.total_s(None), 1e-9)
+        self.demand = _shared_demand(topo, self.schedule)
+        self._release = t
+        self._release_arr = np.full(n, float(t)) \
+            if self._bank is not None else None
+        if self._prev_finish is None:
+            self._prev_finish = t
+        # else: keep the pre-failure clock — the detection stall and replan
+        # delay surface as one long step, which is what the job's consumers
+        # actually observed
+        self._arrival = None
+
+    def prepare(self) -> None:
+        compute = self.cm.sample()
+        if self._release_arr is None:
+            rel = self._release
+            first = rel + min(compute)
+            last = rel + max(compute)
+        else:
+            arrival = self._release_arr + np.asarray(compute)
+            self._arrival = arrival
+            first = float(arrival.min())
+            last = float(arrival.max())
+        self._last = last
+        self.pending_start = last
+        self.pending_skew = (last - first) / self.floor_denom
+        self.pending_schedule = self.schedule
+        self.pending_demand = self.demand
+        self.pending_floor = self.floor_denom
+
+    def resolved(self, finish: float, dur: float) -> None:
+        self.step_times.append(finish - self._prev_finish)
+        self._prev_finish = finish
+        self.iters_done += 1
+        if self._bank is None:
+            self._release = finish
+        else:
+            self._bank.observe(self._last - self._arrival,
+                               finish - self._release_arr)
+            self._release_arr = finish + self._bank.decide()
+        self.pending_start = None
+
+    def shrink_plan(self, survivors: int) -> int:
+        from repro.ft.failure import plan_elastic_mesh
+        shape, _axes = plan_elastic_mesh(
+            survivors, model_parallel=self.spec.model_parallel,
+            prefer_pods=False)
+        n = 1
+        for d in shape:
+            n *= d
+        return n
+
+    def wants_departure(self) -> bool:
+        return self.spec.iters is not None \
+            and self.iters_done >= self.spec.iters
+
+    # -- metrics -----------------------------------------------------------
+    @property
+    def mean_step(self) -> float:
+        return statistics.fmean(self.step_times) if self.step_times else 0.0
+
+    @property
+    def cv(self) -> float:
+        m = self.mean_step
+        return (statistics.pstdev(self.step_times) / m) if m > 0 else 0.0
+
+    @property
+    def throughput(self) -> float:
+        m = self.mean_step
+        return (len(self.nodes) * self.spec.samples_per_rank / m) \
+            if m > 0 else 0.0
+
+
+class InferenceTenant(Tenant):
+    kind = "inference"
+
+    def __init__(self, spec: InferenceSpec, seed: int):
+        super().__init__(spec.name, seed)
+        self.spec = spec
+        self.latencies: List[float] = []
+        self.decode_step_times: List[float] = []
+        self.requests_done = 0
+        self.tokens_done = 0
+        self._rng = random.Random(seed)
+        self._next_arrival: Optional[float] = None
+        self._req_arrival = 0.0       # arrival time of the in-flight request
+        self._phase = -1              # -1 idle, 0 prefill, 1..T decode
+        self._phase_finish = 0.0
+        self._busy_until = 0.0
+        self._retry = False           # re-run the in-flight request
+
+    def _bind(self, topo: Topology, t: float) -> None:
+        spec = self.spec
+        self.algo, self.prefill_sched = _compile(
+            topo, self.nodes, spec.prefill_bytes, spec.algo, spec.group)
+        _, self.decode_sched = _compile(
+            topo, self.nodes, spec.decode_bytes, spec.algo, spec.group)
+        self.prefill_demand = _shared_demand(topo, self.prefill_sched)
+        self.decode_demand = _shared_demand(topo, self.decode_sched)
+        self.prefill_floor = max(self.prefill_sched.total_s(None), 1e-9)
+        self.decode_floor = max(self.decode_sched.total_s(None), 1e-9)
+        if self._next_arrival is None:
+            self._next_arrival = t + self._rng.expovariate(spec.rate_rps)
+        self._busy_until = max(self._busy_until, t)
+        if self._phase >= 0:
+            # the in-flight request restarts from prefill on the new
+            # placement; its original arrival time is kept so the recovery
+            # stall shows up in its latency
+            self._retry = True
+        self._phase = -1
+
+    def prepare(self) -> None:
+        spec = self.spec
+        if self._phase < 0:
+            if self._retry:
+                self._retry = False   # keep _req_arrival: same request
+            else:
+                # start the next request: open-loop — the arrival happened
+                # regardless of whether the fleet was free
+                self._req_arrival = self._next_arrival
+                self._next_arrival += self._rng.expovariate(spec.rate_rps)
+            svc_start = max(self._busy_until, self._req_arrival)
+            self._phase = 0
+            start = svc_start + spec.prefill_compute_s
+            sched, demand, floor = (self.prefill_sched, self.prefill_demand,
+                                    self.prefill_floor)
+        else:
+            start = self._phase_finish + spec.decode_compute_s
+            sched, demand, floor = (self.decode_sched, self.decode_demand,
+                                    self.decode_floor)
+        self.pending_start = start
+        self.pending_skew = 0.0       # fleet dispatches decode in lockstep
+        self.pending_schedule = sched
+        self.pending_demand = demand
+        self.pending_floor = floor
+
+    def resolved(self, finish: float, dur: float) -> None:
+        spec = self.spec
+        if self._phase > 0:
+            self.decode_step_times.append(finish - self._phase_finish)
+        self._phase_finish = finish
+        self._phase += 1
+        if self._phase > spec.decode_tokens:
+            self.latencies.append(finish - self._req_arrival)
+            self.requests_done += 1
+            self.tokens_done += spec.decode_tokens
+            self._busy_until = finish
+            self._phase = -1
+        self.pending_start = None
+
+    # -- metrics -----------------------------------------------------------
+    @property
+    def mean_latency(self) -> float:
+        return statistics.fmean(self.latencies) if self.latencies else 0.0
+
+    def latency_quantile(self, q: float) -> float:
+        if not self.latencies:
+            return 0.0
+        s = sorted(self.latencies)
+        return s[min(len(s) - 1, int(q * len(s)))]
+
+    @property
+    def tokens_per_s(self) -> float:
+        if not self.latencies or self.departed_t is None:
+            span = self._phase_finish - (self.arrived_t or 0.0)
+        else:
+            span = self.departed_t - (self.arrived_t or 0.0)
+        return self.tokens_done / span if span > 0 else 0.0

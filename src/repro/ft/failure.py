@@ -11,9 +11,31 @@ same answer without negotiation.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+import warnings
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+# Nesting depth of simulated-clock scopes (repro.fabric.events engines).
+# While > 0, constructing a FailureDetector on the wall clock is almost
+# certainly a bug — detection timeouts would be measured in real seconds
+# while the engine's virtual clock races through simulated hours.
+_SIM_CLOCK_DEPTH = 0
+
+
+@contextlib.contextmanager
+def simulated_clock_scope() -> Iterator[None]:
+    """Marks the dynamic extent in which a simulation's virtual clock is the
+    only sane time source. :class:`repro.fabric.events.LifecycleEngine`
+    wraps its run in this scope; any :class:`FailureDetector` constructed
+    inside it without an explicit ``clock`` draws a warning."""
+    global _SIM_CLOCK_DEPTH
+    _SIM_CLOCK_DEPTH += 1
+    try:
+        yield
+    finally:
+        _SIM_CLOCK_DEPTH -= 1
 
 
 @dataclasses.dataclass
@@ -25,11 +47,25 @@ class HeartbeatConfig:
 class FailureDetector:
     """Phi-style accrual simplified to a timeout detector over heartbeats.
 
-    ``clock`` is injectable so tests (and the simulator) drive virtual time.
+    ``clock`` is injectable so tests (and the simulator) drive virtual
+    time; ``None`` (the default) selects the wall clock. Under a simulation
+    engine the virtual clock must be threaded explicitly — defaulting to
+    ``time.monotonic`` there silently disables detection (simulated seconds
+    pass in wall-clock microseconds), so constructing a wall-clock detector
+    inside :func:`simulated_clock_scope` warns.
     """
 
     def __init__(self, ranks: List[int], cfg: HeartbeatConfig,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Optional[Callable[[], float]] = None):
+        if clock is None:
+            if _SIM_CLOCK_DEPTH > 0:
+                warnings.warn(
+                    "FailureDetector constructed on the wall clock "
+                    "(clock=None -> time.monotonic) inside a simulated-"
+                    "clock scope; pass the engine's virtual clock or "
+                    "heartbeat timeouts will never fire in simulated time",
+                    RuntimeWarning, stacklevel=2)
+            clock = time.monotonic
         self.cfg = cfg
         self._clock = clock
         now = clock()

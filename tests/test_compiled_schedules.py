@@ -85,3 +85,33 @@ def test_compiled_hierarchical_group_fallback():
     sched = compile_schedule(topo, ranks, 1e9, algo="hierarchical", group=8)
     legacy = all_reduce(topo, ranks, 1e9, algo="hierarchical", group=8)
     assert sched.cost(None).total_s == legacy.total_s
+
+
+# ---------------------------------------------------------------------------
+# algo auto-selection from compiled-schedule byte exposure
+# ---------------------------------------------------------------------------
+
+
+def test_select_algo_is_optimal_over_candidates():
+    from repro.fabric import select_algo
+    from repro.fabric.placement import group_size
+    for make in TOPOS.values():
+        topo = make()
+        g = group_size(topo)          # the group select_algo resolves to
+        for nodes in ([0, 1, 2, 3], list(range(12)),
+                      list(range(0, topo.n_ranks, 2))[:10]):
+            algo, sched = select_algo(topo, nodes, 1.1e9)
+            assert algo in ALGOS
+            t = sched.total_s(None)
+            for cand in ALGOS:
+                other = compile_schedule(topo, nodes, 1.1e9, algo=cand,
+                                         group=g)
+                assert t <= other.total_s(None) + 1e-12
+
+
+def test_select_algo_deterministic():
+    from repro.fabric import select_algo
+    topo = fat_tree(32, nodes_per_leaf=8)
+    picks = {select_algo(topo, list(range(12)), 1.1e9)[0]
+             for _ in range(3)}
+    assert len(picks) == 1

@@ -1,12 +1,15 @@
 """Unit tests for the paper's coordination layer (core/)."""
 import math
+import random
 
+import numpy as np
 import pytest
 
 from repro.configs.base import PacingConfig
 from repro.core import (CollectiveTrace, CoordinationAgent, PacingController,
                         diagnose, expected_max_factor, summarize)
 from repro.core.instrumentation import IterationRecord, PhaseRecorder
+from repro.core.pacing import PacingBank
 
 
 class FakeClock:
@@ -218,3 +221,45 @@ def test_summarize_cv():
     s = summarize(recs)
     assert s["cv_step"] == pytest.approx(0.0)
     assert s["mean_step"] == pytest.approx(0.2)
+
+
+# ---------------------------------------------------------------------------
+# PacingBank: vectorized controllers, float-exact vs the scalar reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [2, 5, 6, 8, 32])
+def test_bank_matches_scalar_controllers_exactly(window):
+    """The engine swaps N per-rank controllers for one PacingBank; the
+    single-job bit-equality contract with the reference loop only survives
+    if the bank's delays are the *same floats* — not approximately so —
+    for any window length (including >= 8, where numpy's pairwise axis
+    sums would round differently than Python's sum)."""
+    cfg = mk_cfg(window=window, skew_threshold=0.04, gain=0.85,
+                 max_delay_frac=0.6)
+    n = 16
+    ctrls = [PacingController(cfg) for _ in range(n)]
+    bank = PacingBank(cfg, n)
+    rng = random.Random(3)
+    for _ in range(150):
+        waits = [abs(rng.gauss(0.01, 0.02)) - 0.005 for _ in range(n)]
+        steps = [0.2 + rng.gauss(0.0, 0.02) for _ in range(n)]
+        scalar = []
+        for r in range(n):
+            ctrls[r].observe(waits[r], steps[r])
+            scalar.append(ctrls[r].decide().delay)
+        bank.observe(np.asarray(waits), np.asarray(steps))
+        assert bank.decide().tolist() == scalar
+    assert bank.activations.tolist() == [c.activations for c in ctrls]
+
+
+def test_bank_respects_warmup_and_disabled():
+    cfg = mk_cfg(enabled=False)
+    bank = PacingBank(cfg, 4)
+    bank.observe(np.full(4, 0.5), np.full(4, 0.2))
+    assert bank.decide().tolist() == [0.0] * 4
+    cfg = mk_cfg(warmup_iters=10)
+    bank = PacingBank(cfg, 4)
+    for _ in range(9):
+        bank.observe(np.full(4, 0.5), np.full(4, 0.2))
+        assert bank.decide().tolist() == [0.0] * 4

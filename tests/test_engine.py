@@ -180,6 +180,31 @@ def test_scattered_placement_degrades_leaf_local_job():
 
 
 # ---------------------------------------------------------------------------
+# algo="auto": per-placement schedule selection
+# ---------------------------------------------------------------------------
+
+
+def test_auto_algo_resolved_per_placement():
+    """JobSpec(algo="auto") resolves at placement time from the compiled
+    schedules' byte exposure; the pick is visible on the result and is
+    never slower (uncongested) than forcing any single algorithm."""
+    topo = _fabric()
+    res = FabricEngine(topo, [JobSpec("j", 16, placement="scattered",
+                                      algo="auto")],
+                       base_seed=0).run(60, warmup=10)
+    picked = res.job("j").algo
+    assert picked in ("ring", "tree", "hierarchical")
+    nodes = tuple(res.job("j").nodes)
+    forced = {}
+    for algo in ("ring", "tree", "hierarchical"):
+        r = FabricEngine(_fabric(), [JobSpec("j", 16, nodes=nodes,
+                                             algo=algo)],
+                         base_seed=0).run(60, warmup=10)
+        forced[algo] = r.job("j").mean_step
+    assert forced[picked] <= min(forced.values()) * 1.05
+
+
+# ---------------------------------------------------------------------------
 # fast preset keeps the paper's qualitative signatures in default tier-1
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,140 @@
+"""Max-min fair bandwidth sharing: allocator properties, engine-level byte
+conservation, offered-bytes equivalence for symmetric demands, and the
+documented no-starvation direction versus the offered-bytes split."""
+import random
+
+import pytest
+
+from repro.fabric import CongestionConfig, FabricEngine, JobSpec, fat_tree
+from repro.fabric.congestion import maxmin_shares
+from repro.fabric.stragglers import StragglerConfig
+
+
+# ---------------------------------------------------------------------------
+# allocator properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("demands,capacity", [
+    ([1.0, 1.0], 1.0),
+    ([0.2, 0.9, 1.0], 1.0),
+    ([0.1, 0.1, 0.1], 1.0),
+    ([1.0], 1.0),
+    ([0.5, 0.5, 0.5, 0.5], 1.0),
+    ([2.0, 0.25, 1.0], 2.0),
+])
+def test_maxmin_invariants(demands, capacity):
+    alloc = maxmin_shares(demands, capacity)
+    n = len(demands)
+    # never above demand; never starved below the bottleneck share
+    for a, d in zip(alloc, demands):
+        assert a <= d + 1e-12
+        assert a >= min(d, capacity / n) - 1e-12
+    # bottleneck saturation: link fills iff total demand >= capacity
+    assert sum(alloc) == pytest.approx(min(capacity, sum(demands)))
+
+
+def test_maxmin_symmetric_demands_split_equally():
+    alloc = maxmin_shares([0.8, 0.8, 0.8])
+    assert alloc[1] == pytest.approx(alloc[0])
+    assert alloc[2] == pytest.approx(alloc[0])
+
+
+def test_maxmin_small_flow_keeps_its_demand():
+    # progressive filling: the small flow is satisfied, the big flows split
+    # the rest — offered-bytes would scale everyone by byte volume instead
+    alloc = maxmin_shares([0.1, 5.0, 5.0])
+    assert alloc[0] == pytest.approx(0.1)
+    assert alloc[1] == alloc[2] == pytest.approx(0.45)
+
+
+def test_maxmin_random_sweep_properties():
+    rng = random.Random(7)
+    for _ in range(200):
+        n = rng.randint(1, 8)
+        demands = [rng.random() * 2.0 for _ in range(n)]
+        alloc = maxmin_shares(demands)
+        assert sum(alloc) == pytest.approx(min(1.0, sum(demands)))
+        for a, d in zip(alloc, demands):
+            assert a <= d + 1e-12
+            assert a >= min(d, 1.0 / n) - 1e-12
+
+
+def test_engine_rejects_unknown_fairness():
+    with pytest.raises(KeyError):
+        FabricEngine(fat_tree(16), [JobSpec("a", 4)], fairness="wfq")
+
+
+# ---------------------------------------------------------------------------
+# engine-level properties
+# ---------------------------------------------------------------------------
+
+
+def _fabric():
+    return fat_tree(64, nodes_per_leaf=8)
+
+
+def test_maxmin_conserves_link_bytes():
+    jobs = [JobSpec("a", 8, placement="scattered"),
+            JobSpec("b", 8, placement="scattered", grad_bytes=2e9),
+            JobSpec("c", 8, placement="compact", algo="tree")]
+    res = FabricEngine(_fabric(), jobs, base_seed=1,
+                       fairness="maxmin").run(120, warmup=10)
+    per_job = {}
+    for jr in res.jobs:
+        for ln, b in jr.link_bytes.items():
+            per_job[ln] = per_job.get(ln, 0.0) + b
+    assert set(per_job) == set(res.link_bytes)
+    for ln, total in res.link_bytes.items():
+        assert per_job[ln] == pytest.approx(total, rel=1e-9)
+
+
+def test_maxmin_equals_offered_for_symmetric_demands():
+    """Two identical deterministic jobs, symmetric placements, uniform
+    background congestion: every contended link sees two equal flows in
+    full overlap, so both fairness models give each flow exactly half and
+    the step-time series coincide (up to ulp noise in the share
+    arithmetic, hence approx, not ==)."""
+    det = StragglerConfig(jitter_sigma=0.0, locality_spread=0.0,
+                          spike_prob=0.0)
+    cong = CongestionConfig(u_sigma=0.0)
+    jobs = [JobSpec("a", 12, nodes=tuple(range(12)), stragglers=det),
+            JobSpec("b", 12, nodes=tuple(range(12, 24)), stragglers=det)]
+
+    def series(fairness):
+        res = FabricEngine(_fabric(), jobs, base_seed=0, congestion=cong,
+                           fairness=fairness).run(80, warmup=10)
+        return [res.job("a").step_times, res.job("b").step_times]
+
+    offered, maxmin = series("offered"), series("maxmin")
+    for so, sm in zip(offered, maxmin):
+        assert sm == pytest.approx(so, rel=1e-9)
+    # and the contention is real: both exceed the solo baseline
+    solo = FabricEngine(_fabric(), [jobs[0]], base_seed=0,
+                        congestion=cong).run(80, warmup=10)
+    assert maxmin[0][0] > solo.job("a").step_times[0]
+
+
+def test_maxmin_never_starves_the_small_flow():
+    """The documented direction of the model change: offered-bytes scales a
+    flow's share by its byte volume, so a small-payload job sharing up1
+    with an 8 GB co-tenant is starved toward zero bandwidth; max-min gives
+    every active flow at least its bottleneck share of the link."""
+    small = JobSpec("small", 12, nodes=tuple(range(12)), grad_bytes=2e8)
+    big = JobSpec("big", 12, nodes=tuple(range(12, 24)), grad_bytes=8e9)
+
+    def mean(fairness, name):
+        res = FabricEngine(_fabric(), [small, big], base_seed=0,
+                           fairness=fairness).run(150, warmup=20)
+        return res.job(name).mean_step
+
+    solo = FabricEngine(_fabric(), [small], base_seed=0) \
+        .run(150, warmup=20).job("small").mean_step
+    offered_small, maxmin_small = mean("offered", "small"), \
+        mean("maxmin", "small")
+    # max-min protects the small flow...
+    assert maxmin_small < 0.7 * offered_small
+    # ...while both models still charge it real contention
+    assert maxmin_small > solo
+    # and the heavy flow pays (weakly) for the protection
+    assert mean("maxmin", "big") >= 0.95 * mean("offered", "big")

@@ -1,0 +1,304 @@
+"""Event-driven lifecycle engine: arrivals, departures, failures with
+elastic re-placement, open-loop inference co-tenants, determinism, and the
+virtual-clock wiring through repro.ft."""
+import math
+import statistics
+import warnings
+
+import pytest
+
+from repro.fabric import (Arrival, Departure, InferenceSpec, JobSpec,
+                          LifecycleEngine, NodeFailure, fat_tree)
+from repro.ft import FailureDetector, HeartbeatConfig, simulated_clock_scope
+
+HORIZON = 20.0
+
+
+def _fabric():
+    return fat_tree(64, nodes_per_leaf=8)
+
+
+def _run(events, until=HORIZON, **kw):
+    return LifecycleEngine(_fabric(), events, base_seed=0, **kw).run(until)
+
+
+# ---------------------------------------------------------------------------
+# arrivals: contention is overlap-gated
+# ---------------------------------------------------------------------------
+
+
+INCUMBENT = JobSpec("inc", 12, nodes=tuple(range(12)))
+
+
+def test_arrival_on_shared_uplink_degrades_only_after_arrival():
+    """A job arriving at t=8 on leaves 1-2 (shares up1 with the incumbent)
+    leaves the incumbent's series bit-identical before the arrival and
+    stretches it afterwards."""
+    solo = _run([Arrival(0.0, INCUMBENT)]).tenant("inc").step_times
+    duo = _run([Arrival(0.0, INCUMBENT),
+                Arrival(8.0, JobSpec("late", 12, nodes=tuple(range(12, 24)),
+                                     grad_bytes=4e9))]) \
+        .tenant("inc").step_times
+    k = next((i for i in range(min(len(solo), len(duo)))
+              if solo[i] != duo[i]), None)
+    assert k is not None, "shared-uplink co-tenant must perturb the series"
+    # divergence starts only once the co-tenant's collectives exist:
+    # the prefix before t=8 is exact
+    assert sum(solo[:k]) >= 8.0 - solo[0] - 2 * max(solo)
+    assert statistics.fmean(duo[k:]) > statistics.fmean(solo[k:])
+
+
+def test_arrival_on_disjoint_links_is_bit_inert():
+    """Per-tenant congestion streams + explicit flow contention: a co-tenant
+    with no shared link in common changes *nothing* — the incumbent's
+    series is bit-identical, not merely close."""
+    solo = _run([Arrival(0.0, INCUMBENT)]).tenant("inc").step_times
+    duo = _run([Arrival(0.0, INCUMBENT),
+                Arrival(8.0, JobSpec("late", 12, nodes=tuple(range(40, 52)),
+                                     grad_bytes=4e9))]) \
+        .tenant("inc").step_times
+    assert duo == solo
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+def _full_scenario():
+    return [
+        Arrival(0.0, JobSpec("t0", 12, placement="compact", algo="auto")),
+        Arrival(3.0, JobSpec("t1", 12, placement="compact",
+                             grad_bytes=2e9)),
+        Arrival(2.0, InferenceSpec("serve", 4, rate_rps=8.0)),
+        NodeFailure(9.0, 3),
+        Departure(15.0, "t1"),
+    ]
+
+
+def test_same_seed_and_events_are_bit_identical():
+    """Same seed + same event list => bit-identical multi-tenant series,
+    including across the mid-run failure, re-placement, and departure."""
+    a = _run(_full_scenario())
+    b = _run(_full_scenario())
+    for ta, tb in zip(a.tenants, b.tenants):
+        assert ta.name == tb.name
+        if ta.kind == "training":
+            assert ta.step_times == tb.step_times
+            assert ta.nodes == tb.nodes
+        else:
+            assert ta.latencies == tb.latencies
+    assert [e[:2] for e in a.log] == [e[:2] for e in b.log]
+
+
+def test_different_seed_changes_series():
+    a = LifecycleEngine(_fabric(), _full_scenario(), base_seed=0).run(HORIZON)
+    b = LifecycleEngine(_fabric(), _full_scenario(), base_seed=1).run(HORIZON)
+    assert a.tenant("t0").step_times != b.tenant("t0").step_times
+
+
+# ---------------------------------------------------------------------------
+# failure -> detection -> elastic re-place
+# ---------------------------------------------------------------------------
+
+
+def test_failure_triggers_elastic_replace_mid_run():
+    res = _run([Arrival(0.0, JobSpec("job", 12, placement="compact")),
+                NodeFailure(6.0, 2)], until=25.0)
+    job = res.tenant("job")
+    kinds = [e.kind for e in job.recovery.events]
+    assert kinds == ["failure", "resume"]
+    # shrank by one node, re-placed off the dead node, kept stepping
+    assert len(job.nodes) == 11
+    assert 2 not in job.nodes
+    assert len(job.placements) == 2
+    assert job.iters_done > 25
+    # sanity of the series across the re-place: no NaNs, no negative or
+    # zero step times
+    assert all(s > 0.0 and math.isfinite(s)
+               for s in job.step_times)
+    # the stall+recovery shows up as one long step around detection
+    assert max(job.step_times) > 3 * min(job.step_times)
+
+
+def test_model_parallel_width_survives_failure():
+    """plan_elastic_mesh keeps the model axis intact: an mp=4 job that
+    loses a node drops a whole dp group (12 -> 8 ranks)."""
+    res = _run([Arrival(0.0, JobSpec("job", 12, placement="compact",
+                                     model_parallel=4)),
+                NodeFailure(6.0, 2)], until=25.0)
+    assert len(res.tenant("job").nodes) == 8
+
+
+def test_failed_nodes_return_to_pool_minus_the_dead_one():
+    """After the incumbent shrinks and re-places, a blocked arrival must be
+    admitted on the freed capacity."""
+    events = [
+        Arrival(0.0, JobSpec("big", 60, placement="compact")),
+        # 4 free nodes left; this arrival cannot fit and blocks
+        Arrival(1.0, JobSpec("waiter", 6, placement="compact")),
+        Departure(8.0, "big"),
+    ]
+    res = _run(events, until=16.0)
+    blocked = [e for e in res.log if e[1] == "blocked"]
+    assert blocked and "waiter" in blocked[0][2]
+    waiter = res.tenant("waiter")
+    assert waiter.arrived_t is not None and waiter.arrived_t >= 8.0
+    assert len(waiter.step_times) > 0
+
+
+def test_departure_of_blocked_tenant_cancels_the_arrival():
+    """A tenant that departs while still waiting for capacity must never
+    be admitted afterwards."""
+    events = [
+        Arrival(0.0, JobSpec("big", 60, placement="compact")),
+        Arrival(1.0, JobSpec("waiter", 6, placement="compact")),
+        Departure(5.0, "waiter"),
+        Departure(8.0, "big"),
+    ]
+    res = _run(events, until=16.0)
+    with pytest.raises(KeyError):
+        res.tenant("waiter")
+    assert any(k == "departure" and "waiter" in d for _, k, d in res.log)
+
+
+def test_pinned_arrival_blocks_on_taken_and_rejects_on_dead():
+    events = [
+        Arrival(0.0, JobSpec("inc", 12, nodes=tuple(range(12)), iters=20)),
+        # pinned onto the incumbent's nodes: blocks, admitted after it
+        # finishes its 20 steps
+        Arrival(1.0, JobSpec("pinned", 4, nodes=(0, 1, 2, 3))),
+        # pinned onto a node that dies first: rejected outright
+        NodeFailure(2.0, 40),
+        Arrival(3.0, JobSpec("doomed", 4, nodes=(40, 41, 42, 43))),
+    ]
+    res = _run(events, until=25.0)
+    pinned = res.tenant("pinned")
+    assert pinned.arrived_t >= res.tenant("inc").departed_t
+    assert len(pinned.step_times) > 0
+    with pytest.raises(KeyError):
+        res.tenant("doomed")
+    assert any(k == "rejected" and "doomed" in d for _, k, d in res.log)
+
+
+def test_detection_never_predates_the_failure():
+    """A tenant whose step outlasts the heartbeat window must not log a
+    detection timestamped before the node died."""
+    res = _run([Arrival(0.0, JobSpec("slow", 12, nodes=tuple(range(12)),
+                                     grad_bytes=8e9)),
+                NodeFailure(5.5, 3)], until=20.0)
+    detected = [t for t, k, _ in res.log if k == "detected"]
+    assert detected and detected[0] >= 5.5
+
+
+def test_inference_request_survives_a_replace():
+    """The request in flight when a node dies is retried on the new
+    placement with its original arrival time — it must not vanish from
+    the open-loop accounting."""
+    spec = InferenceSpec("serve", 4, nodes=(0, 1, 2, 3), rate_rps=6.0)
+    solo = _run([Arrival(0.0, spec)], until=20.0).tenant("serve")
+    failed = _run([Arrival(0.0, spec), NodeFailure(10.0, 1)],
+                  until=20.0).tenant("serve")
+    # the fleet shrank to 3 ranks but kept serving; the recovery stall
+    # surfaces as a latency outlier rather than a dropped request
+    assert len(failed.nodes) == 3
+    assert failed.requests_done > 0
+    stall_lat = max(failed.latencies)
+    assert stall_lat > max(solo.latencies[:len(failed.latencies)])
+
+
+def test_iters_budget_departs_and_frees_nodes():
+    res = _run([Arrival(0.0, JobSpec("a", 8, placement="compact", iters=10)),
+                Arrival(0.5, JobSpec("b", 60, placement="compact"))],
+               until=12.0)
+    a, b = res.tenant("a"), res.tenant("b")
+    assert len(a.step_times) == 10
+    assert a.departed_t is not None
+    # b blocked until a's 8 nodes came back
+    assert b.arrived_t >= a.departed_t
+    assert len(b.step_times) > 0
+
+
+# ---------------------------------------------------------------------------
+# inference co-tenants
+# ---------------------------------------------------------------------------
+
+
+def test_inference_tenant_serves_open_loop():
+    res = _run([Arrival(0.0, InferenceSpec("serve", 4, rate_rps=10.0,
+                                           decode_tokens=8))], until=30.0)
+    t = res.tenant("serve")
+    assert t.requests_done > 100            # ~10 rps over 30 s
+    assert t.tokens_done == 8 * t.requests_done
+    assert all(lat > 0.0 and math.isfinite(lat) for lat in t.latencies)
+    assert t.latency_quantile(0.99) >= t.latency_quantile(0.5) > 0.0
+
+
+def test_training_cotenant_inflates_inference_latency():
+    """Decode fleets share up0 with a heavy training job: the paper's
+    latency-sensitive-co-tenant effect. Max-min keeps the decode flow at
+    its bottleneck share, but the shared link is still half as fast."""
+    serve = InferenceSpec("serve", 8, nodes=tuple(range(4, 12)),
+                          rate_rps=4.0)
+    solo = _run([Arrival(0.0, serve)], until=25.0).tenant("serve")
+    duo = _run([Arrival(0.0, serve),
+                Arrival(0.0, JobSpec("train", 12,
+                                     nodes=(0, 1, 2, 3) + tuple(
+                                         range(12, 20)),
+                                     grad_bytes=4e9))],
+               until=25.0).tenant("serve")
+    assert duo.mean_latency > solo.mean_latency
+
+
+# ---------------------------------------------------------------------------
+# virtual-clock wiring (repro.ft satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_wall_clock_detector_warns_inside_simulated_scope():
+    with simulated_clock_scope():
+        with pytest.warns(RuntimeWarning, match="wall clock"):
+            FailureDetector([0, 1], HeartbeatConfig())
+    # outside the scope the default stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        FailureDetector([0, 1], HeartbeatConfig())
+
+
+def test_engine_threads_virtual_clock_without_warning():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        _run([Arrival(0.0, JobSpec("job", 8)), NodeFailure(3.0, 1)],
+             until=10.0)
+
+
+def test_lifecycle_run_is_one_shot():
+    eng = LifecycleEngine(_fabric(), [Arrival(0.0, JobSpec("a", 4))],
+                          base_seed=0)
+    eng.run(5.0)
+    with pytest.raises(RuntimeError):
+        eng.run(5.0)
+
+
+def test_rejects_unknown_fairness():
+    with pytest.raises(KeyError):
+        LifecycleEngine(_fabric(), [], fairness="wfq")
+
+
+# ---------------------------------------------------------------------------
+# paper-horizon sweep stays out of default tier-1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_long_horizon_mixed_cluster_stays_finite():
+    events = [Arrival(float(5 * i), JobSpec(f"t{i}", 12,
+                                            placement="compact",
+                                            algo="auto"))
+              for i in range(4)]
+    events += [Arrival(2.0, InferenceSpec("serve", 8, rate_rps=12.0)),
+               NodeFailure(40.0, 5), NodeFailure(90.0, 30)]
+    res = _run(events, until=150.0)
+    for t in res.training:
+        assert all(s > 0.0 and math.isfinite(s) for s in t.step_times)
+    assert res.tenant("serve").requests_done > 1000
