@@ -17,6 +17,7 @@ bench-smoke:     ## the CI benchmark smoke sections
 	$(PY) -m benchmarks.run --only table1
 	$(PY) -m benchmarks.run --only multitenant
 	$(PY) -m benchmarks.run --only lifecycle
+	$(PY) -m benchmarks.run --only wfq
 	$(PY) -m benchmarks.run --only pacing
 
 bench:           ## all benchmark sections

@@ -6,6 +6,8 @@
   multitenant — §3.2/§3.3 co-tenant contention + placement sweeps (engine)
   lifecycle   — event-driven scenarios: arrivals, failure recovery,
                 max-min vs offered-bytes fairness (lifecycle engine)
+  wfq         — weighted fair sharing: inference-weight sweep (p99 / SLO
+                attainment vs training throughput) + scheduler policies
   pacing      — vectorized PacingBank vs scalar controllers (before/after)
   speedup     — compiled-schedule engine vs seed per-call loop wall-clock
   kernels     — substrate kernel micro-benchmarks
@@ -25,8 +27,8 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     choices=["table1", "scaling", "taxonomy", "multitenant",
-                             "lifecycle", "pacing", "speedup", "kernels",
-                             "roofline"])
+                             "lifecycle", "wfq", "pacing", "speedup",
+                             "kernels", "roofline"])
     args = ap.parse_args()
 
     sections = []
@@ -51,6 +53,10 @@ def main() -> None:
         from benchmarks import lifecycle
         sections.append(("lifecycle (event-driven tenant scenarios)",
                          lifecycle.rows))
+    if args.only in (None, "wfq"):
+        from benchmarks import wfq_sweep
+        sections.append(("wfq_sweep (weighted sharing + scheduler "
+                         "policies)", wfq_sweep.rows))
     if args.only in (None, "pacing"):
         from benchmarks import pacing_bench
         sections.append(("pacing (vectorized bank vs scalar controllers)",

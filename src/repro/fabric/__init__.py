@@ -9,7 +9,8 @@ from repro.fabric.collectives import (CollectiveCost,              # noqa: F401
                                       ring_all_reduce, select_algo,
                                       tree_all_reduce)
 from repro.fabric.congestion import (CongestionConfig,             # noqa: F401
-                                     CongestionModel, maxmin_shares)
+                                     CongestionModel, maxmin_shares,
+                                     wfq_shares)
 from repro.fabric.engine import (FAIRNESS_MODES, EngineResult,     # noqa: F401
                                  FabricEngine, JobResult, JobSpec)
 from repro.fabric.events import (Arrival, Departure,               # noqa: F401
@@ -17,6 +18,8 @@ from repro.fabric.events import (Arrival, Departure,               # noqa: F401
                                  NodeFailure)
 from repro.fabric.placement import (POLICIES, place,               # noqa: F401
                                     spanning_groups)
+from repro.fabric.scheduling import (SCHEDULERS, Scheduler,        # noqa: F401
+                                     make_scheduler)
 from repro.fabric.workloads import (InferenceSpec, InferenceTenant,  # noqa: F401,E501
                                     Tenant, TrainingTenant)
 from repro.fabric.simulator import (SimConfig, SimResult,          # noqa: F401

@@ -407,6 +407,7 @@ AUTO_CANDIDATES = ("ring", "tree", "hierarchical")
 def select_algo(topo: Topology, ranks: Sequence[int], nbytes: float, *,
                 group: int = 0,
                 candidates: Sequence[str] = AUTO_CANDIDATES,
+                weight: float = 1.0,
                 ) -> Tuple[str, CompiledSchedule]:
     """Pick the all-reduce schedule for this placement by measuring, not
     guessing: compile every candidate and rank them by uncongested duration,
@@ -414,22 +415,42 @@ def select_algo(topo: Topology, ranks: Sequence[int], nbytes: float, *,
     (oversubscribed) tier — the compiled schedules' per-link byte exposure
     is exactly the data the engine already has at (re)placement time.
 
+    ``weight`` is the tenant's WFQ weight: under weighted fair sharing a
+    tenant keeps ``w / (w + w_other)`` of a contended shared link, so each
+    candidate is costed as its uncongested duration plus a *weighted
+    bottleneck-exposure correction* — the duration against one unit-weight
+    co-flow on every shared link (shared tier at ``w / (w + 1)``
+    efficiency) minus the same estimate at weight 1. A light tenant pays a
+    positive penalty proportional to its shared-tier time and steers to
+    the schedule that keeps traffic off the oversubscribed tier even at
+    some uncongested-duration cost; a heavy tenant discounts shared
+    exposure. At ``weight=1.0`` the correction is exactly ``0.0`` and the
+    path is skipped outright, so unweighted selection is bit-identical to
+    the PR-2 behavior.
+
     ``group=0`` resolves the hierarchical group to the topology's locality
     group (nodes per leaf / ranks per pod), so "hierarchical" means "keep
     the oversubscribed tier at bytes/leaf-group" for the fabric at hand.
 
     Returns ``(algo, schedule)``. Deterministic: candidate order breaks any
-    remaining tie.
+    remaining tie (by shared-tier byte exposure, then candidate order).
     """
     from repro.fabric.placement import group_size
     g = group or group_size(topo)
+    if weight != 1.0:
+        shared_links = [ln for ln, l in topo.links.items() if l.shared]
+        ref_eff = {ln: 0.5 for ln in shared_links}
+        w_eff = {ln: weight / (weight + 1.0) for ln in shared_links}
     best = None
     for algo in candidates:
         sched = compile_schedule(topo, ranks, nbytes, algo=algo, group=g)
         shared_bytes = sum(
             b for ln, b in sched.bytes_per_call(None).items()
             if topo.link(ln).shared)
-        key = (sched.total_s(None), shared_bytes)
+        cost = sched.total_s(None)
+        if weight != 1.0:
+            cost += sched.total_s(w_eff) - sched.total_s(ref_eff)
+        key = (cost, shared_bytes)
         if best is None or key < best[0]:
             best = (key, algo, sched)
     return best[1], best[2]

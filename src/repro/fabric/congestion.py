@@ -21,16 +21,18 @@ Queueing delay on a shared link additionally follows an M/M/1-style
 
 Co-tenant bandwidth sharing on a contended link is resolved by
 :func:`maxmin_shares` (progressive-filling max-min fairness — the behavior
-of per-flow fair queueing, and what TCP-like transports approximate), with
-the engine's original offered-bytes proportional split kept behind the
-``fairness="offered"`` switch.
+of per-flow fair queueing, and what TCP-like transports approximate), or by
+its weighted generalization :func:`wfq_shares` (weighted fair queueing:
+per-tenant ``weight`` scales the bottleneck share, the engines'
+``fairness="wfq"`` mode), with the engine's original offered-bytes
+proportional split kept behind the ``fairness="offered"`` switch.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import random
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.fabric.topology import Topology
 
@@ -69,6 +71,59 @@ def maxmin_shares(demands: Sequence[float], capacity: float = 1.0
     return alloc
 
 
+def wfq_shares(demands: Sequence[float],
+               weights: Optional[Sequence[float]] = None,
+               capacity: float = 1.0) -> List[float]:
+    """Weighted progressive-filling allocation of one link's capacity —
+    the steady-state bandwidth split of weighted fair queueing.
+
+    Flow j demands ``demands[j]`` and carries positive ``weight[j]``; the
+    water level is found by filling flows in increasing *normalized* demand
+    (``demand / weight``) order, each receiving
+    ``min(demand, remaining * weight / weight_left)`` so headroom unused by
+    satisfied flows is redistributed in proportion to weight. Properties
+    (held by ``tests/test_fairness.py``):
+
+      * conservation/saturation: ``sum(alloc) == min(capacity,
+        sum(demands))`` and no flow exceeds its demand;
+      * weighted no-starvation: every flow gets at least
+        ``min(demand, capacity * w_j / sum(w))``;
+      * monotone in weight: raising one flow's weight never shrinks its
+        allocation;
+      * **bit-exact reduction**: with every weight exactly ``1.0`` (or
+        ``weights=None``) the arithmetic below is operation-for-operation
+        :func:`maxmin_shares` — ``x * 1.0`` is exact and ``weight_left``
+        stays an exact small integer — so uniform-weight WFQ reproduces
+        the PR-2 max-min series bit-for-bit, not approximately.
+    """
+    n = len(demands)
+    alloc = [0.0] * n
+    if n == 0:
+        return alloc
+    if weights is None:
+        # single source for the unweighted arithmetic: the hot engine
+        # paths call maxmin_shares directly, and the explicit-weights
+        # path below is held bit-identical to it by the property tests
+        return maxmin_shares(demands, capacity)
+    if len(weights) != n:
+        raise ValueError(f"{n} demands but {len(weights)} weights")
+    w_left = 0.0
+    for w in weights:
+        if not w > 0.0:
+            raise ValueError(f"weights must be positive, got {w!r}")
+        w_left += w
+    remaining = capacity
+    order = sorted(range(n), key=lambda j: demands[j] / weights[j])
+    for j in order:
+        w = weights[j]
+        fair = remaining * w / w_left if w_left > 0.0 else remaining
+        give = demands[j] if demands[j] < fair else fair
+        alloc[j] = give
+        remaining -= give
+        w_left -= w
+    return alloc
+
+
 def offered_share(own_bytes: float, d_i: float,
                   flows: Sequence[Tuple[float, float]]) -> float:
     """Offered-bytes proportional share of one link for a collective of
@@ -90,6 +145,19 @@ def maxmin_share(d_i: float, owner_overlaps: Sequence[float]) -> float:
     progressive-filling allocation."""
     demands = [1.0] + [min(1.0, ov / d_i) for ov in owner_overlaps]
     return maxmin_shares(demands)[0]
+
+
+def wfq_share(d_i: float, own_weight: float,
+              owner_flows: Sequence[Tuple[float, float]]) -> float:
+    """Weighted share of one link for a collective of duration ``d_i``:
+    the :func:`maxmin_share` flow model (one flow per co-tenant owner,
+    demand = fraction of the window its traffic occupies, owner demands
+    the whole link) resolved by :func:`wfq_shares` with per-owner weights.
+    ``owner_flows`` holds ``(overlap_s, weight)`` per co-tenant owner.
+    All weights 1.0 reduces bit-exactly to :func:`maxmin_share`."""
+    demands = [1.0] + [min(1.0, ov / d_i) for ov, _ in owner_flows]
+    weights = [own_weight] + [w for _, w in owner_flows]
+    return wfq_shares(demands, weights)[0]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -64,12 +64,16 @@ from repro.core.instrumentation import IterationRecord
 from repro.core.pacing import PacingBank
 from repro.fabric.collectives import compile_schedule, select_algo
 from repro.fabric.congestion import (CongestionConfig, CongestionModel,
-                                     maxmin_share, offered_share)
+                                     maxmin_share, offered_share, wfq_share)
 from repro.fabric.placement import place, spanning_groups
 from repro.fabric.stragglers import ComputeModel, StragglerConfig
 from repro.fabric.topology import Topology
 
-FAIRNESS_MODES = ("maxmin", "offered")
+# "maxmin"  — unweighted progressive filling (default, PR-2 behavior);
+# "wfq"     — weighted progressive filling over JobSpec/InferenceSpec
+#             .weight (all weights 1.0 is bit-identical to "maxmin");
+# "offered" — PR-1 offered-bytes proportional split, kept for comparison.
+FAIRNESS_MODES = ("maxmin", "wfq", "offered")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +99,21 @@ class JobSpec:
     # width the elastic re-mesh plan must keep intact after a node failure.
     iters: Optional[int] = None
     model_parallel: int = 1
+    # WFQ share of contended links under fairness="wfq" (ignored by the
+    # unweighted modes), and the scheduling priority the lifecycle engine's
+    # "backfill"/"preempt" policies order the blocked-arrival queue by.
+    weight: float = 1.0
+    priority: int = 0
+    # Parameter-state footprint for the checkpoint-restore cost model
+    # (repro.ft.failure.RestoreCostModel); None estimates it from
+    # grad_bytes (fp32 gradients are parameter-sized).
+    param_bytes: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.weight > 0.0:
+            raise ValueError(
+                f"job {self.name!r}: weight must be positive, got "
+                f"{self.weight!r}")
 
 
 def _materialize_records(trace, n: int) -> List[List[IterationRecord]]:
@@ -178,7 +197,7 @@ class _JobRuntime:
                  "eff", "dur")
 
     def __init__(self, spec: JobSpec, nodes: List[int], topo: Topology,
-                 compute_seed: int):
+                 compute_seed: int, fairness: str = "maxmin"):
         self.spec = spec
         self.n = spec.n_ranks
         self.nodes = nodes
@@ -187,8 +206,12 @@ class _JobRuntime:
         self.bank = PacingBank(spec.pacing, spec.n_ranks) \
             if spec.pacing is not None else None
         if spec.algo == "auto":
+            # weight only steers selection when weighted sharing will
+            # actually grant the w/(w+1) contended share it assumes
+            sel_w = spec.weight if fairness == "wfq" else 1.0
             self.algo, self.schedule = select_algo(
-                topo, nodes, spec.grad_bytes, group=spec.group)
+                topo, nodes, spec.grad_bytes, group=spec.group,
+                weight=sel_w)
         else:
             self.algo = spec.algo
             self.schedule = compile_schedule(
@@ -253,7 +276,8 @@ class FabricEngine:
             taken.update(nodes)
             seed = spec.seed if spec.seed is not None \
                 else base_seed + 1 + 1009 * idx
-            self._jobs.append(_JobRuntime(spec, nodes, topo, seed))
+            self._jobs.append(_JobRuntime(spec, nodes, topo, seed,
+                                          fairness=fairness))
 
     # -- multi-tenant bandwidth partitioning -------------------------------
     def _contended_effs(self, durs0: List[float]) -> List[Dict[str, float]]:
@@ -274,11 +298,15 @@ class FabricEngine:
         demand is the fraction of job i's window it occupies, and gives job
         i its progressive-filling max-min share (:func:`maxmin_shares`) —
         small flows are never starved below their bottleneck share by heavy
-        co-tenants. Either share stacks on the background congestion derate.
+        co-tenants. ``fairness="wfq"`` is the same flow model resolved by
+        weighted progressive filling over ``JobSpec.weight``
+        (:func:`wfq_shares`; all weights 1.0 is bit-identical to
+        ``"maxmin"``). Any share stacks on the background congestion derate.
         """
         jobs = self._jobs
         segments = self._segments
         offered = self.fairness == "offered"
+        wfq = self.fairness == "wfq"
         spans = [(jr.last, jr.last + d0) for jr, d0 in zip(jobs, durs0)]
         effs: List[Dict[str, float]] = []
         for i, jr in enumerate(jobs):
@@ -312,8 +340,15 @@ class FabricEngine:
                             activity[k] = activity.get(k, 0.0) + ov
                     if not flows:
                         continue
-                    share = offered_share(own, d_i, flows) if offered \
-                        else maxmin_share(d_i, list(activity.values()))
+                    if offered:
+                        share = offered_share(own, d_i, flows)
+                    elif wfq:
+                        share = wfq_share(
+                            d_i, jr.spec.weight,
+                            [(ov, jobs[k].spec.weight)
+                             for k, ov in activity.items()])
+                    else:
+                        share = maxmin_share(d_i, list(activity.values()))
                     if share < 1.0:
                         if adj is None:
                             adj = dict(jr.eff)

@@ -32,13 +32,28 @@ window-start order. Each tenant owns an independent background-congestion
 AR(1) stream (seeded per tenant), so *modeled* co-tenants interact only
 through the explicit flow-contention model: progressive-filling **max-min
 fairness** over the flows overlapping a collective's window
-(:func:`repro.fabric.congestion.maxmin_shares`; ``fairness="offered"``
-keeps the PR-1 offered-bytes split for comparison). That isolation is a
-testable property: a tenant's step-time series is bit-identical whether or
-not a co-tenant runs on disjoint links, and degrades exactly while a
-co-tenant's collectives overlap its own on shared links. Same seed + same
-event list => bit-identical series, including across a mid-run failure and
-re-placement.
+(:func:`repro.fabric.congestion.maxmin_shares`; ``fairness="wfq"``
+resolves the same flows by *weighted* progressive filling over per-tenant
+``weight`` — all weights 1.0 is bit-identical to max-min —, and
+``fairness="offered"`` keeps the PR-1 offered-bytes split for comparison).
+That isolation is a testable property: a tenant's step-time series is
+bit-identical whether or not a co-tenant runs on disjoint links, and
+degrades exactly while a co-tenant's collectives overlap its own on shared
+links. Same seed + same event list => bit-identical series, including
+across a mid-run failure and re-placement.
+
+The blocked-arrival queue is policy-driven
+(:mod:`repro.fabric.scheduling`): ``scheduler="fifo"`` (default) is the
+PR-2 behavior bit-for-bit, ``"backfill"`` drains the queue in priority
+order and backfills small tenants into leftover capacity, and
+``"preempt"`` additionally evicts lower-priority running training tenants
+for a high-priority blocked entry — the victim re-enters the queue with
+its progress intact and resumes through the same re-place/re-compile path
+failure recovery uses. Weighted shares reach every consumer: pacing
+(:class:`~repro.core.pacing.PacingBank`) observes WFQ-shared collective
+durations, and ``algo="auto"`` selection costs each candidate's shared-
+tier exposure at the tenant's expected contended share
+(:func:`~repro.fabric.collectives.select_algo` ``weight=``).
 """
 from __future__ import annotations
 
@@ -46,13 +61,16 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.fabric.congestion import (CongestionConfig, CongestionModel,
-                                     maxmin_share, offered_share)
+                                     maxmin_share, offered_share, wfq_share)
 from repro.fabric.engine import FAIRNESS_MODES, JobSpec
 from repro.fabric.placement import place
+from repro.fabric.scheduling import (Scheduler, entry_priority,
+                                     make_scheduler)
 from repro.fabric.topology import Topology
 from repro.fabric.workloads import (InferenceSpec, InferenceTenant, Tenant,
                                     TrainingTenant)
-from repro.ft.failure import HeartbeatConfig, simulated_clock_scope
+from repro.ft.failure import (HeartbeatConfig, RestoreCostModel,
+                              simulated_clock_scope)
 
 TenantSpec = Union[JobSpec, InferenceSpec]
 
@@ -130,27 +148,36 @@ class LifecycleEngine:
                  congestion: Optional[CongestionConfig] = None,
                  heartbeat: Optional[HeartbeatConfig] = None,
                  fairness: str = "maxmin",
-                 replan_delay_s: float = 0.5,
+                 scheduler: Union[str, Scheduler] = "fifo",
+                 replan_delay_s: Optional[float] = 0.5,
+                 restore_cost: Optional[RestoreCostModel] = None,
                  base_seed: int = 0):
         if fairness not in FAIRNESS_MODES:
             raise KeyError(f"unknown fairness mode {fairness!r}; "
                            f"one of {FAIRNESS_MODES}")
         self.topo = topo
         self.fairness = fairness
+        self.scheduler = make_scheduler(scheduler)
         self.congestion_cfg = congestion if congestion is not None \
             else CongestionConfig()
         # simulated steps are ~0.2 s, so the wall-clock-scale defaults of
         # HeartbeatConfig would stall a failed job for simulated minutes
         self.heartbeat = heartbeat if heartbeat is not None \
             else HeartbeatConfig(interval_s=0.2, timeout_s=1.0)
+        # replan_delay_s=0.5 is the PR-2 constant the golden determinism
+        # fixtures were recorded under; replan_delay_s=None (or an explicit
+        # restore_cost) derives the per-tenant delay from the checkpoint-
+        # restore cost model instead: param bytes / restore bandwidth.
         self.replan_delay_s = replan_delay_s
+        self._restore_cost = restore_cost if restore_cost is not None \
+            else (RestoreCostModel() if replan_delay_s is None else None)
         self.base_seed = base_seed
         self._timeline: List[Tuple[float, int, Event]] = sorted(
             (ev.t, i, ev) for i, ev in enumerate(events))
         self._now = 0.0
         self._active: List[Tenant] = []
         self._finished: List[Tenant] = []
-        self._blocked: List[TenantSpec] = []
+        self._weights: Dict[str, float] = {}      # name -> WFQ weight
         self._taken: Dict[int, str] = {}          # node -> tenant name
         self._dead: set = set()
         # per shared link: (start, end, demand_bytes, owner_name) windows
@@ -158,6 +185,7 @@ class LifecycleEngine:
         self._log: List[Tuple[float, str, str]] = []
         self.link_bytes: Dict[str, float] = {}
         self._tenant_seq = 0
+        self._evicted = False
         self._ran = False
 
     # the virtual clock every FailureDetector consumes
@@ -168,7 +196,41 @@ class LifecycleEngine:
         self._log.append((self._now, kind, detail))
 
     # -- admission ---------------------------------------------------------
-    def _admit(self, spec: TenantSpec) -> None:
+    def _replan_delay(self, tenant: Tenant) -> float:
+        """Stall between losing a placement (failure or preemption) and
+        stepping again on the new one: the PR-2 constant, or the
+        checkpoint-restore cost model when one is configured."""
+        if self._restore_cost is not None:
+            return self._restore_cost.delay_s(tenant.param_bytes)
+        return self.replan_delay_s
+
+    # _try_place outcome for a terminally-rejected entry: it leaves the
+    # queue but consumed no capacity, so a drain must not count it as
+    # progress (a redundant extra pass would duplicate 'blocked' records)
+    _REJECTED = "rejected"
+
+    def _admit(self, entry) -> bool:
+        """Admit a queue entry (fresh spec or preempted tenant). Returns
+        True only when the entry was actually placed (capacity consumed
+        or victims evicted); False when it (re-)blocked or was rejected
+        outright."""
+        reason = self._try_place(entry)
+        if reason is self._REJECTED:
+            return False
+        if reason is not None and self.scheduler.on_blocked(self, entry):
+            reason = self._try_place(entry)
+        if reason is not None:
+            self.scheduler.enqueue(entry)
+            self._record("blocked", reason)
+            return False
+        return True
+
+    def _try_place(self, entry) -> Optional[str]:
+        """One placement attempt. None on success, ``_REJECTED`` on
+        terminal rejection; otherwise the blocked-log message."""
+        if isinstance(entry, Tenant):
+            return self._try_resume(entry)
+        spec = entry
         n = spec.n_ranks
         blocked_free = set(self._taken) | self._dead
         if spec.nodes is not None:
@@ -183,25 +245,19 @@ class LifecycleEngine:
                 self._record("rejected",
                              f"{spec.name}: pinned nodes {sorted(dead)} "
                              f"are dead")
-                return
+                return self._REJECTED
             taken = set(self._taken).intersection(nodes)
             if taken:
                 # pinned nodes owned by a co-tenant: wait for them
-                self._blocked.append(spec)
-                self._record("blocked",
-                             f"{spec.name}: pinned nodes {sorted(taken)} "
-                             f"are taken")
-                return
+                return (f"{spec.name}: pinned nodes {sorted(taken)} "
+                        f"are taken")
         else:
             try:
                 nodes = place(spec.placement, self.topo, n,
                               taken=blocked_free,
                               seed=self.base_seed + 101 * self._tenant_seq)
             except ValueError:
-                self._blocked.append(spec)
-                self._record("blocked",
-                             f"{spec.name}: no capacity for {n} ranks")
-                return
+                return f"{spec.name}: no capacity for {n} ranks"
         seed = spec.seed if spec.seed is not None \
             else self.base_seed + 1 + 1009 * self._tenant_seq
         if isinstance(spec, JobSpec):
@@ -214,7 +270,9 @@ class LifecycleEngine:
         tenant.congestion = CongestionModel(
             self.congestion_cfg, self.topo,
             seed=self.base_seed + 2 + 1013 * self._tenant_seq)
+        tenant.fairness = self.fairness
         self._tenant_seq += 1
+        self._weights[spec.name] = tenant.weight
         for nd in nodes:
             self._taken[nd] = spec.name
         tenant.place(self.topo, nodes, self._now, self._clock,
@@ -224,16 +282,129 @@ class LifecycleEngine:
         self._record("arrival",
                      f"{spec.name} ({tenant.kind}) on nodes {nodes} "
                      f"algo={tenant.algo}")
+        return None
+
+    def _replace(self, tenant: Tenant, n: int) -> Optional[List[int]]:
+        """The shared re-place/re-compile tail of failure recovery and
+        preemption resume: fresh placement by the tenant's policy
+        (deterministic seed), replan/restore delay, re-bind (schedule
+        re-compile, ``algo="auto"`` re-selection), next collective formed.
+        A full-size tenant pinned to explicit ``spec.nodes`` resumes on
+        exactly those nodes (waiting while any is taken, falling back to
+        its policy only if one died); a shrunk tenant re-places by policy.
+        Returns the new nodes, or None when the pool cannot host ``n``."""
+        spec = tenant.spec
+        pin = spec.nodes if spec.nodes is not None \
+            and n == len(spec.nodes) \
+            and not self._dead.intersection(spec.nodes) else None
+        if pin is not None:
+            if set(self._taken).intersection(pin):
+                return None
+            nodes = list(pin)
+        else:
+            try:
+                nodes = place(spec.placement, self.topo, n,
+                              taken=set(self._taken) | self._dead,
+                              seed=self.base_seed + 101 * self._tenant_seq
+                              + tenant.generation)
+            except ValueError:
+                return None
+        for nd in nodes:
+            self._taken[nd] = tenant.name
+        resume_t = self._now + self._replan_delay(tenant)
+        tenant.place(self.topo, nodes, resume_t, self._clock,
+                     self.heartbeat)
+        tenant.recovery.record(
+            "resume", step=getattr(tenant, "iters_done", 0),
+            detail=f"{n} ranks on nodes {nodes} algo={tenant.algo} "
+                   f"t={resume_t:.3f}")
+        tenant.prepare()
+        return nodes
+
+    def _try_resume(self, tenant: Tenant) -> Optional[str]:
+        """Re-place a preempted tenant through the recovery path, with its
+        step history and iteration progress intact."""
+        n = len(tenant.nodes)
+        nodes = self._replace(tenant, n)
+        if nodes is None:
+            return f"{tenant.name}: no capacity to resume {n} ranks"
+        self._active.append(tenant)
+        self._record("resumed",
+                     f"{tenant.name} on nodes {nodes} algo={tenant.algo}")
+        return None
 
     def _free_nodes(self, tenant: Tenant) -> None:
         for nd in tenant.nodes:
             if self._taken.get(nd) == tenant.name:
                 del self._taken[nd]
 
+    # -- preemption (scheduler="preempt") ----------------------------------
+    def _preempt_for(self, entry) -> bool:
+        """Evict lower-priority running training tenants until ``entry``
+        fits. Returns True when at least one victim was evicted and the
+        freed pool can host the entry; never evicts gratuitously (no
+        eviction unless the entry then fits)."""
+        resume = isinstance(entry, Tenant)
+        spec = entry.spec if resume else entry
+        prio = entry_priority(entry)
+        need = len(entry.nodes) if resume else spec.n_ranks
+        victims = [t for t in self._active
+                   if t.kind == "training" and t.priority < prio]
+        # lowest priority evicted first; most recently admitted first
+        # among equals (deterministic: _active is admission-ordered)
+        victims.sort(key=lambda t: (t.priority, -self._active.index(t)))
+        pinned = spec.nodes is not None and need == len(spec.nodes) \
+            and not self._dead.intersection(spec.nodes)
+        if pinned:
+            # pinned entry: the victims are exactly the owners of its
+            # pinned nodes — all of them must be evictable
+            owners = {self._taken[nd] for nd in spec.nodes
+                      if nd in self._taken}
+            chosen = [t for t in victims if t.name in owners]
+            if not owners or len(chosen) < len(
+                    {t.name for t in self._active if t.name in owners}):
+                return False
+        else:
+            free = self.topo.n_ranks - len(set(self._taken) | self._dead)
+            chosen = []
+            for t in victims:
+                if free >= need:
+                    break
+                chosen.append(t)
+                free += sum(1 for nd in t.nodes if nd not in self._dead)
+            if free < need or not chosen:
+                return False
+        for t in chosen:
+            self._preempt(t)
+        self._evicted = True
+        return True
+
+    def _preempt(self, tenant: Tenant) -> None:
+        tenant.pending_start = None
+        self._free_nodes(tenant)
+        self._active.remove(tenant)
+        tenant.recovery.record(
+            "preempted", step=getattr(tenant, "iters_done", 0),
+            detail=f"evicted at t={self._now:.3f}")
+        self.scheduler.enqueue(tenant)
+        self._record("preempted",
+                     f"{tenant.name} evicted ({len(tenant.nodes)} nodes "
+                     f"freed)")
+
     def _retry_blocked(self) -> None:
-        blocked, self._blocked = self._blocked, []
-        for spec in blocked:
-            self._admit(spec)
+        """Offer freed capacity to the queue. fifo: one pass in arrival
+        order (PR-2 bit-compat). backfill/preempt: priority-ordered passes
+        until no admission succeeds, so capacity freed by one admission
+        (or eviction) is offered to the rest of the queue immediately."""
+        while True:
+            batch = self.scheduler.drain()
+            if not batch:
+                return
+            progress = False
+            for entry in self.scheduler.order(batch):
+                progress |= self._admit(entry)
+            if not (progress and self.scheduler.multipass):
+                return
 
     def _depart(self, tenant: Tenant, t: float, why: str) -> None:
         tenant.departed_t = t
@@ -247,20 +418,28 @@ class LifecycleEngine:
     # -- events ------------------------------------------------------------
     def _apply_event(self, ev: Event) -> None:
         if isinstance(ev, Arrival):
+            self._evicted = False
             self._admit(ev.spec)
+            if self._evicted and self.scheduler.queue:
+                # eviction may have freed more than the arrival needed:
+                # offer the surplus to the queue (victims included) now
+                self._retry_blocked()
         elif isinstance(ev, Departure):
             for tenant in list(self._active):
                 if tenant.name == ev.name:
                     self._depart(tenant, ev.t, "scheduled departure")
                     return
-            # a tenant still waiting for capacity retires from the queue —
-            # otherwise a late admission would outlive its own departure
-            for spec in self._blocked:
-                if spec.name == ev.name:
-                    self._blocked.remove(spec)
-                    self._record("departure",
-                                 f"{ev.name}: departed while blocked")
-                    return
+            # a tenant still waiting for capacity (blocked spec or
+            # preempted tenant) retires from the queue — otherwise a late
+            # admission would outlive its own departure
+            entry = self.scheduler.remove(ev.name)
+            if entry is not None:
+                if isinstance(entry, Tenant):
+                    entry.departed_t = ev.t
+                    self._finished.append(entry)
+                self._record("departure",
+                             f"{ev.name}: departed while blocked")
+                return
             self._record("departure_noop", f"{ev.name} not active")
         elif isinstance(ev, NodeFailure):
             self._dead.add(ev.node)
@@ -302,28 +481,13 @@ class LifecycleEngine:
         if new_n < 2:
             self._depart(tenant, self._now, "too few survivors")
             return
-        try:
-            spec = tenant.spec
-            nodes = place(spec.placement, self.topo, new_n,
-                          taken=set(self._taken) | self._dead,
-                          seed=self.base_seed + 101 * self._tenant_seq
-                          + tenant.generation)
-        except ValueError:
+        nodes = self._replace(tenant, new_n)
+        if nodes is None:
             self._depart(tenant, self._now, "no capacity to re-place")
             return
-        for nd in nodes:
-            self._taken[nd] = tenant.name
-        resume_t = t_detect + self.replan_delay_s
-        tenant.place(self.topo, nodes, resume_t, self._clock,
-                     self.heartbeat)
-        tenant.recovery.record(
-            "resume", step=getattr(tenant, "iters_done", 0),
-            detail=f"{new_n} ranks on nodes {nodes} algo={tenant.algo} "
-                   f"t={resume_t:.3f}")
         self._record("replaced",
                      f"{tenant.name} -> {new_n} ranks on {nodes} "
                      f"algo={tenant.algo}")
-        tenant.prepare()
         self._retry_blocked()
 
     # -- contention --------------------------------------------------------
@@ -339,6 +503,7 @@ class LifecycleEngine:
         e_i = s_i + d0
         segments = self._segments
         offered = self.fairness == "offered"
+        wfq = self.fairness == "wfq"
         adj: Optional[Dict[str, float]] = None
         for ln, own in tenant.pending_demand.items():
             # same flow accounting as FabricEngine._contended_effs, via the
@@ -367,8 +532,15 @@ class LifecycleEngine:
                     activity[kname] = activity.get(kname, 0.0) + ov
             if not flows:
                 continue
-            share = offered_share(own, d0, flows) if offered \
-                else maxmin_share(d0, list(activity.values()))
+            if offered:
+                share = offered_share(own, d0, flows)
+            elif wfq:
+                share = wfq_share(
+                    d0, tenant.weight,
+                    [(ov, self._weights[nm])
+                     for nm, ov in activity.items()])
+            else:
+                share = maxmin_share(d0, list(activity.values()))
             if share < 1.0:
                 if adj is None:
                     adj = dict(eff)
@@ -452,7 +624,10 @@ class LifecycleEngine:
                 self._resolve(nxt)
         for tenant in self._active:
             tenant.pending_start = None
-        tenants = self._finished + self._active
+        # preempted tenants still queued at the horizon carry history too
+        leftovers = [e for e in self.scheduler.queue
+                     if isinstance(e, Tenant)]
+        tenants = self._finished + self._active + leftovers
         tenants.sort(key=lambda t: (t.arrived_t if t.arrived_t is not None
                                     else float("inf")))
         return LifecycleResult(self.topo, tenants, self._log,

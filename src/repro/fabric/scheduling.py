@@ -1,0 +1,142 @@
+"""Blocked-arrival queue policies for the lifecycle engine.
+
+PR 2's :class:`~repro.fabric.events.LifecycleEngine` kept one implicit
+policy: blocked arrivals wait in a list and every freed-capacity event
+retries them in arrival order. That *is* a scheduler — just an unnamed one.
+This module makes the policy explicit and pluggable
+(``LifecycleEngine(scheduler=...)``):
+
+  * ``fifo`` (default) — exactly the PR-2 behavior, single retry pass in
+    arrival order. Kept bit-identical (same admission order, same placement
+    seeds, same log records) so the golden determinism fixtures recorded
+    against PR 2 replay unchanged.
+  * ``backfill`` — the queue drains in ``priority`` order (descending,
+    arrival order among equals): a freed-capacity event offers nodes to the
+    highest-priority waiter first, and smaller low-priority tenants then
+    *backfill* whatever is left over. Within a drain, a queued
+    higher-priority tenant is never delayed by a backfilled one — the
+    backfiller only ever takes capacity the higher-priority tenant could
+    not use at that instant. Multiple drain passes run until no further
+    admission succeeds, so capacity freed by one admission is immediately
+    offered to the rest of the queue. Admission stays work-conserving
+    (PR-2 semantics): a *fresh arrival* that fits free capacity is
+    admitted immediately, without reserving nodes for queued waiters —
+    EASY-style reservations need runtime estimates and are a ROADMAP
+    follow-up.
+  * ``preempt`` — ``backfill`` plus admission-time eviction: when a blocked
+    entry outranks running *training* tenants, the engine evicts the
+    lowest-priority victims (most recently admitted first among equals)
+    until the entry fits. A victim re-enters the queue as a *resumable
+    tenant* — its step history, iteration count, and recovery log ride
+    along — and resumes later through the PR-2 re-place/re-compile path
+    (fresh placement, ``algo="auto"`` re-selection, replan/restore delay),
+    finishing exactly the remaining work of its iteration budget. Inference
+    tenants are never evicted: they are the latency-sensitive traffic the
+    priority exists to protect.
+
+The queue holds two kinds of entry: a :class:`TenantSpec` that has never
+been admitted, and a live :class:`~repro.fabric.workloads.Tenant` that was
+preempted and will resume with its progress intact. Schedulers are
+one-shot, like the engine that owns them — construct a fresh one (or pass
+the policy name) per scenario.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Union
+
+from repro.fabric.engine import JobSpec
+from repro.fabric.workloads import InferenceSpec, Tenant
+
+# a spec that has never been admitted, or a preempted tenant that will
+# resume with its progress intact
+QueueEntry = Union[JobSpec, InferenceSpec, Tenant]
+
+
+def entry_name(entry: QueueEntry) -> str:
+    return entry.name
+
+
+def entry_priority(entry: QueueEntry) -> int:
+    return int(getattr(entry, "priority", 0))
+
+
+class Scheduler:
+    """Queue policy hooks the lifecycle engine drives.
+
+    ``order`` ranks a drained batch for admission; ``on_blocked`` may make
+    room for a just-blocked entry (return True to retry its placement
+    once); ``multipass`` re-drains until no admission succeeds, offering
+    capacity freed by one admission to the rest of the queue in the same
+    virtual instant.
+    """
+
+    name: str = ""
+    multipass: bool = False
+
+    def __init__(self) -> None:
+        self.queue: List[QueueEntry] = []
+
+    def enqueue(self, entry: QueueEntry) -> None:
+        self.queue.append(entry)
+
+    def drain(self) -> List[QueueEntry]:
+        batch, self.queue = self.queue, []
+        return batch
+
+    def remove(self, name: str) -> Optional[QueueEntry]:
+        for entry in self.queue:
+            if entry_name(entry) == name:
+                self.queue.remove(entry)
+                return entry
+        return None
+
+    def order(self, batch: List[QueueEntry]) -> List[QueueEntry]:
+        return batch
+
+    def on_blocked(self, engine, entry: QueueEntry) -> bool:
+        return False
+
+
+class FifoScheduler(Scheduler):
+    """PR-2 behavior: retry in arrival order, one pass per freed-capacity
+    event, no priorities, no eviction."""
+
+    name = "fifo"
+
+
+class BackfillScheduler(Scheduler):
+    """Priority-ordered drain with backfilling into leftover capacity."""
+
+    name = "backfill"
+    multipass = True
+
+    def order(self, batch: List[QueueEntry]) -> List[QueueEntry]:
+        # stable: arrival order among equal priorities, so uniform-priority
+        # scenarios drain exactly like fifo
+        return sorted(batch, key=lambda e: -entry_priority(e))
+
+
+class PreemptScheduler(BackfillScheduler):
+    """Backfill ordering plus eviction of lower-priority training tenants
+    when a blocked entry outranks them (victim selection and eviction live
+    in ``LifecycleEngine._preempt_for`` — they need the engine's node
+    accounting)."""
+
+    name = "preempt"
+
+    def on_blocked(self, engine, entry: QueueEntry) -> bool:
+        return engine._preempt_for(entry)
+
+
+SCHEDULERS = {cls.name: cls for cls in
+              (FifoScheduler, BackfillScheduler, PreemptScheduler)}
+
+
+def make_scheduler(spec: Union[str, Scheduler]) -> Scheduler:
+    if isinstance(spec, Scheduler):
+        return spec
+    try:
+        return SCHEDULERS[spec]()
+    except KeyError:
+        raise KeyError(f"unknown scheduler {spec!r}; "
+                       f"one of {tuple(sorted(SCHEDULERS))}") from None

@@ -63,12 +63,30 @@ class InferenceSpec:
     placement: str = "compact"
     nodes: Optional[Tuple[int, ...]] = None
     seed: Optional[int] = None
+    # WFQ share of contended links under fairness="wfq"; scheduling
+    # priority for the lifecycle engine's backfill/preempt queue policies.
+    weight: float = 1.0
+    priority: int = 0
+    # p99 latency target: when set, the tenant tracks per-request SLO
+    # attainment (slo_ok / slo_attainment / attainment_series).
+    slo_p99_s: Optional[float] = None
+    # Model-state footprint for the checkpoint-restore cost model; None
+    # estimates it from the prefill payload (activation-sized, the right
+    # order for the weight shards a replica must reload).
+    param_bytes: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.weight > 0.0:
+            raise ValueError(
+                f"fleet {self.name!r}: weight must be positive, got "
+                f"{self.weight!r}")
 
 
 def _compile(topo: Topology, nodes: Sequence[int], nbytes: float,
-             algo: str, group: int) -> Tuple[str, CompiledSchedule]:
+             algo: str, group: int, weight: float = 1.0
+             ) -> Tuple[str, CompiledSchedule]:
     if algo == "auto":
-        return select_algo(topo, nodes, nbytes, group=group)
+        return select_algo(topo, nodes, nbytes, group=group, weight=weight)
     return algo, compile_schedule(topo, nodes, nbytes, algo=algo,
                                   group=group)
 
@@ -91,6 +109,13 @@ class Tenant:
     """
 
     kind: str = ""
+    # WFQ weight / scheduling priority; subclasses copy them from the spec
+    weight: float = 1.0
+    priority: int = 0
+    # the owning engine's fairness mode (set at admission): weight steers
+    # algo="auto" selection only under "wfq", where the contended share it
+    # assumes will actually be granted
+    fairness: str = "maxmin"
 
     def __init__(self, name: str, seed: int):
         self.name = name
@@ -144,6 +169,12 @@ class Tenant:
     def wants_departure(self) -> bool:
         return False
 
+    @property
+    def param_bytes(self) -> float:
+        """Model-state bytes a restore must reload (checkpoint-restore
+        cost model input)."""
+        return 0.0
+
 
 class TrainingTenant(Tenant):
     kind = "training"
@@ -151,6 +182,8 @@ class TrainingTenant(Tenant):
     def __init__(self, spec: JobSpec, seed: int):
         super().__init__(spec.name, seed)
         self.spec = spec
+        self.weight = spec.weight
+        self.priority = spec.priority
         self.step_times: List[float] = []
         self.iters_done = 0
         self._release = 0.0
@@ -170,7 +203,8 @@ class TrainingTenant(Tenant):
         self._bank = PacingBank(spec.pacing, n) \
             if spec.pacing is not None else None
         self.algo, self.schedule = _compile(
-            topo, self.nodes, spec.grad_bytes, spec.algo, spec.group)
+            topo, self.nodes, spec.grad_bytes, spec.algo, spec.group,
+            spec.weight if self.fairness == "wfq" else 1.0)
         self.floor_denom = max(self.schedule.total_s(None), 1e-9)
         self.demand = _shared_demand(topo, self.schedule)
         self._release = t
@@ -227,6 +261,13 @@ class TrainingTenant(Tenant):
         return self.spec.iters is not None \
             and self.iters_done >= self.spec.iters
 
+    @property
+    def param_bytes(self) -> float:
+        # fp32 gradients are parameter-sized, so the gradient payload is
+        # the natural estimate of the checkpoint a restart must reload
+        return self.spec.param_bytes if self.spec.param_bytes is not None \
+            else self.spec.grad_bytes
+
     # -- metrics -----------------------------------------------------------
     @property
     def mean_step(self) -> float:
@@ -250,7 +291,10 @@ class InferenceTenant(Tenant):
     def __init__(self, spec: InferenceSpec, seed: int):
         super().__init__(spec.name, seed)
         self.spec = spec
+        self.weight = spec.weight
+        self.priority = spec.priority
         self.latencies: List[float] = []
+        self.slo_ok: List[bool] = []  # per request, when slo_p99_s is set
         self.decode_step_times: List[float] = []
         self.requests_done = 0
         self.tokens_done = 0
@@ -264,10 +308,11 @@ class InferenceTenant(Tenant):
 
     def _bind(self, topo: Topology, t: float) -> None:
         spec = self.spec
+        w = spec.weight if self.fairness == "wfq" else 1.0
         self.algo, self.prefill_sched = _compile(
-            topo, self.nodes, spec.prefill_bytes, spec.algo, spec.group)
+            topo, self.nodes, spec.prefill_bytes, spec.algo, spec.group, w)
         _, self.decode_sched = _compile(
-            topo, self.nodes, spec.decode_bytes, spec.algo, spec.group)
+            topo, self.nodes, spec.decode_bytes, spec.algo, spec.group, w)
         self.prefill_demand = _shared_demand(topo, self.prefill_sched)
         self.decode_demand = _shared_demand(topo, self.decode_sched)
         self.prefill_floor = max(self.prefill_sched.total_s(None), 1e-9)
@@ -314,7 +359,10 @@ class InferenceTenant(Tenant):
         self._phase_finish = finish
         self._phase += 1
         if self._phase > spec.decode_tokens:
-            self.latencies.append(finish - self._req_arrival)
+            lat = finish - self._req_arrival
+            self.latencies.append(lat)
+            if spec.slo_p99_s is not None:
+                self.slo_ok.append(lat <= spec.slo_p99_s)
             self.requests_done += 1
             self.tokens_done += spec.decode_tokens
             self._busy_until = finish
@@ -339,3 +387,31 @@ class InferenceTenant(Tenant):
         else:
             span = self.departed_t - (self.arrived_t or 0.0)
         return self.tokens_done / span if span > 0 else 0.0
+
+    @property
+    def param_bytes(self) -> float:
+        return self.spec.param_bytes if self.spec.param_bytes is not None \
+            else self.spec.prefill_bytes
+
+    # -- SLO attainment ----------------------------------------------------
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of completed requests inside ``slo_p99_s``. A fleet
+        with an SLO that completed *nothing* reports 0.0 — total
+        starvation is the worst outcome, not a vacuous pass. Without a
+        configured SLO the metric is vacuously 1.0."""
+        if not self.slo_ok:
+            return 1.0 if self.spec.slo_p99_s is None else 0.0
+        return sum(self.slo_ok) / len(self.slo_ok)
+
+    def attainment_series(self, window: int = 50) -> List[float]:
+        """Rolling SLO attainment over trailing ``window`` requests — the
+        per-tenant series benchmarks plot against training throughput."""
+        out: List[float] = []
+        hits = 0
+        for i, ok in enumerate(self.slo_ok):
+            hits += ok
+            if i >= window:
+                hits -= self.slo_ok[i - window]
+            out.append(hits / min(i + 1, window))
+        return out

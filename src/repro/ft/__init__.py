@@ -3,4 +3,5 @@ backoff, elastic re-mesh planning. Straggler mitigation is the paper's
 pacing layer (repro.core)."""
 from repro.ft.failure import (FailureDetector, HeartbeatConfig,  # noqa: F401
                               RecoveryEvent, RecoveryLog, RestartPolicy,
-                              plan_elastic_mesh, simulated_clock_scope)
+                              RestoreCostModel, plan_elastic_mesh,
+                              simulated_clock_scope)

@@ -84,6 +84,33 @@ class FailureDetector:
         return [r for r in self.last_seen if r not in sus]
 
 
+@dataclasses.dataclass(frozen=True)
+class RestoreCostModel:
+    """Checkpoint-restore cost for the recovery/preemption replan delay.
+
+    PR 2 charged a flat 0.5 s for every re-place. Physically the stall is
+    dominated by reloading the parameter state from the checkpoint store
+    (``repro.ckpt`` restores full leaves at the store's read bandwidth) plus
+    a size-independent overhead (manifest read, process re-init, schedule
+    re-compile). ``delay_s(param_bytes)`` models exactly that; the defaults
+    reproduce the old constant to within 5% for the default 1.1 GB job
+    (0.25 + 1.1e9 / 4e9 = 0.525 s), so switching a scenario to the model
+    perturbs rather than rewrites its series.
+
+    The lifecycle engine uses this when constructed with
+    ``replan_delay_s=None``; the constant remains the default (explicit
+    override) because the PR-1/PR-2 golden determinism fixtures were
+    recorded under it.
+    """
+    read_bw_Bps: float = 4e9          # aggregate checkpoint read bandwidth
+    overhead_s: float = 0.25          # manifest, re-init, re-compile
+
+    def delay_s(self, param_bytes: float) -> float:
+        if param_bytes < 0.0:
+            raise ValueError(f"param_bytes must be >= 0, got {param_bytes}")
+        return self.overhead_s + param_bytes / self.read_bw_Bps
+
+
 @dataclasses.dataclass
 class RestartPolicy:
     max_restarts: int = 100
@@ -136,7 +163,7 @@ def plan_elastic_mesh(
 
 @dataclasses.dataclass
 class RecoveryEvent:
-    kind: str                         # "failure" | "restart" | "resume"
+    kind: str                # "failure" | "restart" | "resume" | "preempted"
     step: int
     detail: str
 

@@ -109,6 +109,26 @@ def test_select_algo_is_optimal_over_candidates():
                 assert t <= other.total_s(None) + 1e-12
 
 
+def test_select_algo_weight_shifts_the_choice():
+    """WFQ weight reaches auto selection: a weight-1 tenant on a scattered
+    placement keeps traffic off the shared tier (hierarchical); a heavy
+    tenant keeps most of a contended link anyway, discounts the shared
+    exposure, and takes the uncongested-fastest ring. weight=1.0 must be
+    the PR-2 selection exactly."""
+    from repro.fabric import select_algo
+    from repro.fabric.placement import place
+    topo = fat_tree(64, nodes_per_leaf=8)
+    nodes = place("scattered", topo, 12)
+    unweighted = select_algo(topo, nodes, 1.1e9)
+    assert unweighted[0] == "hierarchical"
+    assert select_algo(topo, nodes, 1.1e9, weight=1.0)[0] == unweighted[0]
+    # light tenants agree with (or exceed) the shared-tier aversion...
+    assert select_algo(topo, nodes, 1.1e9, weight=0.25)[0] \
+        == "hierarchical"
+    # ...heavy tenants flip to raw speed
+    assert select_algo(topo, nodes, 1.1e9, weight=8.0)[0] == "ring"
+
+
 def test_select_algo_deterministic():
     from repro.fabric import select_algo
     topo = fat_tree(32, nodes_per_leaf=8)

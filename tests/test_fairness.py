@@ -1,13 +1,25 @@
-"""Max-min fair bandwidth sharing: allocator properties, engine-level byte
+"""Fair bandwidth sharing: max-min and weighted (WFQ) allocator properties
+— conservation, bottleneck saturation, weight monotonicity, no-starvation,
+and the bit-exact uniform-weight reduction — plus engine-level byte
 conservation, offered-bytes equivalence for symmetric demands, and the
-documented no-starvation direction versus the offered-bytes split."""
+documented no-starvation direction versus the offered-bytes split.
+
+The allocator invariants run twice: as seeded random sweeps (always on, no
+optional deps) and as hypothesis property tests when hypothesis is
+installed (see requirements-dev.txt)."""
 import random
 
 import pytest
 
 from repro.fabric import CongestionConfig, FabricEngine, JobSpec, fat_tree
-from repro.fabric.congestion import maxmin_shares
+from repro.fabric.congestion import maxmin_shares, wfq_share, wfq_shares
 from repro.fabric.stragglers import StragglerConfig
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                   # tier-1 degrades gracefully
+    HAVE_HYPOTHESIS = False
 
 
 # ---------------------------------------------------------------------------
@@ -62,7 +74,145 @@ def test_maxmin_random_sweep_properties():
 
 def test_engine_rejects_unknown_fairness():
     with pytest.raises(KeyError):
-        FabricEngine(fat_tree(16), [JobSpec("a", 4)], fairness="wfq")
+        FabricEngine(fat_tree(16), [JobSpec("a", 4)], fairness="bogus")
+
+
+# ---------------------------------------------------------------------------
+# weighted (WFQ) allocator properties
+# ---------------------------------------------------------------------------
+
+
+def _check_wfq_invariants(demands, weights, capacity=1.0):
+    alloc = wfq_shares(demands, weights, capacity)
+    n = len(demands)
+    total_w = sum(weights)
+    # conservation / bottleneck saturation
+    assert sum(alloc) == pytest.approx(min(capacity, sum(demands)))
+    for a, d, w in zip(alloc, demands, weights):
+        # never above demand
+        assert a <= d + 1e-9
+        # weighted no-starvation: at least the weighted bottleneck share
+        assert a >= min(d, capacity * w / total_w) - 1e-9
+    return alloc
+
+
+def test_wfq_uniform_weights_bit_identical_to_maxmin():
+    """The acceptance-criteria reduction: weight-1 everywhere is the same
+    arithmetic as maxmin_shares, so the result is `==`, not approx."""
+    rng = random.Random(11)
+    for _ in range(300):
+        n = rng.randint(0, 8)
+        demands = [rng.random() * 2.0 for _ in range(n)]
+        capacity = rng.choice([1.0, 0.7, 2.5])
+        assert wfq_shares(demands, [1.0] * n, capacity) \
+            == maxmin_shares(demands, capacity)
+        assert wfq_shares(demands, None, capacity) \
+            == maxmin_shares(demands, capacity)
+
+
+def test_wfq_share_uniform_weights_bit_identical_to_maxmin_share():
+    from repro.fabric.congestion import maxmin_share
+    rng = random.Random(13)
+    for _ in range(100):
+        d_i = 0.05 + rng.random()
+        ovs = [rng.random() * d_i * 2 for _ in range(rng.randint(0, 5))]
+        assert wfq_share(d_i, 1.0, [(ov, 1.0) for ov in ovs]) \
+            == maxmin_share(d_i, ovs)
+
+
+def test_wfq_random_sweep_invariants():
+    rng = random.Random(17)
+    for _ in range(300):
+        n = rng.randint(1, 8)
+        demands = [rng.random() * 2.0 for _ in range(n)]
+        weights = [0.1 + rng.random() * 8.0 for _ in range(n)]
+        _check_wfq_invariants(demands, weights,
+                              capacity=rng.choice([1.0, 0.5, 3.0]))
+
+
+def test_wfq_monotone_in_weight():
+    """Raising one flow's weight never shrinks its allocation."""
+    rng = random.Random(19)
+    for _ in range(200):
+        n = rng.randint(2, 6)
+        demands = [rng.random() * 2.0 for _ in range(n)]
+        weights = [0.1 + rng.random() * 4.0 for _ in range(n)]
+        j = rng.randrange(n)
+        lo = wfq_shares(demands, weights)[j]
+        weights[j] *= 1.0 + rng.random() * 4.0
+        hi = wfq_shares(demands, weights)[j]
+        assert hi >= lo - 1e-9
+
+
+def test_wfq_splits_saturated_link_by_weight():
+    # all flows saturated: allocation is exactly proportional to weight
+    alloc = wfq_shares([1.0, 1.0, 1.0], [1.0, 2.0, 5.0])
+    assert alloc == pytest.approx([1 / 8, 2 / 8, 5 / 8])
+
+
+def test_wfq_heavy_weight_cannot_exceed_its_demand():
+    # weight buys priority, not free bandwidth: the heavy-weight small
+    # flow is capped at its demand, leftovers go to the others
+    alloc = wfq_shares([0.1, 1.0, 1.0], [100.0, 1.0, 1.0])
+    assert alloc[0] == pytest.approx(0.1)
+    assert alloc[1] == alloc[2] == pytest.approx(0.45)
+
+
+def test_specs_reject_non_positive_weight():
+    # caught at construction, not deep inside algo selection / allocation
+    from repro.fabric import InferenceSpec
+    for w in (0.0, -1.0):
+        with pytest.raises(ValueError):
+            JobSpec("a", 4, weight=w)
+        with pytest.raises(ValueError):
+            InferenceSpec("s", 4, weight=w)
+
+
+def test_wfq_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        wfq_shares([1.0, 1.0], [1.0])            # length mismatch
+    with pytest.raises(ValueError):
+        wfq_shares([1.0], [0.0])                 # non-positive weight
+    with pytest.raises(ValueError):
+        wfq_shares([1.0], [-2.0])
+    assert wfq_shares([], []) == []
+
+
+if HAVE_HYPOTHESIS:
+    finite = dict(allow_nan=False, allow_infinity=False)
+    _demands = st.lists(st.floats(min_value=0.0, max_value=50.0, **finite),
+                        min_size=1, max_size=12)
+
+    @given(demands=_demands,
+           data=st.data(),
+           capacity=st.floats(min_value=1e-3, max_value=100.0, **finite))
+    @settings(max_examples=150, deadline=None)
+    def test_hyp_wfq_invariants(demands, data, capacity):
+        weights = data.draw(st.lists(
+            st.floats(min_value=1e-3, max_value=100.0, **finite),
+            min_size=len(demands), max_size=len(demands)))
+        _check_wfq_invariants(demands, weights, capacity)
+
+    @given(demands=_demands,
+           capacity=st.floats(min_value=1e-3, max_value=100.0, **finite))
+    @settings(max_examples=150, deadline=None)
+    def test_hyp_wfq_uniform_reduces_bit_exactly(demands, capacity):
+        assert wfq_shares(demands, [1.0] * len(demands), capacity) \
+            == maxmin_shares(demands, capacity)
+
+    @given(demands=_demands, data=st.data(),
+           factor=st.floats(min_value=1.0, max_value=50.0, **finite))
+    @settings(max_examples=150, deadline=None)
+    def test_hyp_wfq_monotone_in_weight(demands, data, factor):
+        n = len(demands)
+        weights = data.draw(st.lists(
+            st.floats(min_value=1e-3, max_value=100.0, **finite),
+            min_size=n, max_size=n))
+        j = data.draw(st.integers(min_value=0, max_value=n - 1))
+        lo = wfq_shares(demands, weights)[j]
+        weights[j] *= factor
+        hi = wfq_shares(demands, weights)[j]
+        assert hi >= lo - 1e-9 * max(1.0, lo)
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +263,64 @@ def test_maxmin_equals_offered_for_symmetric_demands():
     solo = FabricEngine(_fabric(), [jobs[0]], base_seed=0,
                         congestion=cong).run(80, warmup=10)
     assert maxmin[0][0] > solo.job("a").step_times[0]
+
+
+def test_engine_wfq_uniform_weights_bit_identical_to_maxmin():
+    """fairness="wfq" with default weights must be the max-min engine
+    bit-for-bit (list equality, not approx) — the engine-level face of the
+    allocator's uniform-weight reduction."""
+    jobs = [JobSpec("a", 8, placement="scattered"),
+            JobSpec("b", 8, placement="scattered", grad_bytes=2e9),
+            JobSpec("c", 8, placement="compact", algo="tree")]
+
+    def series(fairness):
+        res = FabricEngine(_fabric(), jobs, base_seed=3,
+                           fairness=fairness).run(100, warmup=10)
+        return [res.job(s.name).step_times for s in jobs]
+
+    assert series("wfq") == series("maxmin")
+
+
+def test_engine_wfq_weight_buys_bandwidth():
+    """Two clones contending on the same up-links, one carrying 16x the
+    weight: the heavy tenant's contended windows widen to ~w/(w+1) of the
+    link, so its steps shrink versus the unweighted split. (BSP traffic is
+    closed-loop — the faster heavy tenant also occupies the link *less*,
+    so the light co-tenant is not necessarily slower overall; the
+    open-loop trade lives in the lifecycle WFQ tests/benchmark.)"""
+    def mean_steps(w_a, w_b, fairness="wfq"):
+        jobs = [JobSpec("a", 12, nodes=tuple(range(12)), grad_bytes=4e9,
+                        weight=w_a),
+                JobSpec("b", 12, nodes=tuple(range(12, 24)), grad_bytes=4e9,
+                        weight=w_b)]
+        res = FabricEngine(_fabric(), jobs, base_seed=0,
+                           fairness=fairness).run(120, warmup=20)
+        return res.job("a").mean_step, res.job("b").mean_step
+
+    eq_a, eq_b = mean_steps(1.0, 1.0)
+    hi_a, _ = mean_steps(16.0, 1.0)
+    assert hi_a < eq_a                # weight buys bandwidth
+    # symmetric: the same weight on the other tenant speeds *it* up
+    _, hi_b = mean_steps(1.0, 16.0)
+    assert hi_b < eq_b
+    # weights only matter under wfq: maxmin ignores them entirely
+    mm_a, mm_b = mean_steps(16.0, 1.0, fairness="maxmin")
+    assert (mm_a, mm_b) == (eq_a, eq_b)
+
+
+def test_unweighted_modes_ignore_weight_even_with_auto_algo():
+    """JobSpec.weight is documented as ignored by the unweighted fairness
+    modes — including the algo="auto" selection path, which must not
+    optimize for a contended share that maxmin will never grant."""
+    def series(w):
+        jobs = [JobSpec("a", 12, placement="scattered", algo="auto",
+                        weight=w),
+                JobSpec("b", 12, placement="scattered", grad_bytes=2e9)]
+        res = FabricEngine(_fabric(), jobs, base_seed=0,
+                           fairness="maxmin").run(60, warmup=5)
+        return res.job("a").algo, res.job("a").step_times
+
+    assert series(8.0) == series(1.0)
 
 
 def test_maxmin_never_starves_the_small_flow():

@@ -1,0 +1,174 @@
+"""Golden determinism-regression fixtures.
+
+PR 1/2 established a determinism contract: same seed + same event list =>
+bit-identical step-time / latency series, across arrivals, blocked
+admissions, failures, and re-placements. The property tests in
+``test_lifecycle.py`` check *relations* (prefix equality, inertness); these
+tests pin the *absolute* series: small engine / lifecycle scenarios are
+serialized (float hex — bit-exact, no repr rounding) under
+``tests/golden/`` and every run must replay them identically, so a future
+refactor cannot silently shift the contract.
+
+The ``lifecycle_fifo`` and ``engine_maxmin`` fixtures were generated from
+the PR-2 code before weighted fair queuing and scheduler policies existed —
+replaying them bit-exactly *is* the "``scheduler="fifo"``, all weights 1
+reduces to PR-2" guarantee. ``lifecycle_preempt`` and ``lifecycle_wfq``
+lock the new policies' output the same way for the next refactor.
+
+Regenerate (only when a behavior change is intended and reviewed):
+
+    PYTHONPATH=src python tests/test_golden_series.py
+"""
+import json
+import os
+
+import pytest
+
+from repro.fabric import (Arrival, Departure, FabricEngine, InferenceSpec,
+                          JobSpec, LifecycleEngine, NodeFailure, fat_tree)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _fabric():
+    return fat_tree(64, nodes_per_leaf=8)
+
+
+# ---------------------------------------------------------------------------
+# scenarios: one builder per fixture, shared by the test and the regen entry
+# ---------------------------------------------------------------------------
+
+
+def mixed_lifecycle_events():
+    """PR-2 shape: staggered arrivals, an open-loop inference co-tenant, a
+    blocked arrival admitted on a departure, and a mid-run node failure.
+    Shared with tests/test_scheduling.py so the scheduler-equivalence
+    tests exercise exactly the scenario the golden fixture pins."""
+    return [
+        Arrival(0.0, JobSpec("t0", 12, placement="compact", algo="auto")),
+        Arrival(2.0, InferenceSpec("serve", 4, rate_rps=8.0)),
+        Arrival(3.0, JobSpec("t1", 12, placement="compact",
+                             grad_bytes=2e9)),
+        Arrival(4.0, JobSpec("big", 40, placement="compact")),
+        NodeFailure(9.0, 3),
+        Departure(10.0, "t1"),
+    ]
+
+
+def _lifecycle_fifo():
+    """The mixed scenario under the default (fifo, weight-1,
+    constant-replan) configuration."""
+    return LifecycleEngine(_fabric(), mixed_lifecycle_events(),
+                           base_seed=0).run(16.0)
+
+
+def _lifecycle_preempt():
+    """Scheduler-policy scenario: a low-priority incumbent fills the fabric,
+    a high-priority arrival preempts it, and the victim resumes with its
+    progress intact once capacity frees."""
+    events = [
+        Arrival(0.0, JobSpec("low", 56, placement="compact", priority=0,
+                             iters=60)),
+        Arrival(2.0, JobSpec("high", 24, placement="compact", priority=5,
+                             iters=20)),
+        Arrival(3.0, JobSpec("fill", 6, placement="compact", priority=1)),
+    ]
+    return LifecycleEngine(_fabric(), events, base_seed=0,
+                           scheduler="preempt").run(16.0)
+
+
+def _lifecycle_wfq():
+    """Weighted sharing scenario: a heavy training tenant and a
+    latency-sensitive inference fleet on the same up-links under
+    fairness="wfq" with non-uniform weights and an SLO."""
+    events = [
+        # disjoint node sets sharing the leaf-1 uplink
+        Arrival(0.0, JobSpec("train", 12, nodes=tuple(range(12)),
+                             grad_bytes=4e9, weight=1.0)),
+        Arrival(0.0, InferenceSpec("serve", 8, nodes=tuple(range(12, 20)),
+                                   rate_rps=6.0, weight=4.0,
+                                   slo_p99_s=0.5)),
+    ]
+    return LifecycleEngine(_fabric(), events, base_seed=0,
+                           fairness="wfq").run(12.0)
+
+
+def _engine_maxmin():
+    """Static-population FabricEngine under the default max-min fairness."""
+    jobs = [JobSpec("a", 8, placement="scattered"),
+            JobSpec("b", 8, placement="compact", grad_bytes=2e9),
+            JobSpec("c", 8, placement="compact", algo="tree")]
+    return FabricEngine(_fabric(), jobs, base_seed=1).run(60, warmup=5)
+
+
+# ---------------------------------------------------------------------------
+# serialization: float hex is bit-exact across platforms and json round-trip
+# ---------------------------------------------------------------------------
+
+
+def _hex(xs):
+    return [float(x).hex() for x in xs]
+
+
+def _lifecycle_snapshot(res):
+    snap = {"tenants": [], "log": [[float(t).hex(), kind]
+                                   for t, kind, _ in res.log]}
+    for t in res.tenants:
+        entry = {"name": t.name, "kind": t.kind, "nodes": list(t.nodes),
+                 "generation": t.generation}
+        if t.kind == "training":
+            entry["series"] = _hex(t.step_times)
+            entry["iters_done"] = t.iters_done
+        else:
+            entry["series"] = _hex(t.latencies)
+            entry["requests_done"] = t.requests_done
+        snap["tenants"].append(entry)
+    return snap
+
+
+def _engine_snapshot(res):
+    return {"jobs": [{"name": jr.name, "nodes": list(jr.nodes),
+                      "algo": jr.algo, "series": _hex(jr.step_times)}
+                     for jr in res.jobs],
+            "link_bytes": {ln: float(b).hex()
+                           for ln, b in sorted(res.link_bytes.items())}}
+
+
+FIXTURES = {
+    "lifecycle_fifo": (_lifecycle_fifo, _lifecycle_snapshot),
+    "lifecycle_preempt": (_lifecycle_preempt, _lifecycle_snapshot),
+    "lifecycle_wfq": (_lifecycle_wfq, _lifecycle_snapshot),
+    "engine_maxmin": (_engine_maxmin, _engine_snapshot),
+}
+
+
+def _path(name):
+    return os.path.join(GOLDEN_DIR, f"{name}.json")
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_golden_replay_is_bit_identical(name):
+    build, snapshot = FIXTURES[name]
+    with open(_path(name)) as f:
+        golden = json.load(f)
+    assert snapshot(build()) == golden, (
+        f"{name}: series diverged from the recorded golden fixture — the "
+        f"determinism contract shifted. If the change is intended, "
+        f"regenerate with `PYTHONPATH=src python "
+        f"tests/test_golden_series.py` and review the diff.")
+
+
+def regen(only=None):
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name, (build, snapshot) in sorted(FIXTURES.items()):
+        if only and name not in only:
+            continue
+        with open(_path(name), "w") as f:
+            json.dump(snapshot(build()), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {_path(name)}")
+
+
+if __name__ == "__main__":
+    import sys
+    regen(only=set(sys.argv[1:]) or None)

@@ -282,7 +282,12 @@ def test_lifecycle_run_is_one_shot():
 
 def test_rejects_unknown_fairness():
     with pytest.raises(KeyError):
-        LifecycleEngine(_fabric(), [], fairness="wfq")
+        LifecycleEngine(_fabric(), [], fairness="bogus")
+
+
+def test_rejects_unknown_scheduler():
+    with pytest.raises(KeyError):
+        LifecycleEngine(_fabric(), [], scheduler="sjf")
 
 
 # ---------------------------------------------------------------------------

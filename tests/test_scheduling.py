@@ -1,0 +1,317 @@
+"""Scheduler-policy matrix for the lifecycle engine's blocked-arrival
+queue: fifo stays bit-identical to the PR-2 behavior, backfill never
+delays an already-queued higher-priority tenant, preemption victims resume
+with exactly their remaining work, and the checkpoint-restore cost model
+replaces the constant replan delay when asked to."""
+import math
+
+import pytest
+
+from repro.fabric import (Arrival, Departure, InferenceSpec, JobSpec,
+                          LifecycleEngine, NodeFailure, fat_tree)
+from repro.ft import RestoreCostModel
+from test_golden_series import mixed_lifecycle_events
+
+HORIZON = 20.0
+
+
+def _fabric():
+    return fat_tree(64, nodes_per_leaf=8)
+
+
+def _run(events, until=HORIZON, **kw):
+    return LifecycleEngine(_fabric(), events, base_seed=0, **kw).run(until)
+
+
+def _series(res):
+    out = {}
+    for t in res.tenants:
+        out[t.name] = t.step_times if t.kind == "training" else t.latencies
+    return out
+
+
+# the exact scenario the lifecycle_fifo golden fixture pins
+_mixed_scenario = mixed_lifecycle_events
+
+
+# ---------------------------------------------------------------------------
+# fifo: the explicit name for today's behavior
+# ---------------------------------------------------------------------------
+
+
+def test_explicit_fifo_is_bit_identical_to_default():
+    assert _series(_run(_mixed_scenario(), scheduler="fifo")) \
+        == _series(_run(_mixed_scenario()))
+
+
+def test_backfill_with_uniform_priorities_matches_fifo_series():
+    """Stable priority sort + same placement seeds: when nobody outranks
+    anybody, backfill admits in arrival order and every series is
+    bit-identical to fifo (the log may carry extra retry records)."""
+    assert _series(_run(_mixed_scenario(), scheduler="backfill")) \
+        == _series(_run(_mixed_scenario(), scheduler="fifo"))
+
+
+# ---------------------------------------------------------------------------
+# backfill: priority-ordered drain
+# ---------------------------------------------------------------------------
+
+
+def _contended_queue(with_small=True):
+    events = [
+        Arrival(0.0, JobSpec("incumbent", 60, placement="compact")),
+        # small arrives first but carries no priority...
+        Arrival(1.0, JobSpec("small", 20, placement="compact", priority=0)),
+        # ...the big waiter outranks it
+        Arrival(2.0, JobSpec("urgent", 50, placement="compact",
+                             priority=5)),
+        Departure(8.0, "incumbent"),
+    ]
+    if not with_small:
+        del events[1]
+    return events
+
+
+def test_backfill_admits_higher_priority_first():
+    """fifo hands the freed fabric to the first-come small tenant and
+    starves the urgent one; backfill admits the urgent tenant first."""
+    fifo = _run(_contended_queue(), scheduler="fifo")
+    assert len(fifo.tenant("small").step_times) > 0
+    with pytest.raises(KeyError):
+        fifo.tenant("urgent")                        # never fit again
+
+    back = _run(_contended_queue(), scheduler="backfill")
+    urgent = back.tenant("urgent")
+    assert urgent.arrived_t is not None and urgent.arrived_t >= 8.0
+    assert len(urgent.step_times) > 0
+    with pytest.raises(KeyError):
+        back.tenant("small")                         # 14 free < 20
+
+
+def test_backfill_never_delays_queued_higher_priority_tenant():
+    """The satellite property: adding a low-priority co-waiter must not
+    move the higher-priority tenant's admission time at all."""
+    with_small = _run(_contended_queue(), scheduler="backfill")
+    without = _run(_contended_queue(with_small=False),
+                   scheduler="backfill")
+    assert with_small.tenant("urgent").arrived_t \
+        == without.tenant("urgent").arrived_t
+
+
+def test_backfill_fills_leftover_capacity():
+    """A small low-priority tenant backfills capacity the high-priority
+    waiter cannot use — in the same drain pass."""
+    events = [
+        Arrival(0.0, JobSpec("incumbent", 60, placement="compact")),
+        Arrival(1.0, JobSpec("small", 8, placement="compact", priority=0)),
+        Arrival(2.0, JobSpec("urgent", 50, placement="compact",
+                             priority=5)),
+        Departure(8.0, "incumbent"),
+    ]
+    res = _run(events, scheduler="backfill")
+    urgent, small = res.tenant("urgent"), res.tenant("small")
+    assert urgent.arrived_t is not None and small.arrived_t is not None
+    # both admitted at the same freed-capacity instant, urgent first
+    assert small.arrived_t == urgent.arrived_t
+    assert len(urgent.step_times) > 0 and len(small.step_times) > 0
+
+
+# ---------------------------------------------------------------------------
+# preempt: eviction with progress intact
+# ---------------------------------------------------------------------------
+
+
+def test_preempt_evicts_lowest_priority_victim():
+    events = [
+        Arrival(0.0, JobSpec("low", 30, placement="compact", priority=0)),
+        Arrival(0.5, JobSpec("mid", 26, placement="compact", priority=2)),
+        Arrival(4.0, JobSpec("vip", 24, placement="compact", priority=9,
+                             iters=10)),
+    ]
+    res = _run(events, scheduler="preempt")
+    vip, low, mid = res.tenant("vip"), res.tenant("low"), res.tenant("mid")
+    # the vip was admitted at its arrival (not at some later departure),
+    # by evicting the *lowest* priority tenant only
+    assert 4.0 <= vip.arrived_t < 5.0
+    assert len(vip.step_times) == 10
+    assert [e.kind for e in low.recovery.events][:1] == ["preempted"]
+    assert all(e.kind != "preempted" for e in mid.recovery.events)
+    preempted = [d for _, k, d in res.log if k == "preempted"]
+    assert len(preempted) == 1 and "low" in preempted[0]
+
+
+def test_preempt_victim_resumes_with_identical_remaining_work():
+    """The victim's iteration budget is conserved across the eviction: it
+    finishes exactly spec.iters steps, with the stall visible in-series."""
+    events = [
+        Arrival(0.0, JobSpec("victim", 40, placement="compact", priority=0,
+                             iters=40)),
+        Arrival(3.0, JobSpec("vip", 48, placement="compact", priority=5,
+                             iters=8)),
+    ]
+    res = _run(events, until=30.0, scheduler="preempt")
+    victim, vip = res.tenant("victim"), res.tenant("vip")
+    assert len(vip.step_times) == 8
+    kinds = [e.kind for e in victim.recovery.events]
+    assert kinds == ["preempted", "resume"]
+    # identical remaining work: exactly the full budget in total, no step
+    # lost and none repeated
+    assert victim.iters_done == 40
+    assert len(victim.step_times) == 40
+    assert victim.generation == 2 and len(victim.placements) == 2
+    assert all(s > 0.0 and math.isfinite(s) for s in victim.step_times)
+    # the preemption stall (vip's whole run + replan) dominates the series
+    assert max(victim.step_times) > 3 * min(victim.step_times)
+
+
+def test_preempt_never_evicts_inference_or_higher_priority():
+    events = [
+        Arrival(0.0, InferenceSpec("serve", 40, rate_rps=6.0, priority=0)),
+        Arrival(0.0, JobSpec("guard", 20, placement="compact", priority=7)),
+        Arrival(3.0, JobSpec("bully", 10, placement="compact", priority=3)),
+    ]
+    res = _run(events, scheduler="preempt")
+    assert not [1 for _, k, _ in res.log if k == "preempted"]
+    with pytest.raises(KeyError):
+        res.tenant("bully")
+    assert any(k == "blocked" and "bully" in d for _, k, d in res.log)
+
+
+def test_preempt_no_gratuitous_eviction():
+    """If evicting every eligible victim still cannot host the arrival,
+    nobody is evicted."""
+    events = [
+        Arrival(0.0, JobSpec("small_low", 10, placement="compact",
+                             priority=0)),
+        Arrival(1.0, JobSpec("guard", 44, placement="compact", priority=8)),
+        # needs 60: free 10 + evictable 10 = 20 < 60 -> no eviction
+        Arrival(3.0, JobSpec("huge", 60, placement="compact", priority=5)),
+    ]
+    res = _run(events, scheduler="preempt")
+    assert not [1 for _, k, _ in res.log if k == "preempted"]
+    low = res.tenant("small_low")
+    assert all(e.kind != "preempted" for e in low.recovery.events)
+    assert len(low.step_times) > 0
+
+
+def test_preempted_pinned_tenant_resumes_on_its_pinned_nodes():
+    """A full-size tenant pinned to explicit nodes must come back on
+    exactly those nodes after a preemption, not wherever its placement
+    policy lands — the pin encodes the scenario's premise."""
+    events = [
+        Arrival(0.0, JobSpec("pinned", 40, nodes=tuple(range(40)),
+                             priority=0, iters=40)),
+        Arrival(3.0, JobSpec("vip", 50, placement="compact", priority=5,
+                             iters=8)),
+    ]
+    res = _run(events, until=30.0, scheduler="preempt")
+    pinned = res.tenant("pinned")
+    assert [e.kind for e in pinned.recovery.events] == ["preempted",
+                                                       "resume"]
+    assert tuple(pinned.nodes) == tuple(range(40))
+    assert pinned.iters_done == 40
+
+
+def test_slo_attainment_is_zero_for_a_starved_fleet():
+    from repro.fabric.workloads import InferenceTenant
+    starved = InferenceTenant(InferenceSpec("s", 4, slo_p99_s=0.1), seed=0)
+    assert starved.slo_attainment == 0.0
+    no_slo = InferenceTenant(InferenceSpec("s", 4), seed=0)
+    assert no_slo.slo_attainment == 1.0
+
+
+def test_preempted_tenant_can_depart_while_queued():
+    events = [
+        Arrival(0.0, JobSpec("victim", 56, placement="compact", priority=0)),
+        Arrival(2.0, JobSpec("vip", 48, placement="compact", priority=5)),
+        Departure(6.0, "victim"),
+    ]
+    res = _run(events, scheduler="preempt")
+    victim = res.tenant("victim")
+    assert victim.departed_t == 6.0
+    assert [e.kind for e in victim.recovery.events] == ["preempted"]
+    # its pre-eviction progress is still reported
+    assert len(victim.step_times) > 0
+
+
+# ---------------------------------------------------------------------------
+# replan delay: constant vs checkpoint-restore cost model
+# ---------------------------------------------------------------------------
+
+
+def test_restore_cost_model_delay():
+    m = RestoreCostModel(read_bw_Bps=2e9, overhead_s=0.1)
+    assert m.delay_s(0.0) == pytest.approx(0.1)
+    assert m.delay_s(4e9) == pytest.approx(2.1)
+    with pytest.raises(ValueError):
+        m.delay_s(-1.0)
+    # defaults reproduce the PR-2 constant for the default 1.1 GB job
+    assert RestoreCostModel().delay_s(1.1e9) == pytest.approx(0.525)
+
+
+def _recovery_gap(**kw):
+    res = _run([Arrival(0.0, JobSpec("job", 12, placement="compact",
+                                     grad_bytes=2e9)),
+                NodeFailure(6.0, 2)], until=25.0, **kw)
+    job = res.tenant("job")
+    detected = [t for t, k, _ in res.log if k == "detected"][0]
+    return job.placements[1][0] - detected
+
+
+def test_replan_delay_constant_is_the_default():
+    assert _recovery_gap() == pytest.approx(0.5)
+    assert _recovery_gap(replan_delay_s=1.25) == pytest.approx(1.25)
+
+
+def test_replan_delay_from_restore_cost_model():
+    """replan_delay_s=None derives the stall from the tenant's parameter
+    bytes and the store's read bandwidth."""
+    gap = _recovery_gap(replan_delay_s=None,
+                        restore_cost=RestoreCostModel(read_bw_Bps=1e9,
+                                                      overhead_s=0.2))
+    assert gap == pytest.approx(0.2 + 2e9 / 1e9)  # grad_bytes = 2e9
+    # explicit restore_cost wins even without replan_delay_s=None
+    gap = _recovery_gap(restore_cost=RestoreCostModel(read_bw_Bps=4e9,
+                                                      overhead_s=0.0))
+    assert gap == pytest.approx(0.5)              # 2e9 / 4e9
+    # param_bytes overrides the grad-size estimate
+    res = _run([Arrival(0.0, JobSpec("job", 12, placement="compact",
+                                     grad_bytes=2e9, param_bytes=8e9)),
+                NodeFailure(6.0, 2)], until=25.0, replan_delay_s=None,
+               restore_cost=RestoreCostModel(read_bw_Bps=1e9,
+                                             overhead_s=0.0))
+    job = res.tenant("job")
+    detected = [t for t, k, _ in res.log if k == "detected"][0]
+    assert job.placements[1][0] - detected == pytest.approx(8.0)
+
+
+# ---------------------------------------------------------------------------
+# slow-horizon WFQ scenario
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_slow_wfq_weight_sweep_trades_inference_tail_latency():
+    """Full-horizon weight sweep on a shared 64-node fabric: raising the
+    inference fleet's WFQ weight must improve its p99 latency and SLO
+    attainment monotonically enough to separate the sweep's endpoints."""
+    def p99(w):
+        events = [
+            # disjoint node sets sharing the leaf-1 uplink
+            Arrival(0.0, JobSpec("train", 24,
+                                 nodes=tuple(range(12))
+                                 + tuple(range(24, 36)),
+                                 grad_bytes=6e9)),
+            Arrival(0.0, InferenceSpec("serve", 8,
+                                       nodes=tuple(range(12, 20)),
+                                       rate_rps=10.0, weight=w,
+                                       slo_p99_s=0.4)),
+        ]
+        serve = _run(events, until=80.0, fairness="wfq") \
+            .tenant("serve")
+        return serve.latency_quantile(0.99), serve.slo_attainment
+
+    lo_lat, lo_att = p99(0.25)
+    hi_lat, hi_att = p99(8.0)
+    assert hi_lat < lo_lat
+    assert hi_att >= lo_att
