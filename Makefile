@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-slow test-all bench-smoke bench
+.PHONY: test test-slow test-all bench-smoke bench scenarios
 
 test:            ## default tier-1 (slow marker excluded via pytest.ini)
 	$(PY) -m pytest -x -q
@@ -13,11 +13,15 @@ test-slow:       ## full-fidelity runs only
 test-all:        ## everything
 	$(PY) -m pytest -q -m ""
 
+scenarios:       ## run every named scenario in the library end to end
+	$(PY) -m benchmarks.run --only scenarios
+
 bench-smoke:     ## the CI benchmark smoke sections
 	$(PY) -m benchmarks.run --only table1
 	$(PY) -m benchmarks.run --only multitenant
 	$(PY) -m benchmarks.run --only lifecycle
 	$(PY) -m benchmarks.run --only wfq
+	$(PY) -m benchmarks.run --only scenarios
 	$(PY) -m benchmarks.run --only pacing
 
 bench:           ## all benchmark sections

@@ -12,7 +12,7 @@ from typing import Dict, List
 from repro.configs.base import PacingConfig
 from repro.core import diagnose
 from repro.fabric import (CongestionConfig, SimConfig, StragglerConfig,
-                          simulate)
+                          scenario_from)
 
 BASE = dict(n_nodes=32, iters=250, warmup=30)
 
@@ -63,7 +63,7 @@ def rows() -> List[str]:
     lines = ["regime,dominant_diagnosed,match,mean_step_s,cv,"
              "top_score,evidence"]
     for name, cfg in REGIMES.items():
-        res = simulate(cfg)
+        res = scenario_from(cfg, name=name).run().raw.jobs[0]
         # transfer floor = uncongested collective time on this topology
         topo = build_topology(cfg)
         floor = all_reduce(topo, range(cfg.n_nodes), cfg.grad_bytes,

@@ -1,5 +1,5 @@
 """Event-driven lifecycle scenarios on the shared fabric (paper §3.2/§3.3
-under *dynamic* sharing).
+under *dynamic* sharing), built from declarative Scenarios.
 
 Three tables:
 
@@ -8,33 +8,36 @@ Three tables:
     / request latency before and after each arrival;
   * **failure** — a node dies mid-run: detection (virtual-clock heartbeat
     timeout), elastic shrink, re-placement, and the post-recovery series;
-  * **fairness** — the same contended pair under max-min vs offered-bytes
-    sharing: max-min keeps the small flow at its bottleneck share.
+  * **fairness** — the same contended pair swept across fairness policies
+    with a ScenarioGrid: max-min keeps the small flow at its bottleneck
+    share, offered-bytes starves it.
 """
 from __future__ import annotations
 
 import statistics
 from typing import List
 
-from repro.fabric import (Arrival, FabricEngine, InferenceSpec, JobSpec,
-                          LifecycleEngine, NodeFailure, fat_tree)
+from repro.fabric import (Arrival, InferenceSpec, JobSpec, NodeFailure,
+                          Scenario, ScenarioGrid, TopologySpec)
 
 HORIZON = 25.0
 
-
-def _fabric():
-    return fat_tree(64, nodes_per_leaf=8)
+FABRIC64 = TopologySpec(kind="fat_tree", n_nodes=64, nodes_per_leaf=8)
 
 
 def arrival_rows() -> List[str]:
-    events = [
-        Arrival(0.0, JobSpec("incumbent", 12, nodes=tuple(range(12)))),
-        Arrival(2.0, InferenceSpec("serve", 4, nodes=tuple(range(24, 28)),
-                                   rate_rps=8.0)),
-        Arrival(10.0, JobSpec("late", 12, nodes=tuple(range(12, 24)),
-                              grad_bytes=4e9)),
-    ]
-    res = LifecycleEngine(_fabric(), events, base_seed=0).run(HORIZON)
+    scn = Scenario(
+        name="bench_arrivals", topology=FABRIC64,
+        events=(
+            Arrival(0.0, JobSpec("incumbent", 12, nodes=tuple(range(12)))),
+            Arrival(2.0, InferenceSpec("serve", 4,
+                                       nodes=tuple(range(24, 28)),
+                                       rate_rps=8.0)),
+            Arrival(10.0, JobSpec("late", 12, nodes=tuple(range(12, 24)),
+                                  grad_bytes=4e9)),
+        ),
+        horizon=HORIZON)
+    res = scn.run()
     inc = res.tenant("incumbent")
     # split the incumbent series at the co-tenant arrival
     t, k = 0.0, 0
@@ -59,10 +62,13 @@ def arrival_rows() -> List[str]:
 
 
 def failure_rows() -> List[str]:
-    events = [Arrival(0.0, JobSpec("job", 12, placement="compact",
-                                   algo="auto")),
-              NodeFailure(8.0, 3)]
-    res = LifecycleEngine(_fabric(), events, base_seed=0).run(HORIZON)
+    scn = Scenario(
+        name="bench_failure", topology=FABRIC64,
+        events=(Arrival(0.0, JobSpec("job", 12, placement="compact",
+                                     algo="auto")),
+                NodeFailure(8.0, 3)),
+        horizon=HORIZON)
+    res = scn.run()
     job = res.tenant("job")
     stall = max(job.step_times)
     lines = ["metric,value"]
@@ -79,16 +85,20 @@ def failure_rows() -> List[str]:
 
 
 def fairness_rows() -> List[str]:
-    small = JobSpec("small", 12, nodes=tuple(range(12)), grad_bytes=2e8)
-    big = JobSpec("big", 12, nodes=tuple(range(12, 24)), grad_bytes=8e9)
+    base = Scenario(
+        name="bench_fairness", topology=FABRIC64,
+        jobs=(JobSpec("small", 12, nodes=tuple(range(12)), grad_bytes=2e8),
+              JobSpec("big", 12, nodes=tuple(range(12, 24)),
+                      grad_bytes=8e9)),
+        iters=150, warmup=20)
     lines = ["fairness,small_step_ms,big_step_ms"]
-    for fairness in ("offered", "maxmin"):
-        res = FabricEngine(_fabric(), [small, big], base_seed=0,
-                           fairness=fairness).run(150, warmup=20)
-        lines.append(f"{fairness},{res.job('small').mean_step * 1e3:.1f},"
-                     f"{res.job('big').mean_step * 1e3:.1f}")
-    solo = FabricEngine(_fabric(), [small], base_seed=0).run(150, warmup=20)
-    lines.append(f"(small solo),{solo.job('small').mean_step * 1e3:.1f},")
+    grid = ScenarioGrid(base, {"policies.fairness": ["offered", "maxmin"]})
+    for params, res in grid.run():
+        lines.append(f"{params['policies.fairness']},"
+                     f"{res.tenant('small').mean_step * 1e3:.1f},"
+                     f"{res.tenant('big').mean_step * 1e3:.1f}")
+    solo = base.replace(jobs=(base.jobs[0],)).run()
+    lines.append(f"(small solo),{solo.tenant('small').mean_step * 1e3:.1f},")
     return lines
 
 
@@ -97,7 +107,7 @@ def rows() -> List[str]:
             + arrival_rows()
             + ["", "-- node failure: detect, shrink, re-place --"]
             + failure_rows()
-            + ["", "-- max-min vs offered-bytes sharing --"]
+            + ["", "-- fairness-policy sweep (ScenarioGrid) --"]
             + fairness_rows())
 
 

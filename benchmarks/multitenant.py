@@ -1,4 +1,5 @@
-"""Paper §3.2/§3.3 multi-tenant scenarios on the shared-fabric engine.
+"""Paper §3.2/§3.3 multi-tenant scenarios on the shared-fabric engine,
+built and swept declaratively.
 
 Two tables:
 
@@ -15,32 +16,36 @@ from __future__ import annotations
 
 from typing import List
 
-from repro.fabric import FabricEngine, JobSpec, fat_tree, place
+from repro.fabric import (JobSpec, Scenario, ScenarioGrid, TopologySpec,
+                          fat_tree, place)
 from repro.fabric.placement import POLICIES, spanning_groups
 
 ITERS, WARMUP = 220, 30
 
-
-def _fabric():
-    return fat_tree(64, nodes_per_leaf=8)
+FABRIC64 = TopologySpec(kind="fat_tree", n_nodes=64, nodes_per_leaf=8)
 
 
 def contention_rows() -> List[str]:
     lines = ["cotenant_grad_gb,primary_step_ms,cotenant_step_ms,"
              "primary_slowdown_pct"]
     primary = JobSpec("primary", 12, nodes=tuple(range(12)))
-    solo = FabricEngine(_fabric(), [primary], base_seed=0) \
-        .run(ITERS, WARMUP).job("primary").mean_step
+    solo_scn = Scenario(name="bench_contention_solo", topology=FABRIC64,
+                        jobs=(primary,), iters=ITERS, warmup=WARMUP)
+    solo = solo_scn.run().tenant("primary").mean_step
     lines.append(f"0.0,{solo * 1e3:.2f},,+0.0")
-    for gb in (0.5, 1.0, 2.0, 4.0, 8.0):
-        cotenant = JobSpec("cotenant", 12, nodes=tuple(range(12, 24)),
-                           grad_bytes=gb * 1e9)
-        res = FabricEngine(_fabric(), [primary, cotenant], base_seed=0) \
-            .run(ITERS, WARMUP)
-        step = res.job("primary").mean_step
+    base = Scenario(
+        name="bench_contention", topology=FABRIC64,
+        jobs=(primary, JobSpec("cotenant", 12, nodes=tuple(range(12, 24)),
+                               grad_bytes=1e9)),
+        iters=ITERS, warmup=WARMUP)
+    grid = ScenarioGrid(base, {"jobs.1.grad_bytes":
+                               [gb * 1e9 for gb in (0.5, 1, 2, 4, 8)]})
+    for params, res in grid.run():
+        gb = params["jobs.1.grad_bytes"] / 1e9
+        step = res.tenant("primary").mean_step
         lines.append(
-            f"{gb},{step * 1e3:.2f},"
-            f"{res.job('cotenant').mean_step * 1e3:.2f},"
+            f"{gb:g},{step * 1e3:.2f},"
+            f"{res.tenant('cotenant').mean_step * 1e3:.2f},"
             f"{100 * (step / solo - 1):+.1f}")
     return lines
 
@@ -49,15 +54,18 @@ def placement_rows() -> List[str]:
     lines = ["policy,span_leaves,solo_step_ms,with_cotenant_step_ms,"
              "cotenant_slowdown_pct"]
     for policy in POLICIES:
-        topo = _fabric()
+        topo = fat_tree(64, nodes_per_leaf=8)
         nodes = tuple(place(policy, topo, 8, seed=0))
         job = JobSpec("job", 8, nodes=nodes)
         cotenant = JobSpec("cotenant", 16, placement="scattered",
                            grad_bytes=2e9)
-        solo = FabricEngine(_fabric(), [job], base_seed=0) \
-            .run(ITERS, WARMUP).job("job").mean_step
-        duo = FabricEngine(_fabric(), [job, cotenant], base_seed=0) \
-            .run(ITERS, WARMUP).job("job").mean_step
+        solo = Scenario(name=f"bench_place_{policy}_solo",
+                        topology=FABRIC64, jobs=(job,),
+                        iters=ITERS, warmup=WARMUP) \
+            .run().tenant("job").mean_step
+        duo = Scenario(name=f"bench_place_{policy}", topology=FABRIC64,
+                       jobs=(job, cotenant), iters=ITERS, warmup=WARMUP) \
+            .run().tenant("job").mean_step
         lines.append(
             f"{policy},{spanning_groups(topo, nodes)},{solo * 1e3:.2f},"
             f"{duo * 1e3:.2f},{100 * (duo / solo - 1):+.1f}")

@@ -8,6 +8,7 @@
                 max-min vs offered-bytes fairness (lifecycle engine)
   wfq         — weighted fair sharing: inference-weight sweep (p99 / SLO
                 attainment vs training throughput) + scheduler policies
+  scenarios   — scenario-library smoke: every named scenario end to end
   pacing      — vectorized PacingBank vs scalar controllers (before/after)
   speedup     — compiled-schedule engine vs seed per-call loop wall-clock
   kernels     — substrate kernel micro-benchmarks
@@ -27,8 +28,8 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     choices=["table1", "scaling", "taxonomy", "multitenant",
-                             "lifecycle", "wfq", "pacing", "speedup",
-                             "kernels", "roofline"])
+                             "lifecycle", "wfq", "scenarios", "pacing",
+                             "speedup", "kernels", "roofline"])
     args = ap.parse_args()
 
     sections = []
@@ -57,6 +58,10 @@ def main() -> None:
         from benchmarks import wfq_sweep
         sections.append(("wfq_sweep (weighted sharing + scheduler "
                          "policies)", wfq_sweep.rows))
+    if args.only in (None, "scenarios"):
+        from benchmarks import scenarios
+        sections.append(("scenarios (named scenario library smoke)",
+                         scenarios.rows))
     if args.only in (None, "pacing"):
         from benchmarks import pacing_bench
         sections.append(("pacing (vectorized bank vs scalar controllers)",

@@ -1,0 +1,46 @@
+"""Scenario-library smoke: run every named scenario end to end.
+
+One row per :mod:`repro.fabric.scenario.library` entry — backend, tenant
+count, wall-clock, and the headline per-tenant metric — so CI catches a
+library scenario that stopped validating, stopped running, or lost its
+failure-mode signal. All entries run at test scale (seconds each).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.fabric.scenario import Scenario, library
+
+
+def rows() -> List[str]:
+    lines = ["scenario,backend,tenants,wall_ms,headline"]
+    for name in library.names():
+        scn = library.build(name)
+        # the declarative form is part of the contract: every library
+        # entry must survive its own JSON round trip
+        assert Scenario.from_json(scn.to_json()).to_dict() == scn.to_dict()
+        t0 = time.time()
+        res = scn.run()
+        wall_ms = (time.time() - t0) * 1e3
+        diags = res.diagnostics()
+        parts = []
+        for tname, d in diags.items():
+            if d["kind"] == "inference":
+                parts.append(f"{tname}: p99={d['p99_latency_s'] * 1e3:.0f}ms"
+                             f" slo={d['slo_attainment'] * 100:.0f}%")
+            else:
+                parts.append(f"{tname}: {d['mean_step_s'] * 1e3:.0f}ms/step"
+                             f" cv={d['cv']:.3f}")
+        lines.append(f"{name},{res.kind},{len(diags)},{wall_ms:.0f},"
+                     + " | ".join(parts))
+    return lines
+
+
+def main() -> None:
+    for ln in rows():
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

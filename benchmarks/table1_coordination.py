@@ -9,7 +9,7 @@ from __future__ import annotations
 import statistics
 from typing import Dict, List
 
-from repro.fabric import SimConfig, simulate
+from repro.fabric import SimConfig, scenario_from
 
 PAPER_TABLE1 = {
     4: {"base_thr": 1024, "base_cv": 0.02, "coord_thr": 1018,
@@ -32,8 +32,11 @@ def run(seeds=SEEDS) -> Dict[int, Dict[str, float]]:
     for n in PAPER_TABLE1:
         thr_b, cv_b, thr_c, cv_c = [], [], [], []
         for seed in seeds:
-            rb = simulate(SimConfig.paper(n, coordination=False, seed=seed))
-            rc = simulate(SimConfig.paper(n, coordination=True, seed=seed))
+            # the calibrated single-job runs, declared as Scenarios
+            rb = scenario_from(SimConfig.paper(
+                n, coordination=False, seed=seed)).run().raw.jobs[0]
+            rc = scenario_from(SimConfig.paper(
+                n, coordination=True, seed=seed)).run().raw.jobs[0]
             thr_b.append(rb.throughput)
             cv_b.append(rb.cv)
             thr_c.append(rc.throughput)

@@ -1,4 +1,5 @@
-"""Weighted fair sharing + scheduler policies on a shared 64-node fabric.
+"""Weighted fair sharing + scheduler policies on a shared 64-node fabric,
+swept declaratively with ScenarioGrid.
 
 Two tables:
 
@@ -10,7 +11,7 @@ Two tables:
     traffic is closed-loop, so protecting the latency-sensitive tenant
     costs the trainer almost nothing — the asymmetry that makes per-flow
     weights worth deploying.
-  * **scheduler policies** — the same blocked-arrival queue under
+  * **scheduler policies** — the same blocked-arrival queue swept across
     ``fifo`` / ``backfill`` / ``preempt``: when capacity frees, fifo hands
     it to the first-come tenant, backfill to the highest-priority waiter,
     and preempt does not wait at all — it evicts the lowest-priority
@@ -21,21 +22,18 @@ from __future__ import annotations
 from typing import List
 
 from repro.fabric import (Arrival, Departure, InferenceSpec, JobSpec,
-                          LifecycleEngine, fat_tree)
+                          Policies, Scenario, ScenarioGrid, TopologySpec)
 
 HORIZON = 40.0
 WEIGHTS = (0.25, 0.5, 1.0, 2.0, 4.0, 8.0)
 
-
-def _fabric():
-    return fat_tree(64, nodes_per_leaf=8)
+FABRIC64 = TopologySpec(kind="fat_tree", n_nodes=64, nodes_per_leaf=8)
 
 
 def weight_sweep_rows() -> List[str]:
-    lines = ["serve_weight,serve_p99_ms,serve_slo_attain_pct,"
-             "serve_requests,train_samples_per_s"]
-    for w in WEIGHTS:
-        events = [
+    base = Scenario(
+        name="bench_wfq", topology=FABRIC64,
+        events=(
             # disjoint node sets sharing the leaf-1 uplink
             Arrival(0.0, JobSpec("train", 24,
                                  nodes=tuple(range(12))
@@ -44,10 +42,15 @@ def weight_sweep_rows() -> List[str]:
             Arrival(0.0, InferenceSpec("serve", 8,
                                        nodes=tuple(range(12, 20)),
                                        rate_rps=8.0, decode_tokens=12,
-                                       weight=w, slo_p99_s=0.45)),
-        ]
-        res = LifecycleEngine(_fabric(), events, base_seed=0,
-                              fairness="wfq").run(HORIZON)
+                                       weight=1.0, slo_p99_s=0.45)),
+        ),
+        policies=Policies(fairness="wfq"),
+        horizon=HORIZON)
+    lines = ["serve_weight,serve_p99_ms,serve_slo_attain_pct,"
+             "serve_requests,train_samples_per_s"]
+    grid = ScenarioGrid(base, {"events.1.spec.weight": list(WEIGHTS)})
+    for params, res in grid.run():
+        w = params["events.1.spec.weight"]
         serve, train = res.tenant("serve"), res.tenant("train")
         lines.append(
             f"{w:g},{serve.latency_quantile(0.99) * 1e3:.0f},"
@@ -57,19 +60,23 @@ def weight_sweep_rows() -> List[str]:
 
 
 def scheduler_rows() -> List[str]:
-    events = [
-        Arrival(0.0, JobSpec("incumbent", 60, placement="compact",
-                             priority=0, iters=40)),
-        Arrival(1.0, JobSpec("small", 20, placement="compact", priority=0)),
-        Arrival(2.0, JobSpec("urgent", 50, placement="compact",
-                             priority=5)),
-        Departure(8.0, "incumbent"),
-    ]
+    base = Scenario(
+        name="bench_schedulers", topology=FABRIC64,
+        events=(
+            Arrival(0.0, JobSpec("incumbent", 60, placement="compact",
+                                 priority=0, iters=40)),
+            Arrival(1.0, JobSpec("small", 20, placement="compact",
+                                 priority=0)),
+            Arrival(2.0, JobSpec("urgent", 50, placement="compact",
+                                 priority=5)),
+            Departure(8.0, "incumbent"),
+        ),
+        horizon=25.0)
     lines = ["scheduler,urgent_admitted_t,small_admitted_t,preemptions,"
              "incumbent_steps"]
-    for policy in ("fifo", "backfill", "preempt"):
-        res = LifecycleEngine(_fabric(), events, base_seed=0,
-                              scheduler=policy).run(25.0)
+    grid = ScenarioGrid(base, {"policies.scheduler":
+                               ["fifo", "backfill", "preempt"]})
+    for params, res in grid.run():
 
         def admitted(name):
             try:
@@ -80,8 +87,8 @@ def scheduler_rows() -> List[str]:
 
         preemptions = sum(1 for _, k, _ in res.log if k == "preempted")
         inc_steps = len(res.tenant("incumbent").step_times)
-        lines.append(f"{policy},{admitted('urgent')},{admitted('small')},"
-                     f"{preemptions},{inc_steps}")
+        lines.append(f"{params['policies.scheduler']},{admitted('urgent')},"
+                     f"{admitted('small')},{preemptions},{inc_steps}")
     return lines
 
 

@@ -6,7 +6,7 @@ and the failure-mode diagnosis (§3.3) on the calibrated fabric simulator.
 import argparse
 
 from repro.core import diagnose
-from repro.fabric import SimConfig, efficiency_curve, simulate
+from repro.fabric import SimConfig, efficiency_curve, scenario_from
 
 
 def main() -> None:
@@ -28,8 +28,9 @@ def main() -> None:
 
     n = max(args.nodes)
     print(f"\n=== failure-mode diagnosis at N={n} (paper §3.3) ===")
-    res = simulate(SimConfig.paper(n, coordination=False))
-    rep = diagnose(res.per_rank_records())
+    # the calibrated single-job run, declared as a Scenario
+    res = scenario_from(SimConfig.paper(n, coordination=False)).run()
+    rep = diagnose(res.raw.jobs[0].per_rank_records())
     for s in rep.scores:
         print(f"  {s.mode:<20} score={s.score:.3f}  {s.evidence}")
     print(f"  dominant: {rep.dominant}")

@@ -1,36 +1,45 @@
 """Lifecycle study: a 64-node fabric as *a cluster with a schedule* —
 staggered training arrivals, one open-loop inference fleet, and a node
-failure mid-run, stepped by the event-driven lifecycle engine
-(repro.fabric.events) under max-min fair link sharing.
+failure mid-run, declared as a Scenario and stepped by the event-driven
+lifecycle engine under max-min fair link sharing.
 
     PYTHONPATH=src python examples/lifecycle_study.py
 """
-from repro.fabric import (Arrival, InferenceSpec, JobSpec, LifecycleEngine,
-                          NodeFailure, fat_tree)
-from repro.fabric.placement import spanning_groups
+from repro.fabric import (Arrival, InferenceSpec, JobSpec, NodeFailure,
+                          Scenario, TopologySpec)
 
 HORIZON = 40.0
 
 
+def build_scenario() -> Scenario:
+    return Scenario(
+        name="lifecycle_study",
+        topology=TopologySpec(kind="fat_tree", n_nodes=64,
+                              nodes_per_leaf=8),
+        events=(
+            # three training tenants arrive staggered; algo="auto"
+            # re-selects ring/tree/hierarchical per placement (and again
+            # after re-place)
+            Arrival(0.0, JobSpec("train0", 16, placement="compact",
+                                 algo="auto")),
+            Arrival(6.0, JobSpec("train1", 12, placement="compact",
+                                 algo="auto", grad_bytes=2e9)),
+            Arrival(12.0, JobSpec("train2", 12, placement="scattered",
+                                  algo="auto")),
+            # a latency-sensitive decode fleet shares the fabric from t=3
+            Arrival(3.0, InferenceSpec("serve", 8, rate_rps=10.0,
+                                       decode_tokens=16)),
+            # one node of train0 dies at t=20: heartbeat timeout on the
+            # virtual clock, elastic shrink, re-place, schedule re-compile
+            NodeFailure(20.0, 5),
+        ),
+        horizon=HORIZON)
+
+
 def main() -> None:
-    topo = fat_tree(64, nodes_per_leaf=8)
-    events = [
-        # three training tenants arrive staggered; algo="auto" re-selects
-        # ring/tree/hierarchical per placement (and again after re-place)
-        Arrival(0.0, JobSpec("train0", 16, placement="compact",
-                             algo="auto")),
-        Arrival(6.0, JobSpec("train1", 12, placement="compact",
-                             algo="auto", grad_bytes=2e9)),
-        Arrival(12.0, JobSpec("train2", 12, placement="scattered",
-                              algo="auto")),
-        # a latency-sensitive decode fleet shares the fabric from t=3
-        Arrival(3.0, InferenceSpec("serve", 8, rate_rps=10.0,
-                                   decode_tokens=16)),
-        # one node of train0 dies at t=20: heartbeat timeout on the virtual
-        # clock, elastic shrink, re-place, schedule re-compile
-        NodeFailure(20.0, 5),
-    ]
-    res = LifecycleEngine(topo, events, base_seed=0).run(HORIZON)
+    scenario = build_scenario()
+    res = scenario.run()
+    diags = res.diagnostics()
 
     print(f"=== per-tenant outcome over {HORIZON:.0f} simulated seconds "
           f"===")
@@ -38,18 +47,18 @@ def main() -> None:
            f"{'leaves':>6} {'algo':<12} {'steps/reqs':>10} "
            f"{'thr(samp/s|tok/s)':>17} {'step_cv':>8}")
     print(hdr)
-    for t in res.tenants:
-        leaves = spanning_groups(topo, t.nodes) if t.nodes else 0
+    for t in res.raw.tenants:
+        d = diags[t.name]
         if t.kind == "training":
             print(f"{t.name:<8} {t.kind:<9} {t.arrived_t:>7.1f} "
-                  f"{len(t.nodes):>5} {leaves:>6} {t.algo:<12} "
-                  f"{len(t.step_times):>10} {t.throughput:>17.0f} "
-                  f"{t.cv:>8.3f}")
+                  f"{len(t.nodes):>5} {d['spanning_groups']:>6} "
+                  f"{t.algo:<12} {d['steps']:>10} "
+                  f"{d['throughput']:>17.0f} {d['cv']:>8.3f}")
         else:
             print(f"{t.name:<8} {t.kind:<9} {t.arrived_t:>7.1f} "
-                  f"{len(t.nodes):>5} {leaves:>6} {t.algo:<12} "
-                  f"{t.requests_done:>10} {t.tokens_per_s:>17.0f} "
-                  f"{'-':>8}")
+                  f"{len(t.nodes):>5} {d['spanning_groups']:>6} "
+                  f"{t.algo:<12} {d['requests']:>10} "
+                  f"{t.tokens_per_s:>17.0f} {'-':>8}")
 
     serve = res.tenant("serve")
     print(f"\nserve latency: mean {serve.mean_latency * 1e3:.0f} ms, "
@@ -65,6 +74,10 @@ def main() -> None:
     print("\nengine event log:")
     for t, kind, detail in res.log:
         print(f"  t={t:6.2f}  {kind:<12} {detail}")
+
+    print("\nThe whole study above is one declarative value:")
+    print(f"  scenario.to_json() -> {len(scenario.to_json())} bytes "
+          f"(round-trips bit-identically)")
 
 
 if __name__ == "__main__":

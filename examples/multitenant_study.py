@@ -1,19 +1,18 @@
 """Multi-tenant fabric study: the two failure modes the single-job
-simulator could not express, reproduced end to end on the shared-fabric
-engine (paper §3.2 topology-induced contention, §3.3 locality-driven
+simulator could not express, reproduced end to end from declarative
+Scenarios (paper §3.2 topology-induced contention, §3.3 locality-driven
 placement variance).
 
     PYTHONPATH=src python examples/multitenant_study.py
 """
 from repro.core import diagnose_jobs
-from repro.fabric import FabricEngine, JobSpec, fat_tree, place
+from repro.fabric import (JobSpec, Scenario, ScenarioGrid, TopologySpec,
+                          fat_tree, place)
 from repro.fabric.placement import POLICIES, spanning_groups
 
 ITERS, WARMUP = 220, 30
 
-
-def fabric():
-    return fat_tree(64, nodes_per_leaf=8)
+FABRIC64 = TopologySpec(kind="fat_tree", n_nodes=64, nodes_per_leaf=8)
 
 
 def main() -> None:
@@ -21,24 +20,27 @@ def main() -> None:
     print(f"{'policy':<10} {'leaves':>6} {'step_ms':>8} {'vs compact':>10}")
     base = None
     for policy in POLICIES:
-        topo = fabric()
+        topo = fat_tree(64, nodes_per_leaf=8)
         nodes = tuple(place(policy, topo, 8, seed=0))
-        res = FabricEngine(topo, [JobSpec("job", 8, nodes=nodes)],
-                           base_seed=0).run(ITERS, WARMUP)
-        step = res.jobs[0].mean_step
+        res = Scenario(name=f"place_{policy}", topology=FABRIC64,
+                       jobs=(JobSpec("job", 8, nodes=nodes),),
+                       iters=ITERS, warmup=WARMUP).run()
+        step = res.tenant("job").mean_step
         base = base or step
         print(f"{policy:<10} {spanning_groups(topo, nodes):>6} "
               f"{step * 1e3:>8.1f} {step / base:>9.2f}x")
 
     print("\n=== cross-tenant contention on a shared up-link (§3.2) ===")
     primary = JobSpec("primary", 12, nodes=tuple(range(12)))
-    solo = FabricEngine(fabric(), [primary], base_seed=0) \
-        .run(ITERS, WARMUP).job("primary")
     cotenant = JobSpec("cotenant", 12, nodes=tuple(range(12, 24)),
                        grad_bytes=6e9)
-    duo = FabricEngine(fabric(), [primary, cotenant], base_seed=0) \
-        .run(ITERS, WARMUP)
-    victim = duo.job("primary")
+    duo_scn = Scenario(name="contended", topology=FABRIC64,
+                       jobs=(primary, cotenant),
+                       iters=ITERS, warmup=WARMUP)
+    solo = duo_scn.replace(name="solo", jobs=(primary,)) \
+        .run().tenant("primary")
+    duo = duo_scn.run()
+    victim = duo.tenant("primary")
     print(f"primary solo:      {solo.mean_step * 1e3:7.1f} ms/step "
           f"(cv {solo.cv:.3f})")
     print(f"primary contended: {victim.mean_step * 1e3:7.1f} ms/step "
@@ -47,10 +49,20 @@ def main() -> None:
           f"traffic the job does not own]")
 
     print("\n=== per-tenant diagnosis of the contended run ===")
-    for name, rep in diagnose_jobs(duo).items():
+    for name, rep in diagnose_jobs(duo.raw).items():
         top = max(rep.scores, key=lambda s: s.score)
         print(f"  {name:<9} dominant={rep.dominant:<18} "
               f"top score={top.score:.3f}")
+
+    print("\n=== the same sweep as one ScenarioGrid ===")
+    grid = ScenarioGrid(duo_scn, {"jobs.1.grad_bytes":
+                                  [5e8, 2e9, 8e9]})
+    for params, res in grid.run():
+        gb = params["jobs.1.grad_bytes"] / 1e9
+        d = res.diagnostics()["primary"]
+        print(f"  cotenant {gb:>3g} GB -> primary "
+              f"{d['mean_step_s'] * 1e3:6.1f} ms/step  "
+              f"(shared-tier bytes {d['shared_bytes_frac'] * 100:.0f}%)")
 
 
 if __name__ == "__main__":

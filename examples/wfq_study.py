@@ -1,5 +1,5 @@
 """WFQ study: weighted fair sharing and SLO-aware scheduling on a shared
-64-node fabric.
+64-node fabric, swept declaratively with ScenarioGrid.
 
 Part 1 sweeps an inference fleet's WFQ weight while a BSP trainer shares
 its leaf uplink: the fleet's p99 latency and SLO attainment improve with
@@ -9,18 +9,19 @@ argument that per-flow fabric policy, not model code, decides co-tenant
 behavior.
 
 Part 2 runs a priority arrival against a full fabric under the "preempt"
-scheduler: the low-priority incumbent is evicted, the VIP job runs, and
-the victim resumes from its checkpoint with its progress intact, paying a
-restore delay derived from its parameter bytes (RestoreCostModel) rather
-than a constant.
+scheduler with an anti-thrash budget: the low-priority incumbent is
+evicted, the VIP job runs, and the victim resumes from its per-step
+checkpoint with its compute stream intact, paying a restore delay derived
+from its parameter bytes (RestoreCostModel) rather than a constant.
 
     PYTHONPATH=src python examples/wfq_study.py
 """
-from repro.fabric import (Arrival, InferenceSpec, JobSpec, LifecycleEngine,
-                          fat_tree)
-from repro.ft import RestoreCostModel
+from repro.fabric import (Arrival, InferenceSpec, JobSpec, Policies,
+                          Scenario, ScenarioGrid, TopologySpec)
 
 HORIZON = 40.0
+
+FABRIC64 = TopologySpec(kind="fat_tree", n_nodes=64, nodes_per_leaf=8)
 
 
 def weight_sweep() -> None:
@@ -31,16 +32,21 @@ def weight_sweep() -> None:
           "schedules) ===")
     print(f"{'weight':>6} {'p99_ms':>8} {'slo_attain':>10} {'reqs':>6} "
           f"{'train_samp/s':>12}")
-    for w in (0.25, 0.5, 1.0, 2.0, 4.0, 8.0):
-        events = [
+    base = Scenario(
+        name="wfq_study", topology=FABRIC64,
+        events=(
             Arrival(0.0, JobSpec("train", 16, placement="scattered",
                                  algo="auto", grad_bytes=4e9)),
             Arrival(0.0, InferenceSpec("serve", 8, placement="compact",
                                        rate_rps=10.0, decode_tokens=10,
-                                       weight=w, slo_p99_s=0.4)),
-        ]
-        res = LifecycleEngine(fat_tree(64, nodes_per_leaf=8), events,
-                              base_seed=0, fairness="wfq").run(HORIZON)
+                                       weight=1.0, slo_p99_s=0.4)),
+        ),
+        policies=Policies(fairness="wfq"),
+        horizon=HORIZON)
+    grid = ScenarioGrid(base, {"events.1.spec.weight":
+                               [0.25, 0.5, 1.0, 2.0, 4.0, 8.0]})
+    for params, res in grid.run():
+        w = params["events.1.spec.weight"]
         serve, train = res.tenant("serve"), res.tenant("train")
         print(f"{w:>6g} {serve.latency_quantile(0.99) * 1e3:>8.0f} "
               f"{serve.slo_attainment * 100:>9.1f}% "
@@ -48,17 +54,21 @@ def weight_sweep() -> None:
 
 
 def preemption_timeline() -> None:
-    print("\n=== priority preemption with checkpoint-restore delay ===")
-    events = [
-        Arrival(0.0, JobSpec("batch", 56, placement="compact", priority=0,
-                             grad_bytes=2e9, iters=120)),
-        Arrival(5.0, JobSpec("vip", 32, placement="compact", priority=9,
-                             grad_bytes=1e9, iters=20)),
-    ]
-    res = LifecycleEngine(
-        fat_tree(64, nodes_per_leaf=8), events, base_seed=0,
-        scheduler="preempt", replan_delay_s=None,
-        restore_cost=RestoreCostModel()).run(HORIZON)
+    print("\n=== priority preemption: checkpoint-aware resume + "
+          "anti-thrash budget ===")
+    scenario = Scenario(
+        name="preemption_study", topology=FABRIC64,
+        events=(
+            Arrival(0.0, JobSpec("batch", 56, placement="compact",
+                                 priority=0, grad_bytes=2e9, iters=120,
+                                 ckpt_every=1)),
+            Arrival(5.0, JobSpec("vip", 32, placement="compact",
+                                 priority=9, grad_bytes=1e9, iters=20)),
+        ),
+        policies=Policies(scheduler="preempt", min_runtime_s=3.0,
+                          replan_delay_s=None),
+        horizon=HORIZON)
+    res = scenario.run()
     for t, kind, detail in res.log:
         print(f"  t={t:6.2f}  {kind:<12} {detail}")
     batch = res.tenant("batch")
@@ -66,7 +76,8 @@ def preemption_timeline() -> None:
     for ev in batch.recovery.events:
         print(f"  step {ev.step:>4} {ev.kind:<10} {ev.detail}")
     print(f"\nbatch: {batch.iters_done} steps over {len(batch.placements)} "
-          f"placements (iteration budget conserved across the eviction); "
+          f"placements (iteration budget conserved across the eviction; "
+          f"per-step checkpoints resume the original compute stream); "
           f"longest step {max(batch.step_times):.2f}s = VIP run + restore")
 
 

@@ -1,2 +1,6 @@
-"""Checkpoint substrate: sharded, atomic, async save with elastic restore."""
-from repro.ckpt.checkpoint import CheckpointManager  # noqa: F401
+"""Checkpoint substrate: sharded, atomic, async save with elastic restore,
+plus the cadence arithmetic the fabric simulation's checkpoint-aware
+resume shares with the real store."""
+from repro.ckpt.cadence import (CheckpointCadence,                 # noqa: F401
+                                latest_restorable_step)
+from repro.ckpt.checkpoint import CheckpointManager                # noqa: F401

@@ -1,7 +1,9 @@
 """Fabric study substrate: topology graphs, link-structural collective cost
 models (per-call and compiled), congestion dynamics, straggler/locality
-models, placement policies, and the shared-fabric BSP engine that steps one
-or many tenant jobs and reproduces the paper's empirical results."""
+models, pluggable policy registries (fairness / scheduling / placement),
+the shared-fabric BSP engine and event-driven lifecycle engine that step
+tenant populations, and the declarative Scenario API that fronts them all
+(``repro.fabric.scenario``)."""
 from repro.fabric.collectives import (CollectiveCost,              # noqa: F401
                                       CompiledSchedule, all_reduce,
                                       compile_schedule,
@@ -9,8 +11,11 @@ from repro.fabric.collectives import (CollectiveCost,              # noqa: F401
                                       ring_all_reduce, select_algo,
                                       tree_all_reduce)
 from repro.fabric.congestion import (CongestionConfig,             # noqa: F401
-                                     CongestionModel, maxmin_shares,
-                                     wfq_shares)
+                                     CongestionModel, drr_shares,
+                                     maxmin_shares,
+                                     strict_priority_shares, wfq_shares)
+from repro.fabric.policies import (FAIRNESS, PLACEMENTS,           # noqa: F401
+                                   FairnessPolicy, PolicyRegistry)
 from repro.fabric.engine import (FAIRNESS_MODES, EngineResult,     # noqa: F401
                                  FabricEngine, JobResult, JobSpec)
 from repro.fabric.events import (Arrival, Departure,               # noqa: F401
@@ -24,7 +29,10 @@ from repro.fabric.workloads import (InferenceSpec, InferenceTenant,  # noqa: F40
                                     Tenant, TrainingTenant)
 from repro.fabric.simulator import (SimConfig, SimResult,          # noqa: F401
                                     efficiency_curve, job_spec_from,
-                                    simulate)
+                                    scenario_from, simulate)
 from repro.fabric.stragglers import ComputeModel, StragglerConfig  # noqa: F401
 from repro.fabric.topology import (FatTree, Link, Topology,        # noqa: F401
                                    TpuPod, fat_tree, tpu_pod)
+from repro.fabric.scenario import (Policies, Result, Scenario,     # noqa: F401
+                                   ScenarioError, ScenarioGrid,
+                                   TopologySpec)

@@ -124,6 +124,101 @@ def wfq_shares(demands: Sequence[float],
     return alloc
 
 
+def strict_priority_shares(demands: Sequence[float],
+                           priorities: Sequence[float],
+                           capacity: float = 1.0) -> List[float]:
+    """Strict-priority allocation of one link's capacity: priority classes
+    are served in descending order, each class splitting whatever capacity
+    the classes above it left by progressive-filling max-min fairness.
+    A lower class sees bandwidth only after every higher class is satisfied
+    — the paper's "protected tenant" extreme, next to WFQ's proportional
+    one. Properties (held by ``tests/test_fairness.py``):
+
+      * conservation/saturation: ``sum(alloc) == min(capacity,
+        sum(demands))`` and no flow exceeds its demand;
+      * dominance: a class receives nothing until all higher classes are
+        at their demand;
+      * **bit-exact reduction**: uniform priorities collapse to a single
+        class, which is allocated by one :func:`maxmin_shares` call over
+        the full capacity — operation-for-operation identical to the
+        unweighted allocator.
+    """
+    n = len(demands)
+    if len(priorities) != n:
+        raise ValueError(f"{n} demands but {len(priorities)} priorities")
+    alloc = [0.0] * n
+    remaining = capacity
+    for prio in sorted(set(priorities), reverse=True):
+        idx = [j for j in range(n) if priorities[j] == prio]
+        sub = maxmin_shares([demands[j] for j in idx], remaining)
+        for j, a in zip(idx, sub):
+            alloc[j] = a
+            remaining -= a
+        if remaining < 0.0:
+            remaining = 0.0
+    return alloc
+
+
+def drr_shares(demands: Sequence[float],
+               weights: Optional[Sequence[float]] = None,
+               capacity: float = 1.0, rounds: int = 64) -> List[float]:
+    """Deficit-round-robin allocation of one link's capacity.
+
+    Unlike the fluid WFQ water level, DRR is *quantized*: flows are served
+    in fixed ring order, each accumulating a per-round deficit counter of
+    ``quantum * weight`` and sending up to its counter. The smallest-weight
+    flow's quantum is ``capacity / rounds``, so the schedule drains in at
+    most ~``rounds`` passes and the discretization error versus the fluid
+    weighted share is bounded by one quantum per flow. Properties (held by
+    ``tests/test_fairness.py``):
+
+      * conservation/saturation: ``sum(alloc) == min(capacity,
+        sum(demands))`` and no flow exceeds its demand;
+      * uniform weights reduce to :func:`maxmin_shares` within one quantum
+        (``capacity / rounds``) per flow — the quantization is the only
+        difference;
+      * ring-order bias is bounded: raising ``rounds`` converges to the
+        weighted fluid allocation.
+    """
+    n = len(demands)
+    alloc = [0.0] * n
+    if n == 0:
+        return alloc
+    if weights is None:
+        weights = [1.0] * n
+    if len(weights) != n:
+        raise ValueError(f"{n} demands but {len(weights)} weights")
+    for w in weights:
+        if not w > 0.0:
+            raise ValueError(f"weights must be positive, got {w!r}")
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+    w_min = min(weights)
+    unit = capacity / rounds / w_min
+    deficit = [0.0] * n
+    remaining = capacity
+    active = [j for j in range(n) if demands[j] > 0.0]
+    while remaining > 1e-15 * capacity and active:
+        still = []
+        for j in active:
+            deficit[j] += unit * weights[j]
+            send = deficit[j]
+            backlog = demands[j] - alloc[j]
+            if backlog < send:
+                send = backlog
+            if remaining < send:
+                send = remaining
+            alloc[j] += send
+            deficit[j] -= send
+            remaining -= send
+            if alloc[j] < demands[j]:
+                still.append(j)
+            if remaining <= 0.0:
+                break
+        active = still
+    return alloc
+
+
 def offered_share(own_bytes: float, d_i: float,
                   flows: Sequence[Tuple[float, float]]) -> float:
     """Offered-bytes proportional share of one link for a collective of
@@ -158,6 +253,30 @@ def wfq_share(d_i: float, own_weight: float,
     demands = [1.0] + [min(1.0, ov / d_i) for ov, _ in owner_flows]
     weights = [own_weight] + [w for _, w in owner_flows]
     return wfq_shares(demands, weights)[0]
+
+
+def strict_priority_share(d_i: float, own_priority: float,
+                          owner_flows: Sequence[Tuple[float, float]]
+                          ) -> float:
+    """Strict-priority share of one link for a collective of duration
+    ``d_i``: the :func:`maxmin_share` flow model resolved by
+    :func:`strict_priority_shares` over per-owner priorities.
+    ``owner_flows`` holds ``(overlap_s, priority)`` per co-tenant owner.
+    Uniform priorities reduce bit-exactly to :func:`maxmin_share`."""
+    demands = [1.0] + [min(1.0, ov / d_i) for ov, _ in owner_flows]
+    prios = [own_priority] + [p for _, p in owner_flows]
+    return strict_priority_shares(demands, prios)[0]
+
+
+def drr_share(d_i: float, own_weight: float,
+              owner_flows: Sequence[Tuple[float, float]]) -> float:
+    """Deficit-round-robin share of one link for a collective of duration
+    ``d_i``: the :func:`maxmin_share` flow model resolved by
+    :func:`drr_shares` over per-owner weights. ``owner_flows`` holds
+    ``(overlap_s, weight)`` per co-tenant owner."""
+    demands = [1.0] + [min(1.0, ov / d_i) for ov, _ in owner_flows]
+    weights = [own_weight] + [w for _, w in owner_flows]
+    return drr_shares(demands, weights)[0]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -62,18 +62,26 @@ import numpy as np
 from repro.configs.base import PacingConfig
 from repro.core.instrumentation import IterationRecord
 from repro.core.pacing import PacingBank
+from repro.fabric import _deprecation
 from repro.fabric.collectives import compile_schedule, select_algo
-from repro.fabric.congestion import (CongestionConfig, CongestionModel,
-                                     maxmin_share, offered_share, wfq_share)
+from repro.fabric.congestion import CongestionConfig, CongestionModel
 from repro.fabric.placement import place, spanning_groups
+from repro.fabric.policies import (FAIRNESS, FairnessPolicy,
+                                   resolve_fairness)
 from repro.fabric.stragglers import ComputeModel, StragglerConfig
 from repro.fabric.topology import Topology
 
-# "maxmin"  — unweighted progressive filling (default, PR-2 behavior);
-# "wfq"     — weighted progressive filling over JobSpec/InferenceSpec
-#             .weight (all weights 1.0 is bit-identical to "maxmin");
-# "offered" — PR-1 offered-bytes proportional split, kept for comparison.
-FAIRNESS_MODES = ("maxmin", "wfq", "offered")
+# Fairness modes are pluggable (repro.fabric.policies.FAIRNESS):
+# "maxmin"          — unweighted progressive filling (default, PR-2);
+# "wfq"             — weighted progressive filling over JobSpec/
+#                     InferenceSpec .weight (all weights 1.0 is
+#                     bit-identical to "maxmin");
+# "offered"         — PR-1 offered-bytes proportional split;
+# "strict_priority" — priority classes served in descending order;
+# "drr"             — deficit round robin (quantized weighted sharing).
+# Registration-order snapshot kept for compatibility; the registry is the
+# live source of truth.
+FAIRNESS_MODES = FAIRNESS.names()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,12 +116,23 @@ class JobSpec:
     # (repro.ft.failure.RestoreCostModel); None estimates it from
     # grad_bytes (fp32 gradients are parameter-sized).
     param_bytes: Optional[float] = None
+    # Checkpoint cadence in steps for checkpoint-aware resume: a preempted
+    # or failure-recovered tenant rewinds to its newest checkpoint
+    # (repro.ckpt.latest_restorable_step) and continues the original
+    # compute stream from that step count, re-executing lost work.
+    # None (default) keeps the PR-2/3 behavior: every re-place restarts
+    # the epoch stream.
+    ckpt_every: Optional[int] = None
 
     def __post_init__(self):
         if not self.weight > 0.0:
             raise ValueError(
                 f"job {self.name!r}: weight must be positive, got "
                 f"{self.weight!r}")
+        if self.ckpt_every is not None and self.ckpt_every < 1:
+            raise ValueError(
+                f"job {self.name!r}: ckpt_every must be >= 1 steps, got "
+                f"{self.ckpt_every!r}")
 
 
 def _materialize_records(trace, n: int) -> List[List[IterationRecord]]:
@@ -197,7 +216,7 @@ class _JobRuntime:
                  "eff", "dur")
 
     def __init__(self, spec: JobSpec, nodes: List[int], topo: Topology,
-                 compute_seed: int, fairness: str = "maxmin"):
+                 compute_seed: int, weighted: bool = False):
         self.spec = spec
         self.n = spec.n_ranks
         self.nodes = nodes
@@ -208,7 +227,7 @@ class _JobRuntime:
         if spec.algo == "auto":
             # weight only steers selection when weighted sharing will
             # actually grant the w/(w+1) contended share it assumes
-            sel_w = spec.weight if fairness == "wfq" else 1.0
+            sel_w = spec.weight if weighted else 1.0
             self.algo, self.schedule = select_algo(
                 topo, nodes, spec.grad_bytes, group=spec.group,
                 weight=sel_w)
@@ -242,13 +261,15 @@ class FabricEngine:
 
     def __init__(self, topo: Topology, jobs: Sequence[JobSpec], *,
                  congestion: Optional[CongestionConfig] = None,
-                 base_seed: int = 0, fairness: str = "maxmin"):
-        if fairness not in FAIRNESS_MODES:
-            raise KeyError(f"unknown fairness mode {fairness!r}; "
-                           f"one of {FAIRNESS_MODES}")
+                 base_seed: int = 0, fairness="maxmin"):
+        _deprecation.warn_legacy(
+            "FabricEngine(topo, jobs, ...)",
+            "Scenario(topology=..., jobs=[...], policies=Policies("
+            "fairness=...)).run()")
+        self.policy: FairnessPolicy = resolve_fairness(fairness)
         self.topo = topo
         self.base_seed = base_seed
-        self.fairness = fairness
+        self.fairness = self.policy.name
         self.congestion = CongestionModel(
             congestion if congestion is not None else CongestionConfig(),
             topo, seed=base_seed + 2)
@@ -277,7 +298,7 @@ class FabricEngine:
             seed = spec.seed if spec.seed is not None \
                 else base_seed + 1 + 1009 * idx
             self._jobs.append(_JobRuntime(spec, nodes, topo, seed,
-                                          fairness=fairness))
+                                          weighted=self.policy.weighted))
 
     # -- multi-tenant bandwidth partitioning -------------------------------
     def _contended_effs(self, durs0: List[float]) -> List[Dict[str, float]]:
@@ -292,21 +313,23 @@ class FabricEngine:
         times inside one long co-tenant collective — the segment keeps that
         link occupied across those rounds).
 
-        ``fairness="offered"`` weights demand by overlap-scaled offered
-        bytes; job i keeps ``own / total`` of the link. ``fairness="maxmin"``
-        (default) treats every overlapping co-tenant as one flow whose rate
-        demand is the fraction of job i's window it occupies, and gives job
-        i its progressive-filling max-min share (:func:`maxmin_shares`) —
-        small flows are never starved below their bottleneck share by heavy
-        co-tenants. ``fairness="wfq"`` is the same flow model resolved by
-        weighted progressive filling over ``JobSpec.weight``
-        (:func:`wfq_shares`; all weights 1.0 is bit-identical to
-        ``"maxmin"``). Any share stacks on the background congestion derate.
+        The split is resolved by the engine's pluggable fairness policy
+        (:data:`repro.fabric.policies.FAIRNESS`): ``"offered"`` weights
+        demand by overlap-scaled offered bytes (job i keeps
+        ``own / total``); ``"maxmin"`` (default) treats every overlapping
+        co-tenant as one flow whose rate demand is the fraction of job i's
+        window it occupies and gives job i its progressive-filling max-min
+        share — small flows are never starved below their bottleneck share
+        by heavy co-tenants; ``"wfq"`` / ``"drr"`` resolve the same flow
+        model by (fluid / quantized) weighted filling over
+        ``JobSpec.weight`` (uniform WFQ weights are bit-identical to
+        ``"maxmin"``); ``"strict_priority"`` serves ``JobSpec.priority``
+        classes in descending order. Any share stacks on the background
+        congestion derate.
         """
         jobs = self._jobs
         segments = self._segments
-        offered = self.fairness == "offered"
-        wfq = self.fairness == "wfq"
+        policy = self.policy
         spans = [(jr.last, jr.last + d0) for jr, d0 in zip(jobs, durs0)]
         effs: List[Dict[str, float]] = []
         for i, jr in enumerate(jobs):
@@ -317,8 +340,9 @@ class FabricEngine:
                 for ln, own in jr.shared_demand.items():
                     # co-tenant flows overlapping job i's window: tentative
                     # same-round collectives, then recorded past segments
-                    # — offered weights each flow by its bytes; max-min
-                    # aggregates activity per owner (capped at the window)
+                    # — offered weights each flow by its bytes; the owner-
+                    # aggregated models see activity per owner (capped at
+                    # the window) with that owner's weight and priority
                     flows: List[Tuple[float, float]] = []
                     activity: Dict[int, float] = {}
                     for k, other in enumerate(jobs):
@@ -340,15 +364,10 @@ class FabricEngine:
                             activity[k] = activity.get(k, 0.0) + ov
                     if not flows:
                         continue
-                    if offered:
-                        share = offered_share(own, d_i, flows)
-                    elif wfq:
-                        share = wfq_share(
-                            d_i, jr.spec.weight,
-                            [(ov, jobs[k].spec.weight)
-                             for k, ov in activity.items()])
-                    else:
-                        share = maxmin_share(d_i, list(activity.values()))
+                    share = policy.link_share(
+                        d_i, own, jr.spec.weight, jr.spec.priority, flows,
+                        [(ov, jobs[k].spec.weight, jobs[k].spec.priority)
+                         for k, ov in activity.items()])
                     if share < 1.0:
                         if adj is None:
                             adj = dict(jr.eff)

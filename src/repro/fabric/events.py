@@ -60,10 +60,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.fabric.congestion import (CongestionConfig, CongestionModel,
-                                     maxmin_share, offered_share, wfq_share)
-from repro.fabric.engine import FAIRNESS_MODES, JobSpec
+from repro.fabric import _deprecation
+from repro.fabric.congestion import CongestionConfig, CongestionModel
+from repro.fabric.engine import JobSpec
 from repro.fabric.placement import place
+from repro.fabric.policies import FairnessPolicy, resolve_fairness
 from repro.fabric.scheduling import (Scheduler, entry_priority,
                                      make_scheduler)
 from repro.fabric.topology import Topology
@@ -147,16 +148,18 @@ class LifecycleEngine:
     def __init__(self, topo: Topology, events: Sequence[Event], *,
                  congestion: Optional[CongestionConfig] = None,
                  heartbeat: Optional[HeartbeatConfig] = None,
-                 fairness: str = "maxmin",
+                 fairness: Union[str, FairnessPolicy] = "maxmin",
                  scheduler: Union[str, Scheduler] = "fifo",
                  replan_delay_s: Optional[float] = 0.5,
                  restore_cost: Optional[RestoreCostModel] = None,
                  base_seed: int = 0):
-        if fairness not in FAIRNESS_MODES:
-            raise KeyError(f"unknown fairness mode {fairness!r}; "
-                           f"one of {FAIRNESS_MODES}")
+        _deprecation.warn_legacy(
+            "LifecycleEngine(topo, events, ...)",
+            "Scenario(topology=..., events=[...], policies=Policies("
+            "fairness=..., scheduler=...)).run()")
+        self.policy: FairnessPolicy = resolve_fairness(fairness)
         self.topo = topo
-        self.fairness = fairness
+        self.fairness = self.policy.name
         self.scheduler = make_scheduler(scheduler)
         self.congestion_cfg = congestion if congestion is not None \
             else CongestionConfig()
@@ -178,6 +181,8 @@ class LifecycleEngine:
         self._active: List[Tenant] = []
         self._finished: List[Tenant] = []
         self._weights: Dict[str, float] = {}      # name -> WFQ weight
+        self._prios: Dict[str, float] = {}        # name -> priority class
+        self._evicted_at: Dict[str, float] = {}   # name -> last eviction t
         self._taken: Dict[int, str] = {}          # node -> tenant name
         self._dead: set = set()
         # per shared link: (start, end, demand_bytes, owner_name) windows
@@ -270,9 +275,10 @@ class LifecycleEngine:
         tenant.congestion = CongestionModel(
             self.congestion_cfg, self.topo,
             seed=self.base_seed + 2 + 1013 * self._tenant_seq)
-        tenant.fairness = self.fairness
+        tenant.weighted_fairness = self.policy.weighted
         self._tenant_seq += 1
         self._weights[spec.name] = tenant.weight
+        self._prios[spec.name] = tenant.priority
         for nd in nodes:
             self._taken[nd] = spec.name
         tenant.place(self.topo, nodes, self._now, self._clock,
@@ -343,13 +349,19 @@ class LifecycleEngine:
         """Evict lower-priority running training tenants until ``entry``
         fits. Returns True when at least one victim was evicted and the
         freed pool can host the entry; never evicts gratuitously (no
-        eviction unless the entry then fits)."""
+        eviction unless the entry then fits). A previously-evicted tenant
+        inside the scheduler's anti-thrash window — less than
+        ``min_runtime_s`` of *runtime* since its last resume — is not
+        eligible again: re-eviction churn would spend every window on
+        replan stalls instead of progress, and time spent queued must not
+        count toward the budget."""
         resume = isinstance(entry, Tenant)
         spec = entry.spec if resume else entry
         prio = entry_priority(entry)
         need = len(entry.nodes) if resume else spec.n_ranks
         victims = [t for t in self._active
-                   if t.kind == "training" and t.priority < prio]
+                   if t.kind == "training" and t.priority < prio
+                   and not self._inside_thrash_window(t)]
         # lowest priority evicted first; most recently admitted first
         # among equals (deterministic: _active is admission-ordered)
         victims.sort(key=lambda t: (t.priority, -self._active.index(t)))
@@ -379,8 +391,25 @@ class LifecycleEngine:
         self._evicted = True
         return True
 
+    def _inside_thrash_window(self, tenant: Tenant) -> bool:
+        """True while a previously-evicted tenant is protected by the
+        preempt scheduler's ``min_runtime_s`` budget. The window is armed
+        at the tenant's latest *resume* (re-placement time), not at the
+        eviction: a victim that sat queued through the whole window would
+        otherwise be re-evictable the instant it came back, with zero
+        actual runtime between evictions."""
+        budget = getattr(self.scheduler, "min_runtime_s", 0.0)
+        if budget <= 0.0 or tenant.name not in self._evicted_at:
+            return False
+        armed = self._evicted_at[tenant.name]
+        if tenant.placements:
+            # resume timestamps are >= the eviction they follow
+            armed = max(armed, tenant.placements[-1][0])
+        return self._now - armed < budget
+
     def _preempt(self, tenant: Tenant) -> None:
         tenant.pending_start = None
+        self._evicted_at[tenant.name] = self._now
         self._free_nodes(tenant)
         self._active.remove(tenant)
         tenant.recovery.record(
@@ -502,13 +531,13 @@ class LifecycleEngine:
         s_i = tenant.pending_start
         e_i = s_i + d0
         segments = self._segments
-        offered = self.fairness == "offered"
-        wfq = self.fairness == "wfq"
+        policy = self.policy
         adj: Optional[Dict[str, float]] = None
         for ln, own in tenant.pending_demand.items():
-            # same flow accounting as FabricEngine._contended_effs, via the
-            # shared helpers in repro.fabric.congestion: offered weights
-            # each flow by its bytes; max-min aggregates activity per owner
+            # same flow accounting as FabricEngine._contended_effs, with
+            # the split resolved by the engine's pluggable fairness policy:
+            # offered weights each flow by its bytes; the owner-aggregated
+            # models see activity per owner with its weight and priority
             flows: List[Tuple[float, float]] = []
             activity: Dict[str, float] = {}
             for other in self._active:
@@ -532,15 +561,10 @@ class LifecycleEngine:
                     activity[kname] = activity.get(kname, 0.0) + ov
             if not flows:
                 continue
-            if offered:
-                share = offered_share(own, d0, flows)
-            elif wfq:
-                share = wfq_share(
-                    d0, tenant.weight,
-                    [(ov, self._weights[nm])
-                     for nm, ov in activity.items()])
-            else:
-                share = maxmin_share(d0, list(activity.values()))
+            share = policy.link_share(
+                d0, own, tenant.weight, tenant.priority, flows,
+                [(ov, self._weights[nm], self._prios[nm])
+                 for nm, ov in activity.items()])
             if share < 1.0:
                 if adj is None:
                     adj = dict(eff)

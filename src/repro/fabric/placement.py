@@ -22,6 +22,7 @@ from __future__ import annotations
 import random
 from typing import Iterable, List, Sequence
 
+from repro.fabric.policies import PLACEMENTS
 from repro.fabric.topology import Topology
 
 
@@ -86,32 +87,39 @@ def random_placement(topo: Topology, n: int, free: Sequence[int],
     return pool[:n]
 
 
-POLICIES = ("compact", "scattered", "striped", "random")
+# Registry entries share one signature: fn(topo, n, free, *, seed) -> nodes.
+# Third-party policies register the same way and become available to
+# JobSpec(placement=...) and Scenario policy blocks without engine changes.
+PLACEMENTS.register("compact", lambda topo, n, free, *, seed=0:
+                    compact(topo, n, free))
+PLACEMENTS.register("scattered", lambda topo, n, free, *, seed=0:
+                    scattered(topo, n, free))
+PLACEMENTS.register("striped", lambda topo, n, free, *, seed=0:
+                    striped(topo, n, free))
+PLACEMENTS.register("random", lambda topo, n, free, *, seed=0:
+                    random_placement(topo, n, free, seed=seed))
+
+# registration-order snapshot, kept for the existing sweep loops; the
+# registry is the live source of truth for late registrations
+POLICIES = PLACEMENTS.names()
 
 
 def place(policy: str, topo: Topology, n: int, *,
           taken: Iterable[int] = (), seed: int = 0) -> List[int]:
     """Map ``n`` ranks onto distinct free nodes of ``topo``.
 
-    ``taken`` holds node ids already owned by co-tenant jobs. Raises if the
-    fabric cannot host ``n`` more ranks or the policy is unknown.
+    ``policy`` is resolved through the :data:`~repro.fabric.policies.
+    PLACEMENTS` registry. ``taken`` holds node ids already owned by
+    co-tenant jobs. Raises if the fabric cannot host ``n`` more ranks or
+    the policy is unknown.
     """
+    fn = PLACEMENTS.get(policy)
     free = _free_nodes(topo, taken)
     if n > len(free):
         raise ValueError(
             f"placement {policy!r}: need {n} nodes, only {len(free)} free "
             f"on {topo.name}")
-    if policy == "compact":
-        nodes = compact(topo, n, free)
-    elif policy == "scattered":
-        nodes = scattered(topo, n, free)
-    elif policy == "striped":
-        nodes = striped(topo, n, free)
-    elif policy == "random":
-        nodes = random_placement(topo, n, free, seed=seed)
-    else:
-        raise KeyError(f"unknown placement policy {policy!r}; "
-                       f"one of {POLICIES}")
+    nodes = fn(topo, n, free, seed=seed)
     assert len(nodes) == n and len(set(nodes)) == n
     return nodes
 

@@ -1,0 +1,222 @@
+"""Pluggable policy registries: fairness, scheduling, placement.
+
+PR 1-3 grew three orthogonal policy axes — how contended shared links are
+split between co-tenant flows (*fairness*), how the blocked-arrival queue
+drains (*scheduling*), and how ranks map onto nodes (*placement*) — but
+each was a stringly-typed kwarg resolved by an if/elif chain inside the
+engines. This module makes the axes first-class: one
+:class:`PolicyRegistry` per axis, each entry addressable by name from
+:class:`~repro.fabric.scenario.Scenario` policy blocks, engine kwargs, and
+third-party code alike. Registering a new policy is::
+
+    from repro.fabric.policies import FAIRNESS, FairnessPolicy
+
+    @FAIRNESS.register("my_mode")
+    class MyFairness(FairnessPolicy):
+        name = "my_mode"
+        def link_share(self, d_i, own_bytes, own_weight, own_priority,
+                       flows, owners):
+            ...
+
+— no engine code changes. The built-in entries:
+
+  * **fairness** — ``maxmin`` (default; progressive filling),
+    ``wfq`` (weighted progressive filling over tenant ``weight``),
+    ``offered`` (PR-1 offered-bytes proportional split),
+    ``strict_priority`` (priority classes served in descending order,
+    max-min within a class, over tenant ``priority``), and
+    ``drr`` (deficit round robin: quantized weighted sharing).
+  * **schedulers** — ``fifo`` / ``backfill`` / ``preempt``
+    (:mod:`repro.fabric.scheduling` registers them).
+  * **placements** — ``compact`` / ``scattered`` / ``striped`` /
+    ``random`` (:mod:`repro.fabric.placement` registers them).
+
+Every share function a fairness entry dispatches to lives in
+:mod:`repro.fabric.congestion`; the entries here are thin adapters, so the
+bit-exact contracts (uniform-weight WFQ == max-min, uniform-priority
+strict-priority == max-min) hold through the registry.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
+
+from repro.fabric.congestion import (drr_share, maxmin_share, offered_share,
+                                     strict_priority_share, wfq_share)
+
+# one co-tenant flow overlapping the window: (overlap_s, offered_bytes)
+Flow = Tuple[float, float]
+# per-owner aggregated activity: (overlap_s, weight, priority)
+OwnerFlow = Tuple[float, float, float]
+
+
+class PolicyRegistry:
+    """Name -> policy mapping with registration-order ``names()`` and
+    KeyError messages that list the valid entries. Dict-like read access
+    (``in``, ``[...]``, iteration over names) for drop-in compatibility
+    with the plain dicts it replaces."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, object] = {}
+
+    def register(self, name: str, entry: object = None):
+        """``register(name, entry)`` directly, or ``@register(name)`` as a
+        class/function decorator. Re-registering a taken name raises."""
+        def _add(obj):
+            if name in self._entries:
+                raise ValueError(
+                    f"{self.kind} {name!r} is already registered")
+            self._entries[name] = obj
+            return obj
+        if entry is not None:
+            return _add(entry)
+        return _add
+
+    def get(self, name: str):
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(f"unknown {self.kind} {name!r}; "
+                           f"one of {self.names()}") from None
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __getitem__(self, name: str):
+        return self.get(name)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def items(self):
+        return self._entries.items()
+
+
+FAIRNESS = PolicyRegistry("fairness mode")
+SCHEDULERS = PolicyRegistry("scheduler")
+PLACEMENTS = PolicyRegistry("placement policy")
+
+
+# ---------------------------------------------------------------------------
+# fairness entries
+# ---------------------------------------------------------------------------
+
+
+class FairnessPolicy:
+    """How one tenant's collective shares a contended link with co-tenant
+    flows overlapping its window.
+
+    ``link_share`` returns the fraction of the (already congestion-derated)
+    link bandwidth the owner keeps. ``d_i`` is the owner's tentative
+    collective duration, ``own_bytes`` its offered bytes on the link,
+    ``own_weight``/``own_priority`` its spec fields, ``flows`` every
+    overlapping co-tenant flow as ``(overlap_s, bytes)``, and ``owners``
+    the same activity aggregated per co-tenant owner as
+    ``(overlap_s, weight, priority)``.
+
+    ``weighted`` declares whether tenant ``weight`` steers the share —
+    when True, ``algo="auto"`` selection also costs candidates at the
+    tenant's expected contended share (see
+    :func:`repro.fabric.collectives.select_algo`).
+    """
+
+    name: str = ""
+    weighted: bool = False
+
+    def link_share(self, d_i: float, own_bytes: float, own_weight: float,
+                   own_priority: float, flows: List[Flow],
+                   owners: List[OwnerFlow]) -> float:
+        raise NotImplementedError
+
+
+@FAIRNESS.register("maxmin")
+class MaxMinFairness(FairnessPolicy):
+    """Unweighted progressive filling (default, the PR-2 behavior)."""
+
+    name = "maxmin"
+
+    def link_share(self, d_i, own_bytes, own_weight, own_priority, flows,
+                   owners):
+        return maxmin_share(d_i, [ov for ov, _, _ in owners])
+
+
+@FAIRNESS.register("wfq")
+class WfqFairness(FairnessPolicy):
+    """Weighted progressive filling over tenant ``weight`` (uniform
+    weights are bit-identical to ``maxmin``)."""
+
+    name = "wfq"
+    weighted = True
+
+    def link_share(self, d_i, own_bytes, own_weight, own_priority, flows,
+                   owners):
+        return wfq_share(d_i, own_weight,
+                         [(ov, w) for ov, w, _ in owners])
+
+
+@FAIRNESS.register("offered")
+class OfferedFairness(FairnessPolicy):
+    """PR-1 offered-bytes proportional split, kept for comparison."""
+
+    name = "offered"
+
+    def link_share(self, d_i, own_bytes, own_weight, own_priority, flows,
+                   owners):
+        return offered_share(own_bytes, d_i, flows)
+
+
+@FAIRNESS.register("strict_priority")
+class StrictPriorityFairness(FairnessPolicy):
+    """Priority classes served in descending ``priority`` order; max-min
+    within a class (uniform priorities are bit-identical to ``maxmin``).
+
+    A class fully starved by saturated higher classes is floored at
+    ``RESIDUAL_SHARE`` rather than exactly 0.0: a literal zero share
+    means the collective never completes (and divides the cost model by
+    zero); physically, even strict-priority queues leak residual service
+    to lower classes. The floor is far below any share the uniform-
+    priority (single-class) reduction can produce, so bit-exactness with
+    ``maxmin`` is unaffected.
+    """
+
+    name = "strict_priority"
+    RESIDUAL_SHARE = 1e-6
+
+    def link_share(self, d_i, own_bytes, own_weight, own_priority, flows,
+                   owners):
+        share = strict_priority_share(d_i, own_priority,
+                                      [(ov, p) for ov, _, p in owners])
+        return share if share > self.RESIDUAL_SHARE \
+            else self.RESIDUAL_SHARE
+
+
+@FAIRNESS.register("drr")
+class DrrFairness(FairnessPolicy):
+    """Deficit round robin: quantized weighted sharing in fixed ring
+    order (converges to the WFQ fluid share as the quantum shrinks)."""
+
+    name = "drr"
+    weighted = True
+
+    def link_share(self, d_i, own_bytes, own_weight, own_priority, flows,
+                   owners):
+        return drr_share(d_i, own_weight, [(ov, w) for ov, w, _ in owners])
+
+
+def resolve_fairness(spec: Union[str, FairnessPolicy]) -> FairnessPolicy:
+    """Engine-facing resolver: a registered name or a policy instance."""
+    if isinstance(spec, FairnessPolicy):
+        return spec
+    policy = FAIRNESS.get(spec)
+    return policy() if isinstance(policy, type) else policy
+
+
+def resolve_placement(name: str) -> Callable:
+    """Placement entry for ``name``: ``fn(topo, n, free, seed=...)``."""
+    return PLACEMENTS.get(name)

@@ -45,6 +45,7 @@ from __future__ import annotations
 from typing import List, Optional, Union
 
 from repro.fabric.engine import JobSpec
+from repro.fabric.policies import SCHEDULERS
 from repro.fabric.workloads import InferenceSpec, Tenant
 
 # a spec that has never been admitted, or a preempted tenant that will
@@ -97,6 +98,7 @@ class Scheduler:
         return False
 
 
+@SCHEDULERS.register("fifo")
 class FifoScheduler(Scheduler):
     """PR-2 behavior: retry in arrival order, one pass per freed-capacity
     event, no priorities, no eviction."""
@@ -104,6 +106,7 @@ class FifoScheduler(Scheduler):
     name = "fifo"
 
 
+@SCHEDULERS.register("backfill")
 class BackfillScheduler(Scheduler):
     """Priority-ordered drain with backfilling into leftover capacity."""
 
@@ -116,27 +119,43 @@ class BackfillScheduler(Scheduler):
         return sorted(batch, key=lambda e: -entry_priority(e))
 
 
+@SCHEDULERS.register("preempt")
 class PreemptScheduler(BackfillScheduler):
     """Backfill ordering plus eviction of lower-priority training tenants
     when a blocked entry outranks them (victim selection and eviction live
     in ``LifecycleEngine._preempt_for`` — they need the engine's node
-    accounting)."""
+    accounting).
+
+    ``min_runtime_s`` is the anti-thrash preemption budget: a
+    previously-evicted tenant cannot be evicted again until it has had
+    ``min_runtime_s`` of *runtime* since its latest resume (time spent
+    queued does not count), so a stream of high-priority arrivals cannot
+    churn the same victim through replan stalls without letting it run.
+    ``0.0`` (default) keeps the PR-3 behavior bit-for-bit.
+    """
 
     name = "preempt"
+
+    def __init__(self, min_runtime_s: float = 0.0) -> None:
+        super().__init__()
+        if min_runtime_s < 0.0:
+            raise ValueError(
+                f"min_runtime_s must be >= 0, got {min_runtime_s!r}")
+        self.min_runtime_s = min_runtime_s
 
     def on_blocked(self, engine, entry: QueueEntry) -> bool:
         return engine._preempt_for(entry)
 
 
-SCHEDULERS = {cls.name: cls for cls in
-              (FifoScheduler, BackfillScheduler, PreemptScheduler)}
-
-
-def make_scheduler(spec: Union[str, Scheduler]) -> Scheduler:
+def make_scheduler(spec: Union[str, Scheduler], **kwargs) -> Scheduler:
+    """Resolve a scheduler through the pluggable registry
+    (:data:`repro.fabric.policies.SCHEDULERS`): a registered name (with
+    optional constructor kwargs, e.g. ``make_scheduler("preempt",
+    min_runtime_s=2.0)``) or an already-built instance."""
     if isinstance(spec, Scheduler):
+        if kwargs:
+            raise TypeError(
+                "scheduler kwargs only apply when resolving by name; got "
+                f"an instance plus {sorted(kwargs)}")
         return spec
-    try:
-        return SCHEDULERS[spec]()
-    except KeyError:
-        raise KeyError(f"unknown scheduler {spec!r}; "
-                       f"one of {tuple(sorted(SCHEDULERS))}") from None
+    return SCHEDULERS.get(spec)(**kwargs)

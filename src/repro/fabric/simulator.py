@@ -156,13 +156,41 @@ def job_spec_from(cfg: SimConfig, name: str = "job0"):
         spanning_override=spanning)
 
 
+def scenario_from(cfg: SimConfig, name: str = "sim"):
+    """The declarative :class:`~repro.fabric.scenario.Scenario` equivalent
+    of a legacy single-job simulation: same topology spec, same job, same
+    seeds — ``scenario_from(cfg).run()`` reproduces ``simulate(cfg)``
+    step-for-step, bit-identically."""
+    from repro.fabric.scenario import Scenario, TopologySpec
+    return Scenario(
+        name=name,
+        topology=TopologySpec(
+            kind="fat_tree", n_nodes=cfg.n_nodes,
+            nodes_per_leaf=cfg.nodes_per_leaf,
+            oversubscription=cfg.oversubscription, leaf_bw=cfg.leaf_bw,
+            seed=cfg.seed),
+        jobs=(job_spec_from(cfg),),
+        congestion=cfg.congestion,
+        base_seed=cfg.seed,
+        iters=cfg.iters, warmup=cfg.warmup)
+
+
+def _run_quiet(cfg: SimConfig, topo: Optional[Topology] = None
+               ) -> SimResult:
+    result = scenario_from(cfg).run(topo=topo)
+    return SimResult(cfg=cfg, _job=result.raw.jobs[0])
+
+
 def simulate(cfg: SimConfig, topo: Optional[Topology] = None) -> SimResult:
-    from repro.fabric.engine import FabricEngine
-    topo = topo or build_topology(cfg)
-    engine = FabricEngine(topo, [job_spec_from(cfg)],
-                          congestion=cfg.congestion, base_seed=cfg.seed)
-    result = engine.run(cfg.iters, warmup=cfg.warmup)
-    return SimResult(cfg=cfg, _job=result.jobs[0])
+    """Legacy single-job entry point: a thin shim that builds the
+    equivalent Scenario (:func:`scenario_from`) and runs it through the
+    one front door; the step-time series is bit-identical to the seed
+    loop (executable spec in :mod:`repro.fabric._reference`)."""
+    from repro.fabric import _deprecation
+    _deprecation.warn_legacy(
+        "simulate(cfg)", "scenario_from(cfg).run() — or build the "
+        "Scenario directly")
+    return _run_quiet(cfg, topo)
 
 
 def efficiency_curve(node_counts, *, coordination: bool, seed: int = 0
@@ -171,8 +199,8 @@ def efficiency_curve(node_counts, *, coordination: bool, seed: int = 0
     out = {}
     base = None
     for n in node_counts:
-        res = simulate(SimConfig.paper(n, coordination=coordination,
-                                       seed=seed))
+        res = _run_quiet(SimConfig.paper(n, coordination=coordination,
+                                         seed=seed))
         thr = res.throughput
         if base is None:
             base = thr / n            # per-node throughput at smallest scale

@@ -112,10 +112,11 @@ class Tenant:
     # WFQ weight / scheduling priority; subclasses copy them from the spec
     weight: float = 1.0
     priority: int = 0
-    # the owning engine's fairness mode (set at admission): weight steers
-    # algo="auto" selection only under "wfq", where the contended share it
-    # assumes will actually be granted
-    fairness: str = "maxmin"
+    # set at admission when the owning engine's fairness policy is
+    # *weighted* (wfq/drr, or a third-party registration with
+    # FairnessPolicy.weighted): weight then steers algo="auto" selection,
+    # because the contended share it assumes will actually be granted
+    weighted_fairness: bool = False
 
     def __init__(self, name: str, seed: int):
         self.name = name
@@ -197,14 +198,28 @@ class TrainingTenant(Tenant):
         spec = self.spec
         n = len(self.nodes)
         self.n = n
-        # fresh streams per generation: a re-placed job is a restart
-        gen_seed = self.seed + 7919 * (self.generation - 1)
-        self.cm = ComputeModel(spec.stragglers, n, seed=gen_seed)
+        if spec.ckpt_every is None or self.generation <= 1:
+            # fresh streams per generation: a re-placed job is a restart
+            gen_seed = self.seed + 7919 * (self.generation - 1)
+            self.cm = ComputeModel(spec.stragglers, n, seed=gen_seed)
+        else:
+            # checkpoint-aware resume: rewind to the newest checkpoint at
+            # the spec's cadence and continue the *original* compute
+            # stream from that step count, instead of restarting the
+            # epoch stream per generation — steps past the checkpoint are
+            # lost work and will be re-executed (visible in-series)
+            from repro.ckpt import latest_restorable_step
+            restore = latest_restorable_step(self.iters_done,
+                                             spec.ckpt_every)
+            self.cm = ComputeModel(spec.stragglers, n, seed=self.seed)
+            for _ in range(restore):
+                self.cm.sample()
+            self.iters_done = restore
         self._bank = PacingBank(spec.pacing, n) \
             if spec.pacing is not None else None
         self.algo, self.schedule = _compile(
             topo, self.nodes, spec.grad_bytes, spec.algo, spec.group,
-            spec.weight if self.fairness == "wfq" else 1.0)
+            spec.weight if self.weighted_fairness else 1.0)
         self.floor_denom = max(self.schedule.total_s(None), 1e-9)
         self.demand = _shared_demand(topo, self.schedule)
         self._release = t
@@ -308,7 +323,7 @@ class InferenceTenant(Tenant):
 
     def _bind(self, topo: Topology, t: float) -> None:
         spec = self.spec
-        w = spec.weight if self.fairness == "wfq" else 1.0
+        w = spec.weight if self.weighted_fairness else 1.0
         self.algo, self.prefill_sched = _compile(
             topo, self.nodes, spec.prefill_bytes, spec.algo, spec.group, w)
         _, self.decode_sched = _compile(

@@ -1,8 +1,9 @@
-"""Fair bandwidth sharing: max-min and weighted (WFQ) allocator properties
-— conservation, bottleneck saturation, weight monotonicity, no-starvation,
-and the bit-exact uniform-weight reduction — plus engine-level byte
-conservation, offered-bytes equivalence for symmetric demands, and the
-documented no-starvation direction versus the offered-bytes split.
+"""Fair bandwidth sharing: max-min, weighted (WFQ), strict-priority, and
+deficit-round-robin allocator properties — conservation, bottleneck
+saturation, weight monotonicity, no-starvation, priority dominance, and
+the bit-exact uniform reductions — plus engine-level byte conservation,
+offered-bytes equivalence for symmetric demands, and the documented
+no-starvation direction versus the offered-bytes split.
 
 The allocator invariants run twice: as seeded random sweeps (always on, no
 optional deps) and as hypothesis property tests when hypothesis is
@@ -12,7 +13,10 @@ import random
 import pytest
 
 from repro.fabric import CongestionConfig, FabricEngine, JobSpec, fat_tree
-from repro.fabric.congestion import maxmin_shares, wfq_share, wfq_shares
+from repro.fabric.congestion import (drr_share, drr_shares, maxmin_shares,
+                                     strict_priority_share,
+                                     strict_priority_shares, wfq_share,
+                                     wfq_shares)
 from repro.fabric.stragglers import StragglerConfig
 
 try:
@@ -178,6 +182,145 @@ def test_wfq_rejects_bad_inputs():
     assert wfq_shares([], []) == []
 
 
+# ---------------------------------------------------------------------------
+# strict-priority allocator properties
+# ---------------------------------------------------------------------------
+
+
+def test_strict_priority_serves_classes_in_order():
+    # the high class takes its full demand; the low class gets leftovers
+    alloc = strict_priority_shares([0.8, 0.8], [5, 0])
+    assert alloc == pytest.approx([0.8, 0.2])
+    # a saturated high class starves the low one entirely
+    alloc = strict_priority_shares([1.5, 0.5], [5, 0])
+    assert alloc == pytest.approx([1.0, 0.0])
+    # max-min within a class: small same-class flow keeps its demand
+    alloc = strict_priority_shares([0.1, 5.0, 5.0], [3, 3, 3])
+    assert alloc == pytest.approx([0.1, 0.45, 0.45])
+
+
+def test_strict_priority_random_sweep_invariants():
+    rng = random.Random(23)
+    for _ in range(300):
+        n = rng.randint(1, 8)
+        demands = [rng.random() * 2.0 for _ in range(n)]
+        prios = [rng.randint(0, 3) for _ in range(n)]
+        capacity = rng.choice([1.0, 0.5, 3.0])
+        alloc = strict_priority_shares(demands, prios, capacity)
+        # conservation / bottleneck saturation, never above demand
+        assert sum(alloc) == pytest.approx(min(capacity, sum(demands)))
+        for a, d in zip(alloc, demands):
+            assert a <= d + 1e-9
+        # dominance: a class receives nothing until every higher class
+        # is at its demand
+        for j in range(n):
+            if alloc[j] > 1e-12:
+                for k in range(n):
+                    if prios[k] > prios[j]:
+                        assert alloc[k] == pytest.approx(demands[k])
+
+
+def test_strict_priority_uniform_reduces_bit_exactly_to_maxmin():
+    rng = random.Random(29)
+    for _ in range(200):
+        n = rng.randint(0, 8)
+        demands = [rng.random() * 2.0 for _ in range(n)]
+        capacity = rng.choice([1.0, 0.7, 2.5])
+        prio = rng.choice([0, 1, 7])
+        assert strict_priority_shares(demands, [prio] * n, capacity) \
+            == maxmin_shares(demands, capacity)
+
+
+def test_strict_priority_share_uniform_reduces_to_maxmin_share():
+    from repro.fabric.congestion import maxmin_share
+    rng = random.Random(31)
+    for _ in range(100):
+        d_i = 0.05 + rng.random()
+        ovs = [rng.random() * d_i * 2 for _ in range(rng.randint(0, 5))]
+        assert strict_priority_share(d_i, 0, [(ov, 0) for ov in ovs]) \
+            == maxmin_share(d_i, ovs)
+
+
+def test_strict_priority_rejects_length_mismatch():
+    with pytest.raises(ValueError):
+        strict_priority_shares([1.0, 1.0], [1])
+
+
+# ---------------------------------------------------------------------------
+# deficit-round-robin allocator properties
+# ---------------------------------------------------------------------------
+
+
+def test_drr_random_sweep_conservation_and_saturation():
+    rng = random.Random(37)
+    for _ in range(200):
+        n = rng.randint(1, 8)
+        demands = [rng.random() * 2.0 for _ in range(n)]
+        weights = [0.05 + rng.random() * 8.0 for _ in range(n)]
+        capacity = rng.choice([1.0, 0.5, 3.0])
+        alloc = drr_shares(demands, weights, capacity)
+        assert sum(alloc) == pytest.approx(min(capacity, sum(demands)))
+        for a, d in zip(alloc, demands):
+            assert a <= d + 1e-9
+            assert a >= 0.0
+
+
+def test_drr_uniform_weights_reduce_to_maxmin_within_one_quantum():
+    """DRR is quantized max-min at uniform weights: the ring-order
+    discretization can shift a flow by at most one quantum
+    (capacity / rounds)."""
+    rng = random.Random(41)
+    for _ in range(200):
+        n = rng.randint(1, 8)
+        demands = [rng.random() * 2.0 for _ in range(n)]
+        capacity = rng.choice([1.0, 2.5])
+        quantum = capacity / 64
+        alloc = drr_shares(demands, [1.0] * n, capacity)
+        ref = maxmin_shares(demands, capacity)
+        for a, r in zip(alloc, ref):
+            assert a == pytest.approx(r, abs=2 * quantum)
+
+
+def test_drr_weight_scales_the_saturated_share():
+    # all flows saturated: allocation tracks weight (within quantum)
+    alloc = drr_shares([1.0, 1.0], [1.0, 3.0])
+    assert alloc[1] > alloc[0]
+    assert alloc[1] / alloc[0] == pytest.approx(3.0, rel=0.15)
+    # weight buys priority, not free bandwidth
+    alloc = drr_shares([0.05, 1.0, 1.0], [100.0, 1.0, 1.0])
+    assert alloc[0] == pytest.approx(0.05)
+
+
+def test_drr_converges_to_wfq_as_the_quantum_shrinks():
+    demands = [1.2, 0.3, 0.9]
+    weights = [1.0, 2.0, 4.0]
+    fluid = wfq_shares(demands, weights)
+    coarse = drr_shares(demands, weights, rounds=8)
+    fine = drr_shares(demands, weights, rounds=4096)
+    err = [abs(a - f) for a, f in zip(coarse, fluid)]
+    err_fine = [abs(a - f) for a, f in zip(fine, fluid)]
+    assert max(err_fine) < max(err)
+    assert max(err_fine) < 1e-3
+
+
+def test_drr_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        drr_shares([1.0, 1.0], [1.0])            # length mismatch
+    with pytest.raises(ValueError):
+        drr_shares([1.0], [0.0])                 # non-positive weight
+    with pytest.raises(ValueError):
+        drr_shares([1.0], [1.0], rounds=0)
+    assert drr_shares([], []) == []
+
+
+def test_drr_share_window_model_matches_wfq_shape():
+    # one heavy co-owner: the DRR share lands near the WFQ fluid share
+    share = drr_share(1.0, 1.0, [(1.0, 1.0)])
+    assert share == pytest.approx(0.5, abs=0.05)
+    hi = drr_share(1.0, 4.0, [(1.0, 1.0)])
+    assert hi > share
+
+
 if HAVE_HYPOTHESIS:
     finite = dict(allow_nan=False, allow_infinity=False)
     _demands = st.lists(st.floats(min_value=0.0, max_value=50.0, **finite),
@@ -213,6 +356,42 @@ if HAVE_HYPOTHESIS:
         weights[j] *= factor
         hi = wfq_shares(demands, weights)[j]
         assert hi >= lo - 1e-9 * max(1.0, lo)
+
+    @given(demands=_demands, data=st.data(),
+           capacity=st.floats(min_value=1e-3, max_value=100.0, **finite))
+    @settings(max_examples=150, deadline=None)
+    def test_hyp_strict_priority_invariants(demands, data, capacity):
+        prios = data.draw(st.lists(
+            st.integers(min_value=0, max_value=4),
+            min_size=len(demands), max_size=len(demands)))
+        alloc = strict_priority_shares(demands, prios, capacity)
+        assert sum(alloc) == pytest.approx(min(capacity, sum(demands)),
+                                           rel=1e-9, abs=1e-12)
+        for a, d in zip(alloc, demands):
+            assert a <= d + 1e-9 * max(1.0, d)
+
+    @given(demands=_demands,
+           prio=st.integers(min_value=0, max_value=9),
+           capacity=st.floats(min_value=1e-3, max_value=100.0, **finite))
+    @settings(max_examples=150, deadline=None)
+    def test_hyp_strict_priority_uniform_reduces_bit_exactly(
+            demands, prio, capacity):
+        assert strict_priority_shares(demands, [prio] * len(demands),
+                                      capacity) \
+            == maxmin_shares(demands, capacity)
+
+    @given(demands=_demands, data=st.data(),
+           capacity=st.floats(min_value=1e-3, max_value=100.0, **finite))
+    @settings(max_examples=100, deadline=None)
+    def test_hyp_drr_conservation(demands, data, capacity):
+        weights = data.draw(st.lists(
+            st.floats(min_value=1e-3, max_value=100.0, **finite),
+            min_size=len(demands), max_size=len(demands)))
+        alloc = drr_shares(demands, weights, capacity)
+        assert sum(alloc) == pytest.approx(min(capacity, sum(demands)),
+                                           rel=1e-9, abs=1e-12)
+        for a, d in zip(alloc, demands):
+            assert a <= d + 1e-9 * max(1.0, d)
 
 
 # ---------------------------------------------------------------------------
@@ -346,3 +525,85 @@ def test_maxmin_never_starves_the_small_flow():
     assert maxmin_small > solo
     # and the heavy flow pays (weakly) for the protection
     assert mean("maxmin", "big") >= 0.95 * mean("offered", "big")
+
+
+# ---------------------------------------------------------------------------
+# the new registry modes through the engines
+# ---------------------------------------------------------------------------
+
+
+def _contending_pair(prio_a=0, prio_b=0, w_a=1.0, w_b=1.0):
+    return [JobSpec("a", 12, nodes=tuple(range(12)), grad_bytes=4e9,
+                    priority=prio_a, weight=w_a),
+            JobSpec("b", 12, nodes=tuple(range(12, 24)), grad_bytes=4e9,
+                    priority=prio_b, weight=w_b)]
+
+
+def test_engine_strict_priority_uniform_is_bit_identical_to_maxmin():
+    """Uniform priorities collapse to one class = one maxmin_shares call:
+    the engine-level face of the allocator's bit-exact reduction."""
+    def series(fairness):
+        res = FabricEngine(_fabric(), _contending_pair(), base_seed=0,
+                           fairness=fairness).run(80, warmup=10)
+        return [res.job("a").step_times, res.job("b").step_times]
+
+    assert series("strict_priority") == series("maxmin")
+
+
+def test_engine_strict_priority_protects_the_high_class():
+    def mean_steps(fairness, prio_b=0):
+        res = FabricEngine(_fabric(), _contending_pair(prio_b=prio_b),
+                           base_seed=0, fairness=fairness) \
+            .run(100, warmup=10)
+        return res.job("a").mean_step, res.job("b").mean_step
+
+    eq_a, eq_b = mean_steps("strict_priority")
+    _, hi_b = mean_steps("strict_priority", prio_b=5)
+    assert hi_b < eq_b                # priority buys the whole link
+    # priorities are inert under the weight-based modes
+    assert mean_steps("maxmin", prio_b=5) == mean_steps("maxmin")
+
+
+def test_engine_strict_priority_survives_total_starvation():
+    """Saturated higher classes drive a lower class's allocator share to
+    exactly 0.0; the policy floors it at RESIDUAL_SHARE so the starved
+    collective still completes (a literal zero share divides the cost
+    model by zero). Regression: this configuration crashed with
+    ZeroDivisionError before the floor."""
+    jobs = [JobSpec("lo", 8, placement="scattered", grad_bytes=6e9,
+                    priority=0),
+            JobSpec("hi1", 8, placement="scattered", grad_bytes=6e9,
+                    priority=5),
+            JobSpec("hi2", 8, placement="scattered", grad_bytes=6e9,
+                    priority=5)]
+    res = FabricEngine(_fabric(), jobs, base_seed=0,
+                       fairness="strict_priority").run(300, warmup=10)
+    lo = res.job("lo")
+    assert all(s > 0.0 and s < float("inf") for s in lo.step_times)
+    # the floor itself: two saturated higher-class owners starve the
+    # allocator share to exactly 0.0, the policy clamps it
+    from repro.fabric.policies import StrictPriorityFairness
+    policy = StrictPriorityFairness()
+    share = policy.link_share(1.0, 1e9, 1.0, 0, [],
+                              [(1.0, 1.0, 5), (1.0, 1.0, 5)])
+    assert strict_priority_share(1.0, 0, [(1.0, 5), (1.0, 5)]) == 0.0
+    assert share == policy.RESIDUAL_SHARE
+
+
+def test_engine_drr_weight_buys_bandwidth():
+    def mean_a(w_a):
+        res = FabricEngine(_fabric(), _contending_pair(w_a=w_a),
+                           base_seed=0, fairness="drr").run(100, warmup=10)
+        return res.job("a").mean_step
+
+    assert mean_a(8.0) < mean_a(1.0)
+
+
+def test_fairness_policy_instance_is_accepted_directly():
+    from repro.fabric.policies import resolve_fairness
+    policy = resolve_fairness("maxmin")
+    res = FabricEngine(_fabric(), _contending_pair(), base_seed=0,
+                       fairness=policy).run(30, warmup=5)
+    ref = FabricEngine(_fabric(), _contending_pair(), base_seed=0,
+                       fairness="maxmin").run(30, warmup=5)
+    assert res.job("a").step_times == ref.job("a").step_times

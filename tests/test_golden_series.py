@@ -1,19 +1,24 @@
-"""Golden determinism-regression fixtures.
+"""Golden determinism-regression fixtures, replayed through the Scenario
+front door.
 
 PR 1/2 established a determinism contract: same seed + same event list =>
 bit-identical step-time / latency series, across arrivals, blocked
 admissions, failures, and re-placements. The property tests in
 ``test_lifecycle.py`` check *relations* (prefix equality, inertness); these
-tests pin the *absolute* series: small engine / lifecycle scenarios are
-serialized (float hex — bit-exact, no repr rounding) under
-``tests/golden/`` and every run must replay them identically, so a future
-refactor cannot silently shift the contract.
+tests pin the *absolute* series: small scenarios are serialized (float hex
+— bit-exact, no repr rounding) under ``tests/golden/`` and every run must
+replay them identically, so a future refactor cannot silently shift the
+contract.
 
-The ``lifecycle_fifo`` and ``engine_maxmin`` fixtures were generated from
-the PR-2 code before weighted fair queuing and scheduler policies existed —
-replaying them bit-exactly *is* the "``scheduler="fifo"``, all weights 1
-reduces to PR-2" guarantee. ``lifecycle_preempt`` and ``lifecycle_wfq``
-lock the new policies' output the same way for the next refactor.
+Since PR 4 every fixture is built as a declarative
+:class:`repro.fabric.scenario.Scenario` and replayed through
+``Scenario.run().fingerprint()`` — the fixtures themselves are unchanged
+from when they were recorded against the PR-2/PR-3 engines, so a matching
+replay *is* the proof that the Scenario path (and the pluggable policy
+registries behind it) reproduces the legacy entry points bit-for-bit:
+``lifecycle_fifo`` and ``engine_maxmin`` were generated from the PR-2 code
+before weighted fair queuing and scheduler policies existed;
+``lifecycle_preempt`` and ``lifecycle_wfq`` lock the PR-3 policies.
 
 Regenerate (only when a behavior change is intended and reviewed):
 
@@ -24,14 +29,12 @@ import os
 
 import pytest
 
-from repro.fabric import (Arrival, Departure, FabricEngine, InferenceSpec,
-                          JobSpec, LifecycleEngine, NodeFailure, fat_tree)
+from repro.fabric import (Arrival, Departure, InferenceSpec, JobSpec,
+                          NodeFailure, Policies, Scenario, TopologySpec)
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 
-
-def _fabric():
-    return fat_tree(64, nodes_per_leaf=8)
+FABRIC64 = TopologySpec(kind="fat_tree", n_nodes=64, nodes_per_leaf=8)
 
 
 # ---------------------------------------------------------------------------
@@ -58,8 +61,8 @@ def mixed_lifecycle_events():
 def _lifecycle_fifo():
     """The mixed scenario under the default (fifo, weight-1,
     constant-replan) configuration."""
-    return LifecycleEngine(_fabric(), mixed_lifecycle_events(),
-                           base_seed=0).run(16.0)
+    return Scenario(name="golden_lifecycle_fifo", topology=FABRIC64,
+                    events=mixed_lifecycle_events(), horizon=16.0)
 
 
 def _lifecycle_preempt():
@@ -73,8 +76,9 @@ def _lifecycle_preempt():
                              iters=20)),
         Arrival(3.0, JobSpec("fill", 6, placement="compact", priority=1)),
     ]
-    return LifecycleEngine(_fabric(), events, base_seed=0,
-                           scheduler="preempt").run(16.0)
+    return Scenario(name="golden_lifecycle_preempt", topology=FABRIC64,
+                    events=events, policies=Policies(scheduler="preempt"),
+                    horizon=16.0)
 
 
 def _lifecycle_wfq():
@@ -89,8 +93,9 @@ def _lifecycle_wfq():
                                    rate_rps=6.0, weight=4.0,
                                    slo_p99_s=0.5)),
     ]
-    return LifecycleEngine(_fabric(), events, base_seed=0,
-                           fairness="wfq").run(12.0)
+    return Scenario(name="golden_lifecycle_wfq", topology=FABRIC64,
+                    events=events, policies=Policies(fairness="wfq"),
+                    horizon=12.0)
 
 
 def _engine_maxmin():
@@ -98,47 +103,15 @@ def _engine_maxmin():
     jobs = [JobSpec("a", 8, placement="scattered"),
             JobSpec("b", 8, placement="compact", grad_bytes=2e9),
             JobSpec("c", 8, placement="compact", algo="tree")]
-    return FabricEngine(_fabric(), jobs, base_seed=1).run(60, warmup=5)
-
-
-# ---------------------------------------------------------------------------
-# serialization: float hex is bit-exact across platforms and json round-trip
-# ---------------------------------------------------------------------------
-
-
-def _hex(xs):
-    return [float(x).hex() for x in xs]
-
-
-def _lifecycle_snapshot(res):
-    snap = {"tenants": [], "log": [[float(t).hex(), kind]
-                                   for t, kind, _ in res.log]}
-    for t in res.tenants:
-        entry = {"name": t.name, "kind": t.kind, "nodes": list(t.nodes),
-                 "generation": t.generation}
-        if t.kind == "training":
-            entry["series"] = _hex(t.step_times)
-            entry["iters_done"] = t.iters_done
-        else:
-            entry["series"] = _hex(t.latencies)
-            entry["requests_done"] = t.requests_done
-        snap["tenants"].append(entry)
-    return snap
-
-
-def _engine_snapshot(res):
-    return {"jobs": [{"name": jr.name, "nodes": list(jr.nodes),
-                      "algo": jr.algo, "series": _hex(jr.step_times)}
-                     for jr in res.jobs],
-            "link_bytes": {ln: float(b).hex()
-                           for ln, b in sorted(res.link_bytes.items())}}
+    return Scenario(name="golden_engine_maxmin", topology=FABRIC64,
+                    jobs=jobs, base_seed=1, iters=60, warmup=5)
 
 
 FIXTURES = {
-    "lifecycle_fifo": (_lifecycle_fifo, _lifecycle_snapshot),
-    "lifecycle_preempt": (_lifecycle_preempt, _lifecycle_snapshot),
-    "lifecycle_wfq": (_lifecycle_wfq, _lifecycle_snapshot),
-    "engine_maxmin": (_engine_maxmin, _engine_snapshot),
+    "lifecycle_fifo": _lifecycle_fifo,
+    "lifecycle_preempt": _lifecycle_preempt,
+    "lifecycle_wfq": _lifecycle_wfq,
+    "engine_maxmin": _engine_maxmin,
 }
 
 
@@ -148,23 +121,35 @@ def _path(name):
 
 @pytest.mark.parametrize("name", sorted(FIXTURES))
 def test_golden_replay_is_bit_identical(name):
-    build, snapshot = FIXTURES[name]
+    scenario = FIXTURES[name]()
     with open(_path(name)) as f:
         golden = json.load(f)
-    assert snapshot(build()) == golden, (
+    assert scenario.run().fingerprint() == golden, (
         f"{name}: series diverged from the recorded golden fixture — the "
         f"determinism contract shifted. If the change is intended, "
         f"regenerate with `PYTHONPATH=src python "
         f"tests/test_golden_series.py` and review the diff.")
 
 
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_golden_scenarios_survive_json_round_trip(name):
+    """The fixtures double as serialization regressions: a scenario
+    rebuilt from its own JSON form replays the same fingerprint."""
+    scenario = FIXTURES[name]()
+    rebuilt = Scenario.from_json(scenario.to_json())
+    with open(_path(name)) as f:
+        golden = json.load(f)
+    assert rebuilt.run().fingerprint() == golden
+
+
 def regen(only=None):
     os.makedirs(GOLDEN_DIR, exist_ok=True)
-    for name, (build, snapshot) in sorted(FIXTURES.items()):
+    for name, build in sorted(FIXTURES.items()):
         if only and name not in only:
             continue
         with open(_path(name), "w") as f:
-            json.dump(snapshot(build()), f, indent=1, sort_keys=True)
+            json.dump(build().run().fingerprint(), f, indent=1,
+                      sort_keys=True)
             f.write("\n")
         print(f"wrote {_path(name)}")
 

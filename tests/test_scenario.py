@@ -1,0 +1,385 @@
+"""Declarative Scenario API: JSON round-trip bit-identity, eager
+validation, the unified Result shape, ScenarioGrid sweeps, the named
+scenario library, pluggable-registry extension points, and the
+deprecation shims over the legacy entry points."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.fabric import (Arrival, Departure, FabricEngine, InferenceSpec,
+                          JobSpec, LifecycleEngine, NodeFailure, Policies,
+                          Scenario, ScenarioError, ScenarioGrid, SimConfig,
+                          TopologySpec, fat_tree, scenario_from, simulate)
+from repro.fabric.policies import (FAIRNESS, PLACEMENTS, SCHEDULERS,
+                                   FairnessPolicy)
+from repro.fabric.scenario import library
+
+TOPO64 = TopologySpec(kind="fat_tree", n_nodes=64, nodes_per_leaf=8)
+
+
+def _lifecycle_scenario(**kw):
+    events = [
+        Arrival(0.0, JobSpec("t0", 12, placement="compact", algo="auto")),
+        Arrival(2.0, InferenceSpec("serve", 4, rate_rps=8.0,
+                                   slo_p99_s=0.5)),
+        Arrival(3.0, JobSpec("t1", 12, placement="compact",
+                             grad_bytes=2e9)),
+        NodeFailure(9.0, 3),
+        Departure(10.0, "t1"),
+    ]
+    kw.setdefault("name", "mixed")
+    kw.setdefault("topology", TOPO64)
+    kw.setdefault("events", events)
+    kw.setdefault("horizon", 14.0)
+    return Scenario(**kw)
+
+
+def _static_scenario(**kw):
+    kw.setdefault("name", "static")
+    kw.setdefault("topology", TOPO64)
+    kw.setdefault("jobs", (
+        JobSpec("a", 8, placement="scattered"),
+        JobSpec("b", 8, placement="compact", grad_bytes=2e9)))
+    kw.setdefault("iters", 60)
+    kw.setdefault("warmup", 5)
+    return Scenario(**kw)
+
+
+# ---------------------------------------------------------------------------
+# serialization round-trip: spec -> dict -> json -> spec -> identical run
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("build", [_lifecycle_scenario, _static_scenario])
+def test_json_round_trip_is_bit_identical(build):
+    scn = build()
+    rt = Scenario.from_dict(json.loads(json.dumps(scn.to_dict())))
+    assert rt.to_dict() == scn.to_dict()
+    assert rt.run().fingerprint() == scn.run().fingerprint()
+
+
+def test_round_trip_preserves_nested_configs():
+    from repro.configs.base import PacingConfig
+    from repro.fabric import CongestionConfig, StragglerConfig
+    scn = _static_scenario(
+        jobs=(JobSpec("p", 8, placement="compact",
+                      stragglers=StragglerConfig(jitter_sigma=0.05),
+                      pacing=PacingConfig(window=6),
+                      nodes=None),),
+        congestion=CongestionConfig(u_mean=0.2, k_kick=0.1))
+    rt = Scenario.from_json(scn.to_json())
+    assert rt.jobs[0].stragglers == scn.jobs[0].stragglers
+    assert rt.jobs[0].pacing == scn.jobs[0].pacing
+    assert rt.congestion == scn.congestion
+    assert rt.run().fingerprint() == scn.run().fingerprint()
+
+
+def test_scenario_run_matches_direct_engine_bit_for_bit():
+    """The front door is a dispatcher, not a reimplementation: the same
+    seeds and kwargs reach the engines, so series coincide exactly."""
+    scn = _lifecycle_scenario()
+    direct = LifecycleEngine(fat_tree(64, nodes_per_leaf=8),
+                             list(scn.events), base_seed=0).run(14.0)
+    res = scn.run()
+    for t in direct.tenants:
+        series = t.step_times if t.kind == "training" else t.latencies
+        assert res.series(t.name) == series
+
+    sscn = _static_scenario()
+    sdirect = FabricEngine(fat_tree(64, nodes_per_leaf=8),
+                           list(sscn.jobs), base_seed=0).run(60, warmup=5)
+    sres = sscn.run()
+    for jr in sdirect.jobs:
+        assert sres.series(jr.name) == jr.step_times
+
+
+# ---------------------------------------------------------------------------
+# eager validation
+# ---------------------------------------------------------------------------
+
+
+def test_validation_rejects_bad_policy_names():
+    with pytest.raises(ScenarioError, match="unknown fairness"):
+        _lifecycle_scenario(policies=Policies(fairness="bogus"))
+    with pytest.raises(ScenarioError, match="unknown scheduler"):
+        _lifecycle_scenario(policies=Policies(scheduler="bogus"))
+    with pytest.raises(ScenarioError, match="unknown placement"):
+        _static_scenario(jobs=(JobSpec("a", 8, placement="bogus"),))
+    with pytest.raises(ScenarioError, match="unknown algo"):
+        _static_scenario(jobs=(JobSpec("a", 8, algo="bogus"),))
+    with pytest.raises(ScenarioError, match="unknown topology kind"):
+        _static_scenario(topology=TopologySpec(kind="bogus"))
+
+
+def test_validation_rejects_malformed_numerics():
+    with pytest.raises(ScenarioError, match="nodes_per_leaf"):
+        _static_scenario(topology=TopologySpec(nodes_per_leaf=0))
+    with pytest.raises(ScenarioError, match="leaf_bw"):
+        _static_scenario(topology=TopologySpec(leaf_bw=-1.0))
+    with pytest.raises(ScenarioError, match="ranks_per_pod"):
+        _static_scenario(topology=TopologySpec(kind="tpu_pod",
+                                               ranks_per_pod=0))
+    with pytest.raises(ScenarioError, match="replan_delay_s"):
+        _lifecycle_scenario(policies=Policies(replan_delay_s=-5.0))
+    with pytest.raises(ScenarioError, match="restore_read_bw_Bps"):
+        _lifecycle_scenario(policies=Policies(restore_read_bw_Bps=0.0))
+    with pytest.raises(ScenarioError, match="restore_overhead_s"):
+        _lifecycle_scenario(policies=Policies(restore_overhead_s=-0.1))
+
+
+def test_static_scenarios_reject_lifecycle_only_settings():
+    """A static population silently dropping lifecycle-only knobs would
+    be a no-op misdeclaration; it must raise like the scheduler check."""
+    from repro.ft import HeartbeatConfig
+    with pytest.raises(ScenarioError, match="replan_delay_s"):
+        _static_scenario(policies=Policies(replan_delay_s=None))
+    with pytest.raises(ScenarioError, match="restore_read_bw_Bps"):
+        _static_scenario(policies=Policies(restore_read_bw_Bps=1e9))
+    with pytest.raises(ScenarioError, match="heartbeat"):
+        _static_scenario(heartbeat=HeartbeatConfig(interval_s=0.2,
+                                                   timeout_s=1.0))
+    # the restore model is valid on event scenarios
+    res = _lifecycle_scenario(
+        policies=Policies(replan_delay_s=None,
+                          restore_read_bw_Bps=1e9)).run()
+    assert any(k == "replaced" for _, k, _ in res.log)
+
+
+def test_validation_rejects_oversubscribed_nodes():
+    with pytest.raises(ScenarioError, match="oversubscribe"):
+        _static_scenario(jobs=(JobSpec("a", 40), JobSpec("b", 40)))
+    with pytest.raises(ScenarioError, match="wants"):
+        _lifecycle_scenario(events=(Arrival(0.0, JobSpec("big", 100)),))
+    with pytest.raises(ScenarioError, match="already pinned"):
+        _static_scenario(jobs=(
+            JobSpec("a", 8, nodes=tuple(range(8))),
+            JobSpec("b", 8, nodes=tuple(range(4, 12)))))
+    with pytest.raises(ScenarioError, match="outside"):
+        _static_scenario(jobs=(JobSpec("a", 4, nodes=(0, 1, 2, 99)),))
+    with pytest.raises(ScenarioError, match="distinct"):
+        _static_scenario(jobs=(JobSpec("a", 4, nodes=(0, 1, 2, 2)),))
+    with pytest.raises(ScenarioError, match="outside"):
+        _lifecycle_scenario(events=(
+            Arrival(0.0, JobSpec("a", 8)), NodeFailure(1.0, 200)))
+
+
+def test_validation_rejects_negative_weights_and_bad_shapes():
+    # weight positivity is enforced by the specs themselves, surfaced
+    # through the from_dict path too
+    with pytest.raises(ValueError, match="weight must be positive"):
+        _static_scenario(jobs=(JobSpec("a", 8, weight=-1.0),))
+    d = _lifecycle_scenario().to_dict()
+    d["events"][0]["spec"]["weight"] = -2.0
+    with pytest.raises(ValueError, match="weight must be positive"):
+        Scenario.from_dict(d)
+    with pytest.raises(ScenarioError, match="exactly one"):
+        Scenario(topology=TOPO64)
+    with pytest.raises(ScenarioError, match="exactly one"):
+        Scenario(topology=TOPO64, jobs=(JobSpec("a", 8),),
+                 events=(Arrival(0.0, JobSpec("b", 8)),))
+    with pytest.raises(ScenarioError, match="at least one event"):
+        _lifecycle_scenario(events=())
+    with pytest.raises(ScenarioError, match="at least one Arrival"):
+        _lifecycle_scenario(events=(NodeFailure(1.0, 3),))
+    with pytest.raises(ScenarioError, match="duplicate"):
+        _static_scenario(jobs=(JobSpec("a", 8), JobSpec("a", 8)))
+    with pytest.raises(ScenarioError, match="warmup"):
+        _static_scenario(iters=10, warmup=10)
+    with pytest.raises(ScenarioError, match="horizon"):
+        _lifecycle_scenario(horizon=0.0)
+    with pytest.raises(ScenarioError, match="min_runtime_s"):
+        _lifecycle_scenario(policies=Policies(min_runtime_s=2.0))
+    with pytest.raises(ScenarioError, match="only applies to event"):
+        _static_scenario(policies=Policies(scheduler="preempt"))
+    with pytest.raises(ScenarioError, match="unknown event type"):
+        Scenario.from_dict({"topology": {}, "events":
+                            [{"type": "bogus", "t": 0.0}]})
+    with pytest.raises(ScenarioError, match="unknown tenant kind"):
+        Scenario.from_dict({"topology": {}, "events": [
+            {"type": "arrival", "t": 0.0,
+             "spec": {"kind": "bogus", "name": "x", "n_ranks": 4}}]})
+
+
+# ---------------------------------------------------------------------------
+# the unified Result
+# ---------------------------------------------------------------------------
+
+
+def test_result_unifies_series_slo_and_diagnostics():
+    res = _lifecycle_scenario().run()
+    assert set(res.names()) == {"t0", "serve", "t1"}
+    assert res.kind == "lifecycle"
+    assert res.series("t0") == res.tenant("t0").step_times
+    assert res.series("serve") == res.tenant("serve").latencies
+    att = res.slo_attainment()
+    assert set(att) == {"serve"} and 0.0 <= att["serve"] <= 1.0
+    diags = res.diagnostics()
+    assert set(diags) == set(res.names())
+    t0 = diags["t0"]
+    assert t0["kind"] == "training" and t0["steps"] > 0
+    assert t0["spanning_groups"] >= 1
+    assert 0.0 <= t0["shared_bytes_frac"] <= 1.0
+    assert diags["serve"]["kind"] == "inference"
+    assert diags["serve"]["requests"] == res.tenant("serve").requests_done
+    assert any(kind == "detected" for _, kind, _ in res.log)
+    with pytest.raises(KeyError):
+        res.tenant("nope")
+
+
+def test_result_fabric_backend_shape():
+    res = _static_scenario().run()
+    assert res.kind == "fabric"
+    assert res.slo_attainment() == {}
+    assert res.log == []
+    assert set(res.diagnostics()) == {"a", "b"}
+    fp = res.fingerprint()
+    assert set(fp) == {"jobs", "link_bytes"}
+    # float-hex serialization: bit-exact round trip through JSON
+    assert json.loads(json.dumps(fp)) == fp
+
+
+# ---------------------------------------------------------------------------
+# ScenarioGrid sweeps
+# ---------------------------------------------------------------------------
+
+
+def test_grid_sweeps_dotted_paths_eagerly():
+    base = _static_scenario()
+    grid = ScenarioGrid(base, {
+        "policies.fairness": ["maxmin", "offered"],
+        "base_seed": [0, 1],
+    })
+    assert len(grid) == 4
+    names = [scn.name for _, scn in grid]
+    assert len(set(names)) == 4 and all("fairness=" in n for n in names)
+    results = {(p["policies.fairness"], p["base_seed"]): r
+               for p, r in grid.run()}
+    # same-seed variants differ across fairness models, and the sweep's
+    # maxmin cell reproduces the base run bit-for-bit
+    assert results[("maxmin", 0)].series("a") \
+        == base.run().series("a")
+    assert results[("maxmin", 0)].series("a") \
+        != results[("offered", 0)].series("a")
+
+
+def test_grid_indexes_into_event_lists():
+    base = library.build("noisy_neighbor_inference")
+    grid = ScenarioGrid(base, {"events.1.spec.weight": [1.0, 8.0]})
+    weights = [scn.events[1].spec.weight for _, scn in grid]
+    assert weights == [1.0, 8.0]
+
+
+def test_grid_rejects_bad_paths_and_invalid_variants():
+    base = _static_scenario()
+    with pytest.raises(ScenarioError, match="does not resolve"):
+        ScenarioGrid(base, {"nope.deep.path": [1]})
+    # an invalid value fails eagerly at grid construction, before any run
+    with pytest.raises(ScenarioError, match="unknown fairness"):
+        ScenarioGrid(base, {"policies.fairness": ["maxmin", "bogus"]})
+    with pytest.raises(ScenarioError, match="at least one sweep"):
+        ScenarioGrid(base, {})
+
+
+# ---------------------------------------------------------------------------
+# the named library
+# ---------------------------------------------------------------------------
+
+
+def test_library_covers_the_paper_failure_modes():
+    names = library.names()
+    for required in ("synchronization_amplification",
+                     "topology_contention", "locality_variance",
+                     "noisy_neighbor_inference"):
+        assert required in names
+    # every entry builds a validated scenario and serializes round-trip
+    for name in names:
+        scn = library.build(name)
+        assert Scenario.from_json(scn.to_json()).to_dict() == scn.to_dict()
+    with pytest.raises(KeyError):
+        library.build("nope")
+
+
+def test_library_topology_contention_shows_the_failure_mode():
+    res = library.build("topology_contention").run()
+    solo = library.build("topology_contention").replace(
+        jobs=(library.build("topology_contention").jobs[0],)).run()
+    # the primary slows down purely from the co-tenant's traffic
+    assert res.tenant("primary").mean_step \
+        > solo.tenant("primary").mean_step
+
+
+# ---------------------------------------------------------------------------
+# pluggable registries
+# ---------------------------------------------------------------------------
+
+
+def test_third_party_fairness_registers_without_engine_changes():
+    class HalfFairness(FairnessPolicy):
+        """Every contended link collapses to half bandwidth."""
+        name = "half_test"
+
+        def link_share(self, d_i, own_bytes, own_weight, own_priority,
+                       flows, owners):
+            return 0.5
+
+    try:
+        FAIRNESS.register("half_test", HalfFairness)
+        scn = _static_scenario(
+            jobs=(JobSpec("a", 12, nodes=tuple(range(12)), grad_bytes=4e9),
+                  JobSpec("b", 12, nodes=tuple(range(12, 24)),
+                          grad_bytes=4e9)),
+            policies=Policies(fairness="half_test"))
+        res = scn.run()
+        assert len(res.series("a")) == 55
+    finally:
+        FAIRNESS._entries.pop("half_test", None)
+    with pytest.raises(ValueError, match="already registered"):
+        SCHEDULERS.register("fifo", object())
+
+
+def test_third_party_placement_reaches_scenarios():
+    try:
+        PLACEMENTS.register(
+            "reversed_test",
+            lambda topo, n, free, *, seed=0: list(free)[-n:])
+        scn = _static_scenario(
+            jobs=(JobSpec("a", 8, placement="reversed_test"),))
+        res = scn.run()
+        assert res.tenant("a").nodes == list(range(56, 64))
+    finally:
+        PLACEMENTS._entries.pop("reversed_test", None)
+
+
+# ---------------------------------------------------------------------------
+# legacy entry points: shims with a deprecation pointer
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_shim_routes_through_scenario_bit_identically():
+    cfg = dataclasses.replace(SimConfig.fast(16), iters=60, warmup=10)
+    with pytest.warns(DeprecationWarning, match="Scenario"):
+        legacy = simulate(cfg)
+    scenario = scenario_from(cfg).run()
+    assert legacy.step_times == scenario.series("job0")
+
+
+def test_direct_engine_construction_warns_but_works():
+    with pytest.warns(DeprecationWarning, match="Scenario"):
+        res = FabricEngine(fat_tree(16), [JobSpec("a", 4)],
+                           base_seed=0).run(20, warmup=2)
+    assert len(res.jobs[0].step_times) == 18
+    with pytest.warns(DeprecationWarning, match="Scenario"):
+        res = LifecycleEngine(fat_tree(16),
+                              [Arrival(0.0, JobSpec("a", 4))],
+                              base_seed=0).run(4.0)
+    assert len(res.tenant("a").step_times) > 0
+
+
+def test_scenario_run_does_not_warn():
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        _static_scenario(jobs=(JobSpec("a", 4),),
+                         topology=TopologySpec(n_nodes=16),
+                         iters=20, warmup=2).run()
