@@ -1,27 +1,44 @@
 # Local equivalents of the CI jobs (see .github/workflows/ci.yml).
+# CI runs these targets rather than raw pytest lines, so the marker
+# selection below is the single source of truth for which tests land in
+# which job: pytest.ini's addopts excludes $(SLOW_MARKER) from the default
+# tier-1 run, and `test-slow` selects exactly that marker. `test-all` is
+# the explicit union of the two jobs — NOT a `-m ""` override — so a test
+# carrying the slow marker can never be silently skipped by both.
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-slow test-all bench-smoke bench scenarios
+SLOW_MARKER := slow
 
-test:            ## default tier-1 (slow marker excluded via pytest.ini)
+.PHONY: test test-slow test-all bench-smoke bench scenarios baselines \
+	baselines-check
+
+test:            ## default tier-1 ($(SLOW_MARKER) excluded via pytest.ini)
 	$(PY) -m pytest -x -q
 
-test-slow:       ## full-fidelity runs only
-	$(PY) -m pytest -q -m slow
+test-slow:       ## full-fidelity runs only (the CI slow job)
+	$(PY) -m pytest -q -m "$(SLOW_MARKER)"
 
-test-all:        ## everything
-	$(PY) -m pytest -q -m ""
+test-all:        ## everything: tier-1 plus the slow suite, explicitly
+	$(PY) -m pytest -x -q
+	$(PY) -m pytest -q -m "$(SLOW_MARKER)"
 
 scenarios:       ## run every named scenario in the library end to end
 	$(PY) -m benchmarks.run --only scenarios
 
-bench-smoke:     ## the CI benchmark smoke sections
+baselines:       ## (re)record tests/baselines/ fingerprints — review the diff!
+	$(PY) tests/test_baselines.py
+
+baselines-check: ## fail on any library-scenario fingerprint drift (CI job)
+	$(PY) tests/test_baselines.py --check
+
+bench-smoke:     ## the CI benchmark smoke sections (ARTIFACTS= to persist)
 	$(PY) -m benchmarks.run --only table1
 	$(PY) -m benchmarks.run --only multitenant
 	$(PY) -m benchmarks.run --only lifecycle
 	$(PY) -m benchmarks.run --only wfq
-	$(PY) -m benchmarks.run --only scenarios
+	$(PY) -m benchmarks.run --only batching $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
+	$(PY) -m benchmarks.run --only scenarios $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 	$(PY) -m benchmarks.run --only pacing
 
 bench:           ## all benchmark sections

@@ -1,0 +1,82 @@
+"""Continuous-batching sweep: the canonical p99-vs-throughput tradeoff.
+
+One open-loop fleet is driven at an arrival rate single-stream serving
+cannot sustain (the ``continuous_batching_relief`` library scenario), and
+the service discipline is swept over ``batching="none"`` and
+``batching="continuous"`` at ``max_batch`` 1/2/4/8/16. The table shows the
+classic serving curve: batch capacity buys throughput (requests complete
+instead of queueing without bound) and collapses p99 — continuous batching
+strictly dominates the single stream at high arrival rates, which is the
+noisy-neighbor traffic mix the paper's contention analysis needs modeled
+(`PRISM <https://arxiv.org/abs/2510.15596>`_-style runtime-communication
+fidelity).
+
+The same sweep is the CI perf artifact: ``--artifacts DIR`` (see
+``benchmarks.run``) writes the full grid as ``batching_sweep.csv`` via
+:meth:`repro.fabric.scenario.ScenarioGrid.to_csv`.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Tuple
+
+from repro.fabric.scenario import ScenarioGrid, library
+
+AXES = {
+    "events.1.spec.batching": ["none", "continuous"],
+    "events.1.spec.max_batch": [1, 2, 4, 8, 16],
+}
+
+_GRID: Optional[ScenarioGrid] = None
+_RESULTS = None
+
+
+def _grid() -> Tuple[ScenarioGrid, list]:
+    """Build and run the sweep once per process (rows + artifacts share
+    the results)."""
+    global _GRID, _RESULTS
+    if _RESULTS is None:
+        _GRID = ScenarioGrid(library.build("continuous_batching_relief"),
+                             AXES)
+        _RESULTS = _GRID.run()
+    return _GRID, _RESULTS
+
+
+def rows() -> List[str]:
+    lines = ["batching,max_batch,p99_ms,mean_ms,requests_done,"
+             "slo_attainment_pct,tokens_per_s,train_step_ms"]
+    seen_none = False
+    for params, res in _grid()[1]:
+        mode = params["events.1.spec.batching"]
+        mb = params["events.1.spec.max_batch"]
+        if mode == "none":
+            # single stream ignores max_batch: one row, not five
+            if seen_none:
+                continue
+            seen_none = True
+            mb = "-"
+        serve = res.tenant("serve")
+        train = res.tenant("train")
+        lines.append(
+            f"{mode},{mb},{serve.latency_quantile(0.99) * 1e3:.0f},"
+            f"{serve.mean_latency * 1e3:.0f},{serve.requests_done},"
+            f"{serve.slo_attainment * 100:.1f},{serve.tokens_per_s:.0f},"
+            f"{train.mean_step * 1e3:.1f}")
+    return lines
+
+
+def write_artifacts(outdir: str) -> List[str]:
+    """Persist the sweep as CSV (the CI perf-trajectory artifact)."""
+    grid, results = _grid()
+    path = os.path.join(outdir, "batching_sweep.csv")
+    grid.to_csv(path, results=results)
+    return [path]
+
+
+def main() -> None:
+    for ln in rows():
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

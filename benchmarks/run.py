@@ -8,6 +8,8 @@
                 max-min vs offered-bytes fairness (lifecycle engine)
   wfq         — weighted fair sharing: inference-weight sweep (p99 / SLO
                 attainment vs training throughput) + scheduler policies
+  batching    — continuous-batching sweep: batch size vs p99/throughput
+                (single stream vs batch-join fleets at high arrival rate)
   scenarios   — scenario-library smoke: every named scenario end to end
   pacing      — vectorized PacingBank vs scalar controllers (before/after)
   speedup     — compiled-schedule engine vs seed per-call loop wall-clock
@@ -16,10 +18,14 @@
 
 Run everything: ``PYTHONPATH=src python -m benchmarks.run``
 One section:    ``PYTHONPATH=src python -m benchmarks.run --only table1``
+CI artifacts:   ``... --only batching --artifacts bench-artifacts`` writes
+the section's CSV/JSON files (ScenarioGrid sweeps, the seeded scenario
+library) into the directory for ``actions/upload-artifact`` to keep.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -28,11 +34,14 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     choices=["table1", "scaling", "taxonomy", "multitenant",
-                             "lifecycle", "wfq", "scenarios", "pacing",
-                             "speedup", "kernels", "roofline"])
+                             "lifecycle", "wfq", "batching", "scenarios",
+                             "pacing", "speedup", "kernels", "roofline"])
+    ap.add_argument("--artifacts", default=None, metavar="DIR",
+                    help="write sections' CSV/JSON artifacts into DIR")
     args = ap.parse_args()
 
     sections = []
+    artifact_writers = []
     if args.only in (None, "table1"):
         from benchmarks import table1_coordination
         sections.append(("table1_coordination (paper Table 1)",
@@ -58,10 +67,16 @@ def main() -> None:
         from benchmarks import wfq_sweep
         sections.append(("wfq_sweep (weighted sharing + scheduler "
                          "policies)", wfq_sweep.rows))
+    if args.only in (None, "batching"):
+        from benchmarks import batching
+        sections.append(("batching (continuous batching vs single stream)",
+                         batching.rows))
+        artifact_writers.append(batching.write_artifacts)
     if args.only in (None, "scenarios"):
         from benchmarks import scenarios
         sections.append(("scenarios (named scenario library smoke)",
                          scenarios.rows))
+        artifact_writers.append(scenarios.write_artifacts)
     if args.only in (None, "pacing"):
         from benchmarks import pacing_bench
         sections.append(("pacing (vectorized bank vs scalar controllers)",
@@ -91,6 +106,11 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"--- FAILED: {type(e).__name__}: {e}")
+    if args.artifacts and not failures:
+        os.makedirs(args.artifacts, exist_ok=True)
+        for write in artifact_writers:
+            for path in write(args.artifacts):
+                print(f"wrote {path}")
     if failures:
         sys.exit(1)
 

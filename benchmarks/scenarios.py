@@ -4,16 +4,30 @@ One row per :mod:`repro.fabric.scenario.library` entry — backend, tenant
 count, wall-clock, and the headline per-tenant metric — so CI catches a
 library scenario that stopped validating, stopped running, or lost its
 failure-mode signal. All entries run at test scale (seconds each).
+
+``--artifacts DIR`` (see ``benchmarks.run``) additionally persists the
+smoke table as ``scenarios.csv`` and every library entry's seeded
+declarative form as ``BENCH_scenarios.json`` — the exact inputs a later
+run (or an external what-if study) needs to reproduce the numbers.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import List
 
 from repro.fabric.scenario import Scenario, library
 
 
+_ROWS: List[str] = []
+
+
 def rows() -> List[str]:
+    # memoized: the printed table and write_artifacts() share one run of
+    # the library (wall_ms in the CSV is the run that was printed)
+    if _ROWS:
+        return _ROWS
     lines = ["scenario,backend,tenants,wall_ms,headline"]
     for name in library.names():
         scn = library.build(name)
@@ -34,7 +48,23 @@ def rows() -> List[str]:
                              f" cv={d['cv']:.3f}")
         lines.append(f"{name},{res.kind},{len(diags)},{wall_ms:.0f},"
                      + " | ".join(parts))
-    return lines
+    _ROWS.extend(lines)
+    return _ROWS
+
+
+def write_artifacts(outdir: str) -> List[str]:
+    """Persist the smoke table (CSV) and the seeded scenario library
+    (JSON dict forms, base_seed included) as CI artifacts."""
+    csv_path = os.path.join(outdir, "scenarios.csv")
+    with open(csv_path, "w") as f:
+        f.write("\n".join(rows()) + "\n")
+    json_path = os.path.join(outdir, "BENCH_scenarios.json")
+    with open(json_path, "w") as f:
+        json.dump({name: library.build(name).to_dict()
+                   for name in library.names()}, f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+    return [csv_path, json_path]
 
 
 def main() -> None:

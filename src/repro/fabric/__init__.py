@@ -15,7 +15,8 @@ from repro.fabric.congestion import (CongestionConfig,             # noqa: F401
                                      maxmin_shares,
                                      strict_priority_shares, wfq_shares)
 from repro.fabric.policies import (FAIRNESS, PLACEMENTS,           # noqa: F401
-                                   FairnessPolicy, PolicyRegistry)
+                                   ROUTERS, FairnessPolicy,
+                                   PolicyRegistry, RouterPolicy)
 from repro.fabric.engine import (FAIRNESS_MODES, EngineResult,     # noqa: F401
                                  FabricEngine, JobResult, JobSpec)
 from repro.fabric.events import (Arrival, Departure,               # noqa: F401

@@ -219,6 +219,23 @@ def drr_shares(demands: Sequence[float],
     return alloc
 
 
+def batch_bytes(base_bytes: float, occupancy: int) -> float:
+    """Batch-occupancy-weighted collective payload for continuous-batching
+    inference fleets.
+
+    A serving replica's per-token collective moves activations whose batch
+    dimension is the *current* batch occupancy, so the offered bytes (and
+    therefore both the collective's duration and the demand it presents to
+    co-tenant flows on shared links) scale linearly with how many requests
+    share the step — not with the configured maximum. ``occupancy * base``
+    is computed as ``float(int) * float`` so occupancy 1 is bit-exactly the
+    single-request payload (the ``batching="none"`` compatibility anchor).
+    """
+    if occupancy < 0:
+        raise ValueError(f"occupancy must be >= 0, got {occupancy!r}")
+    return float(occupancy) * base_bytes
+
+
 def offered_share(own_bytes: float, d_i: float,
                   flows: Sequence[Tuple[float, float]]) -> float:
     """Offered-bytes proportional share of one link for a collective of

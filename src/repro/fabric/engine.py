@@ -134,6 +134,13 @@ class JobSpec:
                 f"job {self.name!r}: ckpt_every must be >= 1 steps, got "
                 f"{self.ckpt_every!r}")
 
+    @property
+    def total_ranks(self) -> int:
+        """Nodes the tenant occupies — the capacity/placement unit shared
+        with :class:`~repro.fabric.workloads.InferenceSpec`, whose fleets
+        need ``n_ranks`` *per replica*."""
+        return self.n_ranks
+
 
 def _materialize_records(trace, n: int) -> List[List[IterationRecord]]:
     """Expand the engine's compact per-iteration tuples into the standard

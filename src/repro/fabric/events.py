@@ -27,6 +27,15 @@ oversubscribed links. :class:`LifecycleEngine` drives that dynamics from a
   * :class:`Departure` events (or ``JobSpec.iters``) retire tenants and
     return their nodes.
 
+Inference fleets are first-class tenants: a multi-replica
+:class:`~repro.fabric.workloads.InferenceSpec` consumes ``total_ranks``
+(= ``n_ranks * replicas``) nodes from the pool, its placement policy sees
+the spec itself (``placement="slo_aware"`` packs latency-bound replica
+chunks whole into best-fit leaves), and its per-replica virtual-clock
+queues surface *batch-join* events — requests joining a running
+continuous batch — into the engine's timeline log after each resolution
+(:meth:`~repro.fabric.workloads.Tenant.drain_log`).
+
 Between events, the engine resolves tenants' collectives in global
 window-start order. Each tenant owns an independent background-congestion
 AR(1) stream (seeded per tenant), so *modeled* co-tenants interact only
@@ -236,7 +245,9 @@ class LifecycleEngine:
         if isinstance(entry, Tenant):
             return self._try_resume(entry)
         spec = entry
-        n = spec.n_ranks
+        # the capacity/placement unit is the tenant's *total* node count:
+        # n_ranks for a training job, n_ranks * replicas for a fleet
+        n = spec.total_ranks
         blocked_free = set(self._taken) | self._dead
         if spec.nodes is not None:
             nodes = list(spec.nodes)
@@ -260,7 +271,8 @@ class LifecycleEngine:
             try:
                 nodes = place(spec.placement, self.topo, n,
                               taken=blocked_free,
-                              seed=self.base_seed + 101 * self._tenant_seq)
+                              seed=self.base_seed + 101 * self._tenant_seq,
+                              spec=spec)
             except ValueError:
                 return f"{spec.name}: no capacity for {n} ranks"
         seed = spec.seed if spec.seed is not None \
@@ -312,7 +324,7 @@ class LifecycleEngine:
                 nodes = place(spec.placement, self.topo, n,
                               taken=set(self._taken) | self._dead,
                               seed=self.base_seed + 101 * self._tenant_seq
-                              + tenant.generation)
+                              + tenant.generation, spec=spec)
             except ValueError:
                 return None
         for nd in nodes:
@@ -358,7 +370,7 @@ class LifecycleEngine:
         resume = isinstance(entry, Tenant)
         spec = entry.spec if resume else entry
         prio = entry_priority(entry)
-        need = len(entry.nodes) if resume else spec.n_ranks
+        need = len(entry.nodes) if resume else spec.total_ranks
         victims = [t for t in self._active
                    if t.kind == "training" and t.priority < prio
                    and not self._inside_thrash_window(t)]
@@ -603,6 +615,8 @@ class LifecycleEngine:
         tenant.pending_schedule.accumulate_bytes(eff, self.link_bytes)
         self._now = max(self._now, finish)
         tenant.resolved(finish, dur)
+        for kind, detail in tenant.drain_log():
+            self._record(kind, detail)
         if tenant.detector is not None:
             for nd in tenant.nodes:
                 if nd not in self._dead:

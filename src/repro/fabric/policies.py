@@ -29,7 +29,13 @@ third-party code alike. Registering a new policy is::
   * **schedulers** — ``fifo`` / ``backfill`` / ``preempt``
     (:mod:`repro.fabric.scheduling` registers them).
   * **placements** — ``compact`` / ``scattered`` / ``striped`` /
-    ``random`` (:mod:`repro.fabric.placement` registers them).
+    ``random`` / ``slo_aware`` (:mod:`repro.fabric.placement` registers
+    them).
+  * **routers** — how a multi-replica inference fleet spreads arriving
+    requests over its replicas: ``round_robin`` (stateful cycle) and
+    ``jsq`` (join-shortest-queue over outstanding work). Registered here
+    directly — routers are pure queue-choice functions with no engine
+    dependencies.
 
 Every share function a fairness entry dispatches to lives in
 :mod:`repro.fabric.congestion`; the entries here are thin adapters, so the
@@ -38,7 +44,8 @@ strict-priority == max-min) hold through the registry.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple, Union)
 
 from repro.fabric.congestion import (drr_share, maxmin_share, offered_share,
                                      strict_priority_share, wfq_share)
@@ -101,6 +108,62 @@ class PolicyRegistry:
 FAIRNESS = PolicyRegistry("fairness mode")
 SCHEDULERS = PolicyRegistry("scheduler")
 PLACEMENTS = PolicyRegistry("placement policy")
+ROUTERS = PolicyRegistry("router")
+
+
+# ---------------------------------------------------------------------------
+# router entries (multi-replica inference fleets)
+# ---------------------------------------------------------------------------
+
+
+class RouterPolicy:
+    """How an inference fleet assigns an arriving request to one of its
+    replicas. ``pick`` receives the per-replica queue depth (waiting +
+    in-batch requests, i.e. all outstanding work) at routing time and
+    returns the chosen replica index. Routers may be stateful
+    (round-robin's cursor), so fleets build a fresh instance per tenant
+    via :func:`resolve_router`."""
+
+    name: str = ""
+
+    def pick(self, depths: Sequence[int]) -> int:
+        raise NotImplementedError
+
+
+@ROUTERS.register("round_robin")
+class RoundRobinRouter(RouterPolicy):
+    """Cycle over replicas regardless of load — the blind baseline."""
+
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._cursor = 0
+
+    def pick(self, depths: Sequence[int]) -> int:
+        i = self._cursor % len(depths)
+        self._cursor += 1
+        return i
+
+
+@ROUTERS.register("jsq")
+class JoinShortestQueueRouter(RouterPolicy):
+    """Join-shortest-queue: the replica with the least outstanding work,
+    lowest index among ties (deterministic). Never routes to a strictly
+    longer queue — the property ``tests/test_batching.py`` pins."""
+
+    name = "jsq"
+
+    def pick(self, depths: Sequence[int]) -> int:
+        return min(range(len(depths)), key=lambda i: (depths[i], i))
+
+
+def resolve_router(spec: Union[str, RouterPolicy]) -> RouterPolicy:
+    """Fleet-facing resolver: a registered name (fresh instance — routers
+    carry state) or an already-built policy instance."""
+    if isinstance(spec, RouterPolicy):
+        return spec
+    policy = ROUTERS.get(spec)
+    return policy() if isinstance(policy, type) else policy
 
 
 # ---------------------------------------------------------------------------

@@ -62,7 +62,7 @@ from repro.fabric.engine import EngineResult, FabricEngine, JobSpec
 from repro.fabric.events import (Arrival, Departure, Event, LifecycleEngine,
                                  LifecycleResult, NodeFailure)
 from repro.fabric.placement import spanning_groups
-from repro.fabric.policies import FAIRNESS, PLACEMENTS, SCHEDULERS
+from repro.fabric.policies import FAIRNESS, PLACEMENTS, ROUTERS, SCHEDULERS
 from repro.fabric.scheduling import make_scheduler
 from repro.fabric.stragglers import StragglerConfig
 from repro.fabric.topology import Topology, fat_tree, tpu_pod
@@ -403,24 +403,31 @@ class Scenario:
                 raise ScenarioError(
                     f"tenant {spec.name!r}: n_ranks must be >= 1, got "
                     f"{spec.n_ranks}")
-            if spec.n_ranks > cap:
+            # capacity is consumed in total nodes: n_ranks per replica
+            need = spec.total_ranks
+            if need > cap:
                 raise ScenarioError(
-                    f"tenant {spec.name!r} wants {spec.n_ranks} ranks on "
+                    f"tenant {spec.name!r} wants {need} ranks on "
                     f"a {cap}-rank topology")
-            total += spec.n_ranks
+            total += need
             if spec.algo not in ALGOS:
                 raise ScenarioError(
                     f"tenant {spec.name!r}: unknown algo {spec.algo!r}; "
                     f"one of {ALGOS}")
+            if isinstance(spec, InferenceSpec) \
+                    and spec.router not in ROUTERS:
+                raise ScenarioError(
+                    f"tenant {spec.name!r}: unknown router "
+                    f"{spec.router!r}; one of {ROUTERS.names()}")
             if spec.nodes is not None:
                 bad = [nd for nd in spec.nodes if not 0 <= nd < cap]
                 if bad:
                     raise ScenarioError(
                         f"tenant {spec.name!r}: pinned nodes {bad} outside "
                         f"the {cap}-rank topology")
-                if len(set(spec.nodes)) != spec.n_ranks:
+                if len(set(spec.nodes)) != need:
                     raise ScenarioError(
-                        f"tenant {spec.name!r}: needs {spec.n_ranks} "
+                        f"tenant {spec.name!r}: needs {need} "
                         f"distinct pinned nodes, got {list(spec.nodes)}")
                 if static:
                     overlap = pinned.intersection(spec.nodes)
@@ -604,10 +611,14 @@ class Result:
                 "shared_bytes_frac": shared / total if total > 0 else 0.0,
             }
             if d["kind"] == "inference":
+                spans = t.replica_spans
                 d.update(requests=t.requests_done,
                          mean_latency_s=t.mean_latency,
                          p99_latency_s=t.latency_quantile(0.99),
-                         slo_attainment=t.slo_attainment)
+                         slo_attainment=t.slo_attainment,
+                         batching=t.spec.batching,
+                         replicas=len(spans),
+                         max_replica_span=max(spans) if spans else 0)
             else:
                 d.update(steps=len(t.step_times),
                          mean_step_s=t.mean_step, cv=t.cv,
@@ -726,3 +737,39 @@ class ScenarioGrid:
 
     def run(self) -> List[Tuple[Dict[str, Any], Result]]:
         return [(params, scn.run()) for params, scn in self._variants]
+
+    # columns to_csv emits per (variant, tenant) row, pulled from
+    # Result.diagnostics(); missing keys (e.g. inference metrics on a
+    # training tenant) are left empty
+    CSV_METRICS = ("kind", "algo", "spanning_groups", "shared_bytes_frac",
+                   "steps", "mean_step_s", "cv", "throughput", "requests",
+                   "mean_latency_s", "p99_latency_s", "slo_attainment",
+                   "batching", "replicas", "max_replica_span")
+
+    def to_csv(self, path: Optional[str] = None,
+               results: Optional[List[Tuple[Dict[str, Any], Result]]] = None
+               ) -> str:
+        """Run the grid (or reuse ``results`` from a prior :meth:`run`)
+        and flatten it into CSV: one row per (variant, tenant), the sweep
+        axes as leading columns — the benchmark/CI artifact format, so a
+        sweep's whole outcome diffs as a table instead of a transcript.
+        Writes to ``path`` when given; always returns the CSV text."""
+        import csv as _csv
+        import io
+        if results is None:
+            results = self.run()
+        axes = list(self.axes)
+        buf = io.StringIO()
+        w = _csv.writer(buf, lineterminator="\n")
+        w.writerow(axes + ["scenario", "tenant"] + list(self.CSV_METRICS))
+        for params, result in results:
+            diags = result.diagnostics()
+            for tenant, d in diags.items():
+                w.writerow([params[a] for a in axes]
+                           + [result.scenario.name, tenant]
+                           + [d.get(m, "") for m in self.CSV_METRICS])
+        text = buf.getvalue()
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text

@@ -27,7 +27,12 @@ The four core entries map onto the paper's taxonomy:
 Two more exercise the scheduling/recovery machinery end to end:
 ``priority_preemption`` (preempt scheduler with an anti-thrash budget and
 checkpoint-aware resume) and ``failure_recovery`` (heartbeat detection,
-elastic shrink, re-place).
+elastic shrink, re-place). Two serve the continuous-batching fleet model:
+``continuous_batching_relief`` (an arrival rate single-stream serving
+cannot keep up with, absorbed by batch-joins over a JSQ-routed two-replica
+fleet) and ``slo_placement`` (the noisy-neighbor mix with the fleet placed
+by ``slo_aware`` and routed by ``jsq`` — sweep the placement/router back
+to ``compact``/``round_robin`` to reproduce the SLO-attainment gap).
 
 All entries run at test scale (a few seconds each) — they are smoke
 surfaces and study seeds, not paper-horizon reproductions.
@@ -153,6 +158,56 @@ def failure_recovery() -> Scenario:
         ),
         policies=Policies(replan_delay_s=None),
         horizon=20.0)
+
+
+@LIBRARY.register("continuous_batching_relief")
+def continuous_batching_relief() -> Scenario:
+    """An arrival rate far above the single-stream service rate: with
+    ``batching="none"`` the open-loop queue grows without bound and p99
+    explodes; continuous batching (``max_batch=8`` over a JSQ-routed
+    two-replica fleet) amortizes the per-token collectives over the batch
+    and absorbs the same traffic inside the SLO. Sweep
+    ``events.1.spec.max_batch`` (or flip ``batching``) to reproduce the
+    p99-vs-throughput tradeoff curve (``benchmarks.run --only
+    batching``)."""
+    return Scenario(
+        name="continuous_batching_relief",
+        topology=_FABRIC64,
+        events=(
+            Arrival(0.0, JobSpec("train", 16, placement="compact",
+                                 grad_bytes=2e9)),
+            Arrival(0.0, InferenceSpec("serve", 4, replicas=2,
+                                       batching="continuous", max_batch=8,
+                                       router="jsq", rate_rps=40.0,
+                                       decode_tokens=8, slo_p99_s=0.6,
+                                       placement="slo_aware")),
+        ),
+        horizon=10.0)
+
+
+@LIBRARY.register("slo_placement")
+def slo_placement() -> Scenario:
+    """The noisy-neighbor mix with SLO-aware placement: a heavy trainer
+    packs compactly (filling leaf 0 and half of leaf 1), and the
+    latency-bound fleet's replicas are each best-fit into a whole leaf
+    (span 1, away from the trainer's loaded up-link) and JSQ-routed.
+    Sweeping ``events.1.spec.placement`` -> ``compact`` and
+    ``events.1.spec.router`` -> ``round_robin`` straddles one replica
+    across the trainer's leaf boundary and load-blinds the router — the
+    measurable ``slo_attainment`` drop the batching tests pin."""
+    return Scenario(
+        name="slo_placement",
+        topology=_FABRIC64,
+        events=(
+            Arrival(0.0, JobSpec("train", 12, placement="compact",
+                                 grad_bytes=6e9)),
+            Arrival(1.0, InferenceSpec("serve", 6, replicas=2,
+                                       batching="continuous", max_batch=4,
+                                       router="jsq", rate_rps=20.0,
+                                       decode_tokens=8, slo_p99_s=0.15,
+                                       placement="slo_aware")),
+        ),
+        horizon=12.0)
 
 
 def names() -> List[str]:

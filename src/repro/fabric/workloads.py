@@ -19,7 +19,18 @@ over that mix:
     ``decode_tokens`` *decode* iterations (compute + one small collective
     each). Decode fleets are bursts of frequent small collectives — exactly
     the co-tenant traffic mix the paper's contention analysis worries
-    about.
+    about. A fleet is ``replicas`` independent serving groups of
+    ``n_ranks`` each; a fleet-level *router* (``round_robin`` / ``jsq``
+    via :data:`repro.fabric.policies.ROUTERS`) assigns each arriving
+    request to one replica's queue. ``batching="none"`` (default) serves
+    each replica as a FIFO single stream — bit-identical to the pre-fleet
+    path, the compatibility anchor the golden fixtures pin —; with
+    ``batching="continuous"`` requests *join a running batch mid-flight*:
+    joiners are prefetched into the batch by a prefill collective
+    (batch-join events in the engine log) and every per-token decode
+    collective scales with the **current batch occupancy**
+    (:func:`repro.fabric.congestion.batch_bytes`), up to ``max_batch``,
+    instead of one prefill+decode stream per request.
 
 Every tenant exposes one *pending collective* (window start, skew, compiled
 schedule, shared-link demand) that the engine resolves against congestion
@@ -40,16 +51,29 @@ import numpy as np
 from repro.core.pacing import PacingBank
 from repro.fabric.collectives import (CompiledSchedule, compile_schedule,
                                       select_algo)
+from repro.fabric.congestion import batch_bytes
 from repro.fabric.engine import JobSpec
 from repro.fabric.placement import spanning_groups
+from repro.fabric.policies import resolve_router
 from repro.fabric.stragglers import ComputeModel
 from repro.fabric.topology import Topology
 from repro.ft.failure import FailureDetector, HeartbeatConfig, RecoveryLog
 
 
+BATCHING_MODES = ("none", "continuous")
+
+
 @dataclasses.dataclass(frozen=True)
 class InferenceSpec:
-    """One open-loop serving fleet sharing the fabric with training jobs."""
+    """One open-loop serving fleet sharing the fabric with training jobs.
+
+    ``n_ranks`` is the size of *one* serving replica; the fleet occupies
+    ``n_ranks * replicas`` nodes (``total_ranks``) and spreads arriving
+    requests over its replicas with the named ``router``. ``batching``
+    selects the per-replica service discipline: ``"none"`` (default) is
+    the FIFO single stream the golden fixtures pin bit-exactly,
+    ``"continuous"`` lets up to ``max_batch`` requests share the decode
+    loop, joining mid-flight."""
     name: str
     n_ranks: int
     rate_rps: float = 10.0            # Poisson request arrival rate
@@ -68,18 +92,48 @@ class InferenceSpec:
     weight: float = 1.0
     priority: int = 0
     # p99 latency target: when set, the tenant tracks per-request SLO
-    # attainment (slo_ok / slo_attainment / attainment_series).
+    # attainment (slo_ok / slo_attainment / attainment_series) — and
+    # marks the fleet latency-bound for placement="slo_aware".
     slo_p99_s: Optional[float] = None
     # Model-state footprint for the checkpoint-restore cost model; None
     # estimates it from the prefill payload (activation-sized, the right
     # order for the weight shards a replica must reload).
     param_bytes: Optional[float] = None
+    # Continuous-batching fleet shape: service discipline, batch capacity
+    # per replica, replica count, and the fleet-level request router
+    # (repro.fabric.policies.ROUTERS). Defaults reproduce the pre-fleet
+    # single-stream tenant bit-exactly.
+    batching: str = "none"
+    max_batch: int = 8
+    replicas: int = 1
+    router: str = "round_robin"
 
     def __post_init__(self):
         if not self.weight > 0.0:
             raise ValueError(
                 f"fleet {self.name!r}: weight must be positive, got "
                 f"{self.weight!r}")
+        if self.batching not in BATCHING_MODES:
+            raise ValueError(
+                f"fleet {self.name!r}: unknown batching mode "
+                f"{self.batching!r}; one of {BATCHING_MODES}")
+        if self.max_batch < 1:
+            raise ValueError(
+                f"fleet {self.name!r}: max_batch must be >= 1, got "
+                f"{self.max_batch!r}")
+        if self.replicas < 1:
+            raise ValueError(
+                f"fleet {self.name!r}: replicas must be >= 1, got "
+                f"{self.replicas!r}")
+        if self.decode_tokens < 0:
+            raise ValueError(
+                f"fleet {self.name!r}: decode_tokens must be >= 0, got "
+                f"{self.decode_tokens!r}")
+
+    @property
+    def total_ranks(self) -> int:
+        """Nodes the whole fleet occupies (``n_ranks`` per replica)."""
+        return self.n_ranks * self.replicas
 
 
 def _compile(topo: Topology, nodes: Sequence[int], nbytes: float,
@@ -137,6 +191,9 @@ class Tenant:
         self.pending_schedule: Optional[CompiledSchedule] = None
         self.pending_demand: Dict[str, float] = {}
         self.pending_floor: float = 0.0
+        # tenant-internal events (batch joins, ...) the owning engine
+        # drains into its timeline log after each resolution
+        self._pending_log: List[Tuple[str, str]] = []
 
     # -- engine hooks ------------------------------------------------------
     def place(self, topo: Topology, nodes: Sequence[int], t: float,
@@ -169,6 +226,12 @@ class Tenant:
 
     def wants_departure(self) -> bool:
         return False
+
+    def drain_log(self) -> List[Tuple[str, str]]:
+        """Tenant-internal ``(kind, detail)`` events since the last drain
+        (the engine timestamps them into its timeline log)."""
+        out, self._pending_log = self._pending_log, []
+        return out
 
     @property
     def param_bytes(self) -> float:
@@ -300,6 +363,167 @@ class TrainingTenant(Tenant):
             if m > 0 else 0.0
 
 
+class _Request:
+    """One serving request: arrival time, a stable sequence number (tie
+    break for redistribution sorts), and — once in a batch — the decode
+    tokens it still owes."""
+
+    __slots__ = ("arrival", "seq", "tokens_left")
+
+    def __init__(self, arrival: float, seq: int):
+        self.arrival = arrival
+        self.seq = seq
+        self.tokens_left = 0
+
+
+class _Replica(object):
+    """One serving replica: its own node subset, compiled (and
+    occupancy-scaled) schedules, and virtual-clock queue state.
+
+    The replica alternates two collective kinds on its private clock
+    (``free_at`` = finish of its last collective):
+
+      * **prefill / batch-join** — admit the FIFO-head waiters whose
+        arrival precedes the join instant, up to the batch capacity; the
+        joiners' prefill payload scales with how many join at once;
+      * **decode** — one token for every request in the batch; payload
+        scales with the current occupancy.
+
+    ``batching="none"`` is the degenerate capacity-1 instance of the same
+    machinery: at most one request in the "batch", so joins only happen on
+    an empty server and every decode runs at occupancy 1 — which makes the
+    arithmetic operation-for-operation identical to the pre-fleet
+    single-stream tenant (held by the golden fixtures).
+    """
+
+    def __init__(self, fleet: "InferenceTenant", index: int,
+                 topo: Topology, nodes: Sequence[int], t: float):
+        spec = fleet.spec
+        self.fleet = fleet
+        self.index = index
+        self.nodes = list(nodes)
+        self.spanning = spanning_groups(topo, nodes)
+        self._topo = topo
+        w = spec.weight if fleet.weighted_fairness else 1.0
+        self.algo, prefill1 = _compile(
+            topo, nodes, spec.prefill_bytes, spec.algo, spec.group, w)
+        self.decode_algo, decode1 = _compile(
+            topo, nodes, spec.decode_bytes, spec.algo, spec.group, w)
+        # occupancy-scaled schedule caches; occupancy 1 is *exactly* the
+        # select_algo result above (the batching="none" bit-compat anchor),
+        # higher occupancies recompile the selected algo at the
+        # batch-weighted payload (repro.fabric.congestion.batch_bytes)
+        self._scheds: Dict[Tuple[str, int],
+                           Tuple[CompiledSchedule, Dict[str, float], float]]
+        self._scheds = {("prefill", 1): self._pack(topo, prefill1),
+                        ("decode", 1): self._pack(topo, decode1)}
+        self.wait: List[_Request] = []      # routed, not yet in the batch
+        self.batch: List[_Request] = []     # decoding (tokens_left > 0)
+        self._joining: List[_Request] = []  # joiners of a pending prefill
+        self.free_at = t
+        self._kind = ""                     # kind of the pending collective
+
+    @staticmethod
+    def _pack(topo: Topology, sched: CompiledSchedule
+              ) -> Tuple[CompiledSchedule, Dict[str, float], float]:
+        return (sched, _shared_demand(topo, sched),
+                max(sched.total_s(None), 1e-9))
+
+    def _sched(self, kind: str, occupancy: int
+               ) -> Tuple[CompiledSchedule, Dict[str, float], float]:
+        key = (kind, occupancy)
+        hit = self._scheds.get(key)
+        if hit is None:
+            spec = self.fleet.spec
+            base = spec.prefill_bytes if kind == "prefill" \
+                else spec.decode_bytes
+            algo = self.algo if kind == "prefill" else self.decode_algo
+            hit = self._pack(self._topo, compile_schedule(
+                self._topo, self.nodes, batch_bytes(base, occupancy),
+                algo=algo, group=spec.group))
+            self._scheds[key] = hit
+        return hit
+
+    def depth(self) -> int:
+        """Outstanding work: waiting + joining + in-batch requests (the
+        router's queue-length signal)."""
+        return len(self.wait) + len(self._joining) + len(self.batch)
+
+    def requests_held(self) -> List[_Request]:
+        """Every request currently owned by this replica (conservation /
+        redistribution)."""
+        return self._joining + self.batch + self.wait
+
+    def _join_ready(self) -> bool:
+        cap = self.fleet._capacity
+        return bool(self.wait) and len(self.batch) < cap and (
+            not self.batch or self.wait[0].arrival <= self.free_at)
+
+    def next_start(self) -> Optional[float]:
+        """Window start of this replica's next collective (pure), or None
+        when idle with an empty queue."""
+        spec = self.fleet.spec
+        if self._join_ready():
+            return max(self.free_at, self.wait[0].arrival) \
+                + spec.prefill_compute_s
+        if self.batch:
+            return self.free_at + spec.decode_compute_s
+        return None
+
+    def form_pending(self) -> Tuple[float, CompiledSchedule,
+                                    Dict[str, float], float]:
+        """Commit to the next collective: pop joiners / pick the decode
+        step, and return ``(start, schedule, shared_demand, floor)``."""
+        spec = self.fleet.spec
+        if self._join_ready():
+            base = max(self.free_at, self.wait[0].arrival)
+            room = self.fleet._capacity - len(self.batch)
+            j = 0
+            while j < len(self.wait) and j < room \
+                    and self.wait[j].arrival <= base:
+                j += 1
+            self._joining, self.wait = self.wait[:j], self.wait[j:]
+            self._kind = "prefill"
+            sched, demand, floor = self._sched("prefill", j)
+            return base + spec.prefill_compute_s, sched, demand, floor
+        self._kind = "decode"
+        sched, demand, floor = self._sched("decode", len(self.batch))
+        return self.free_at + spec.decode_compute_s, sched, demand, floor
+
+    def resolved(self, finish: float) -> None:
+        fleet = self.fleet
+        spec = fleet.spec
+        if self._kind == "prefill":
+            if spec.decode_tokens < 1:
+                # prefill-only requests complete at the prefill finish
+                # (the pre-fleet path's behavior for decode_tokens=0)
+                for req in self._joining:
+                    fleet._complete(req, finish)
+            else:
+                for req in self._joining:
+                    req.tokens_left = spec.decode_tokens
+                self.batch.extend(self._joining)
+                if fleet._capacity > 1:
+                    fleet._pending_log.append((
+                        "batch_join",
+                        f"{fleet.name}[r{self.index}]: "
+                        f"+{len(self._joining)} joined -> occupancy "
+                        f"{len(self.batch)}"))
+            self._joining = []
+        else:
+            fleet.decode_step_times.append(finish - self.free_at)
+            still: List[_Request] = []
+            for req in self.batch:
+                req.tokens_left -= 1
+                if req.tokens_left <= 0:
+                    fleet._complete(req, finish)
+                else:
+                    still.append(req)
+            self.batch = still
+        self.free_at = finish
+        self._kind = ""
+
+
 class InferenceTenant(Tenant):
     kind = "inference"
 
@@ -311,77 +535,131 @@ class InferenceTenant(Tenant):
         self.latencies: List[float] = []
         self.slo_ok: List[bool] = []  # per request, when slo_p99_s is set
         self.decode_step_times: List[float] = []
+        self.requests_arrived = 0
         self.requests_done = 0
         self.tokens_done = 0
+        # (chosen replica, per-replica depths) per routing decision — the
+        # JSQ no-worse-queue property test reads this
+        self.routing_log: List[Tuple[int, Tuple[int, ...]]] = []
+        self._capacity = spec.max_batch if spec.batching == "continuous" \
+            else 1
+        self._router = resolve_router(spec.router)
         self._rng = random.Random(seed)
+        self._replicas: List[_Replica] = []
+        self._pending_replica: Optional[_Replica] = None
         self._next_arrival: Optional[float] = None
-        self._req_arrival = 0.0       # arrival time of the in-flight request
-        self._phase = -1              # -1 idle, 0 prefill, 1..T decode
-        self._phase_finish = 0.0
-        self._busy_until = 0.0
-        self._retry = False           # re-run the in-flight request
+        self._seq = 0
+        self._last_finish = 0.0
 
+    # -- placement ---------------------------------------------------------
     def _bind(self, topo: Topology, t: float) -> None:
         spec = self.spec
-        w = spec.weight if self.weighted_fairness else 1.0
-        self.algo, self.prefill_sched = _compile(
-            topo, self.nodes, spec.prefill_bytes, spec.algo, spec.group, w)
-        _, self.decode_sched = _compile(
-            topo, self.nodes, spec.decode_bytes, spec.algo, spec.group, w)
-        self.prefill_demand = _shared_demand(topo, self.prefill_sched)
-        self.decode_demand = _shared_demand(topo, self.decode_sched)
-        self.prefill_floor = max(self.prefill_sched.total_s(None), 1e-9)
-        self.decode_floor = max(self.decode_sched.total_s(None), 1e-9)
+        # carry queue state across (re)placements: in-flight requests
+        # restart from prefill on the new placement (their activation/KV
+        # state died with it) keeping their arrival times — the recovery
+        # stall shows up in their latency —, waiting requests re-route
+        # over the new replica set; nothing is ever dropped (request
+        # conservation, held by tests/test_batching.py)
+        carried = sorted((req for rep in self._replicas
+                          for req in rep.requests_held()),
+                        key=lambda r: (r.arrival, r.seq))
+        old_free = [rep.free_at for rep in self._replicas]
+        if spec.replicas == 1:
+            chunks = [list(self.nodes)]
+        else:
+            k = spec.n_ranks
+            chunks = [self.nodes[i * k:(i + 1) * k]
+                      for i in range(len(self.nodes) // k)]
+        self._replicas = []
+        for i, chunk in enumerate(chunks):
+            rep = _Replica(self, i, topo, chunk, t)
+            if i < len(old_free):
+                rep.free_at = max(old_free[i], t)
+            self._replicas.append(rep)
+        self.algo = self._replicas[0].algo
         if self._next_arrival is None:
             self._next_arrival = t + self._rng.expovariate(spec.rate_rps)
-        self._busy_until = max(self._busy_until, t)
-        if self._phase >= 0:
-            # the in-flight request restarts from prefill on the new
-            # placement; its original arrival time is kept so the recovery
-            # stall shows up in its latency
-            self._retry = True
-        self._phase = -1
+        self._pending_replica = None
+        for req in carried:
+            req.tokens_left = 0
+            self._dispatch(req)
 
-    def prepare(self) -> None:
+    def shrink_plan(self, survivors: int) -> int:
+        if self.spec.replicas == 1:
+            # pre-fleet behavior: a single serving group recompiles its
+            # collectives at whatever width survived
+            return survivors
+        # multi-replica fleets shrink in whole replicas: a partial serving
+        # group cannot hold the sharded model
+        return (survivors // self.spec.n_ranks) * self.spec.n_ranks
+
+    # -- completion --------------------------------------------------------
+    def _complete(self, req: _Request, finish: float) -> None:
         spec = self.spec
-        if self._phase < 0:
-            if self._retry:
-                self._retry = False   # keep _req_arrival: same request
-            else:
-                # start the next request: open-loop — the arrival happened
-                # regardless of whether the fleet was free
-                self._req_arrival = self._next_arrival
-                self._next_arrival += self._rng.expovariate(spec.rate_rps)
-            svc_start = max(self._busy_until, self._req_arrival)
-            self._phase = 0
-            start = svc_start + spec.prefill_compute_s
-            sched, demand, floor = (self.prefill_sched, self.prefill_demand,
-                                    self.prefill_floor)
-        else:
-            start = self._phase_finish + spec.decode_compute_s
-            sched, demand, floor = (self.decode_sched, self.decode_demand,
-                                    self.decode_floor)
+        lat = finish - req.arrival
+        self.latencies.append(lat)
+        if spec.slo_p99_s is not None:
+            self.slo_ok.append(lat <= spec.slo_p99_s)
+        self.requests_done += 1
+        self.tokens_done += spec.decode_tokens
+
+    # -- routing -----------------------------------------------------------
+    def _dispatch(self, req: _Request) -> None:
+        depths = tuple(rep.depth() for rep in self._replicas)
+        i = self._router.pick(depths)
+        if not 0 <= i < len(self._replicas):
+            raise ValueError(
+                f"router {self.spec.router!r} picked replica {i} of "
+                f"{len(self._replicas)}")
+        self.routing_log.append((i, depths))
+        self._replicas[i].wait.append(req)
+
+    def _pump(self) -> None:
+        """Materialize (and route) every arrival that precedes the fleet's
+        next service event — open-loop: arrivals happen regardless of
+        whether any replica is free. Routing at arrival order keeps JSQ
+        causally sane: each decision sees the queue depths as of that
+        arrival."""
+        rate = self.spec.rate_rps
+        while True:
+            nxt = None
+            for rep in self._replicas:
+                s = rep.next_start()
+                if s is not None and (nxt is None or s < nxt):
+                    nxt = s
+            if nxt is not None and self._next_arrival > nxt:
+                return
+            req = _Request(self._next_arrival, self._seq)
+            self._seq += 1
+            self.requests_arrived += 1
+            self._next_arrival += self._rng.expovariate(rate)
+            self._dispatch(req)
+
+    # -- engine hooks ------------------------------------------------------
+    def prepare(self) -> None:
+        self._pump()
+        best: Optional[_Replica] = None
+        best_start = 0.0
+        for rep in self._replicas:
+            s = rep.next_start()
+            if s is not None and (best is None or s < best_start):
+                best, best_start = rep, s
+        # the pump always leaves at least one replica with work
+        assert best is not None, "open-loop fleet ran out of arrivals"
+        start, sched, demand, floor = best.form_pending()
+        self._pending_replica = best
+        self.spanning = best.spanning
         self.pending_start = start
-        self.pending_skew = 0.0       # fleet dispatches decode in lockstep
+        self.pending_skew = 0.0       # replicas dispatch decode in lockstep
         self.pending_schedule = sched
         self.pending_demand = demand
         self.pending_floor = floor
 
     def resolved(self, finish: float, dur: float) -> None:
-        spec = self.spec
-        if self._phase > 0:
-            self.decode_step_times.append(finish - self._phase_finish)
-        self._phase_finish = finish
-        self._phase += 1
-        if self._phase > spec.decode_tokens:
-            lat = finish - self._req_arrival
-            self.latencies.append(lat)
-            if spec.slo_p99_s is not None:
-                self.slo_ok.append(lat <= spec.slo_p99_s)
-            self.requests_done += 1
-            self.tokens_done += spec.decode_tokens
-            self._busy_until = finish
-            self._phase = -1
+        self._pending_replica.resolved(finish)
+        self._pending_replica = None
+        if finish > self._last_finish:
+            self._last_finish = finish
         self.pending_start = None
 
     # -- metrics -----------------------------------------------------------
@@ -398,10 +676,24 @@ class InferenceTenant(Tenant):
     @property
     def tokens_per_s(self) -> float:
         if not self.latencies or self.departed_t is None:
-            span = self._phase_finish - (self.arrived_t or 0.0)
+            span = self._last_finish - (self.arrived_t or 0.0)
         else:
             span = self.departed_t - (self.arrived_t or 0.0)
         return self.tokens_done / span if span > 0 else 0.0
+
+    @property
+    def requests_outstanding(self) -> int:
+        """Requests arrived but not yet completed (waiting, joining, or
+        decoding on some replica) — ``requests_arrived ==
+        requests_done + requests_outstanding`` is the conservation
+        invariant the batching tests pin across failures and re-places."""
+        return sum(rep.depth() for rep in self._replicas)
+
+    @property
+    def replica_spans(self) -> List[int]:
+        """Leaf/pod span of each replica's node chunk (the locality the
+        ``slo_aware`` placement policy optimizes)."""
+        return [rep.spanning for rep in self._replicas]
 
     @property
     def param_bytes(self) -> float:

@@ -1,0 +1,196 @@
+"""Versioned fingerprint baselines for every scenario-library entry.
+
+The golden suite (``tests/golden/``) pins four hand-picked scenarios; the
+*library* — the named failure modes CI smoke-runs — was only checked for
+"still runs". A silent change to any library scenario's series would merge
+clean. These baselines close that hole: every
+:mod:`repro.fabric.scenario.library` entry's ``Result.fingerprint()`` plus
+its key diagnostics are persisted as versioned JSON under
+``tests/baselines/``, and both this test module and the CI baseline job
+(``make baselines-check``) fail on any drift — bit-exact, down to one ulp
+(see ``test_one_ulp_perturbation_is_caught``) — with a readable per-path
+diff.
+
+Regenerate (only when a behavior change is intended and reviewed):
+
+    make baselines            # == PYTHONPATH=src python tests/test_baselines.py
+    make baselines-check      # == ... tests/test_baselines.py --check
+"""
+import json
+import math
+import os
+import sys
+from typing import Any, Dict, List
+
+import pytest
+
+from repro.fabric.scenario import library
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+BASELINE_VERSION = 1
+
+# per-tenant diagnostics keys worth pinning (floats stored as hex; the
+# rest of diagnostics() — node lists etc. — is already covered by the
+# fingerprint's nodes/series)
+DIAG_KEYS = ("kind", "algo", "spanning_groups", "shared_bytes_frac",
+             "steps", "mean_step_s", "cv", "throughput", "requests",
+             "mean_latency_s", "p99_latency_s", "slo_attainment",
+             "batching", "replicas", "max_replica_span")
+
+REGEN_HINT = ("if the change is intended and reviewed, regenerate with "
+              "`make baselines` and commit the diff under tests/baselines/")
+
+
+def _hexify(value: Any) -> Any:
+    """Floats to hex (bit-exact, no repr rounding); containers walked."""
+    if isinstance(value, bool):
+        return value
+    if isinstance(value, float):
+        return value.hex()
+    if isinstance(value, dict):
+        return {k: _hexify(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_hexify(v) for v in value]
+    return value
+
+
+def snapshot(name: str) -> Dict[str, Any]:
+    """The baseline payload for one library entry (fresh run)."""
+    result = library.build(name).run()
+    diags = {
+        tenant: {k: _hexify(d[k]) for k in DIAG_KEYS if k in d}
+        for tenant, d in result.diagnostics().items()}
+    return {"version": BASELINE_VERSION, "scenario": name,
+            "fingerprint": result.fingerprint(), "diagnostics": diags}
+
+
+def baseline_path(name: str) -> str:
+    return os.path.join(BASELINE_DIR, f"{name}.json")
+
+
+def diff_paths(expected: Any, actual: Any, path: str = "",
+               limit: int = 12) -> List[str]:
+    """First ``limit`` leaf paths where two JSON trees disagree."""
+    out: List[str] = []
+
+    def walk(e: Any, a: Any, p: str) -> None:
+        if len(out) >= limit:
+            return
+        if isinstance(e, dict) and isinstance(a, dict):
+            for k in sorted(set(e) | set(a)):
+                if k not in e:
+                    out.append(f"{p}.{k}: unexpected (not in baseline)")
+                elif k not in a:
+                    out.append(f"{p}.{k}: missing from run")
+                else:
+                    walk(e[k], a[k], f"{p}.{k}")
+                if len(out) >= limit:
+                    return
+        elif isinstance(e, list) and isinstance(a, list):
+            if len(e) != len(a):
+                out.append(f"{p}: length {len(e)} != {len(a)}")
+                return
+            for i, (ev, av) in enumerate(zip(e, a)):
+                walk(ev, av, f"{p}[{i}]")
+                if len(out) >= limit:
+                    return
+        elif e != a:
+            out.append(f"{p}: baseline {e!r} != run {a!r}")
+
+    walk(expected, actual, path or "$")
+    return out
+
+
+def check(name: str) -> List[str]:
+    """Diff one library entry against its baseline file; [] when clean."""
+    path = baseline_path(name)
+    if not os.path.exists(path):
+        return [f"$: no baseline recorded at {path}"]
+    with open(path) as f:
+        expected = json.load(f)
+    return diff_paths(expected, snapshot(name))
+
+
+# ---------------------------------------------------------------------------
+# tests
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(library.names()))
+def test_library_fingerprint_matches_baseline(name):
+    drift = check(name)
+    assert not drift, (
+        f"{name}: fingerprint drifted from tests/baselines/{name}.json "
+        f"— {REGEN_HINT}\n  " + "\n  ".join(drift))
+
+
+def test_every_baseline_file_names_a_library_entry():
+    """A stale baseline (scenario renamed/removed) is drift too."""
+    on_disk = {f[:-5] for f in os.listdir(BASELINE_DIR)
+               if f.endswith(".json")}
+    assert on_disk == set(library.names()), (
+        f"baseline files {sorted(on_disk)} != library "
+        f"{sorted(library.names())} — {REGEN_HINT}")
+
+
+def test_one_ulp_perturbation_is_caught():
+    """The acceptance demonstration: perturbing a single series value by
+    one ulp (the smallest representable change) is reported as drift,
+    with the diff naming the exact path."""
+    name = sorted(library.names())[0]
+    with open(baseline_path(name)) as f:
+        expected = json.load(f)
+    perturbed = json.loads(json.dumps(expected))  # deep copy
+    tenants = perturbed["fingerprint"].get("tenants") \
+        or perturbed["fingerprint"]["jobs"]
+    series = next(t["series"] for t in tenants if t["series"])
+    val = float.fromhex(series[0])
+    series[0] = math.nextafter(val, math.inf).hex()
+    assert perturbed != expected
+    drift = diff_paths(expected, perturbed)
+    assert drift and any("series[0]" in d for d in drift), drift
+
+
+# ---------------------------------------------------------------------------
+# regen / check entry points (make baselines / make baselines-check)
+# ---------------------------------------------------------------------------
+
+
+def regen(only=None) -> None:
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    names = set(library.names())
+    for stale in sorted(set(os.listdir(BASELINE_DIR))):
+        if stale.endswith(".json") and stale[:-5] not in names:
+            os.remove(os.path.join(BASELINE_DIR, stale))
+            print(f"removed stale {stale}")
+    for name in sorted(names):
+        if only and name not in only:
+            continue
+        with open(baseline_path(name), "w") as f:
+            json.dump(snapshot(name), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {baseline_path(name)}")
+
+
+def run_check() -> int:
+    bad = 0
+    for name in sorted(library.names()):
+        drift = check(name)
+        if drift:
+            bad += 1
+            print(f"DRIFT {name}:")
+            for d in drift:
+                print(f"  {d}")
+        else:
+            print(f"ok    {name}")
+    if bad:
+        print(f"\n{bad} scenario(s) drifted from tests/baselines/ — "
+              f"{REGEN_HINT}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--check" in argv:
+        sys.exit(run_check())
+    regen(only=set(argv) or None)

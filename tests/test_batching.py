@@ -1,0 +1,340 @@
+"""Continuous-batching fleet invariants (workloads/events/placement).
+
+The contracts this module pins:
+
+  * **bit-compat** — ``batching="none"`` (the default) is the pre-fleet
+    single-stream path; ``batching="continuous"`` with ``max_batch=1`` is
+    its degenerate twin, bit-identical fingerprint included. (The golden
+    fixtures in ``tests/test_golden_series.py`` separately pin "none"
+    against the series recorded before fleets existed.)
+  * **request conservation** — no request is ever lost: across batch
+    joins, node failures mid-batch, shrink-by-replica recovery, and
+    re-placement, ``requests_arrived == requests_done +
+    requests_outstanding``.
+  * **JSQ** — the join-shortest-queue router never routes to a strictly
+    longer queue than the minimum at decision time.
+  * **slo_aware placement** — latency-bound chunks pack whole into
+    best-fit leaves (span 1) and fall back gracefully to compact packing
+    when no leaf can host a chunk; SLO-less specs behave as ``compact``.
+"""
+import math
+
+import pytest
+
+from repro.fabric import (Arrival, InferenceSpec, JobSpec, NodeFailure,
+                          Scenario, TopologySpec, fat_tree, place)
+from repro.fabric.congestion import batch_bytes
+from repro.fabric.placement import slo_aware, spanning_groups
+from repro.fabric.scenario import ScenarioError, library
+
+FABRIC64 = TopologySpec(kind="fat_tree", n_nodes=64, nodes_per_leaf=8)
+
+
+def _fleet_scenario(spec, horizon=8.0, train=True, name="batching"):
+    events = [Arrival(0.0, JobSpec("train", 12, placement="compact",
+                                   grad_bytes=2e9))] if train else []
+    events.append(Arrival(0.0, spec))
+    return Scenario(name=name, topology=FABRIC64, events=tuple(events),
+                    horizon=horizon)
+
+
+# ---------------------------------------------------------------------------
+# bit-compat: none == continuous @ max_batch=1
+# ---------------------------------------------------------------------------
+
+
+def test_default_batching_is_none():
+    assert InferenceSpec("s", 4).batching == "none"
+    assert InferenceSpec("s", 4).replicas == 1
+
+
+def test_continuous_max_batch_1_is_bit_identical_to_none():
+    """Capacity-1 continuous batching degenerates to the single stream:
+    joins only on an empty server, every decode at occupancy 1 — the
+    same arithmetic operation for operation, so the fingerprints match
+    bit-exactly (this is the compatibility proof that both disciplines
+    share one engine path rather than forking the model)."""
+    base = dict(n_ranks=4, rate_rps=12.0, decode_tokens=6, slo_p99_s=0.5)
+    single = _fleet_scenario(InferenceSpec("serve", batching="none",
+                                           **base)).run()
+    degenerate = _fleet_scenario(InferenceSpec("serve",
+                                               batching="continuous",
+                                               max_batch=1, **base)).run()
+    assert single.fingerprint() == degenerate.fingerprint()
+
+
+def test_continuous_batching_emits_batch_join_log_events():
+    spec = InferenceSpec("serve", 4, batching="continuous", max_batch=8,
+                         rate_rps=30.0, decode_tokens=6)
+    res = _fleet_scenario(spec).run()
+    joins = [e for e in res.log if e[1] == "batch_join"]
+    assert joins, "continuous fleet under load never joined a batch"
+    # none-mode fleets never emit joins (log kinds feed the fingerprint,
+    # so this is also what keeps the golden fixtures replayable)
+    quiet = _fleet_scenario(InferenceSpec("serve", 4, rate_rps=30.0,
+                                          decode_tokens=6)).run()
+    assert not [e for e in quiet.log if e[1] == "batch_join"]
+
+
+# ---------------------------------------------------------------------------
+# request conservation
+# ---------------------------------------------------------------------------
+
+
+def _assert_conserved(tenant):
+    assert tenant.requests_arrived == tenant.requests_done \
+        + tenant.requests_outstanding
+    assert len(tenant.latencies) == tenant.requests_done
+    assert tenant.tokens_done \
+        == tenant.requests_done * tenant.spec.decode_tokens
+
+
+def test_request_conservation_steady_state():
+    spec = InferenceSpec("serve", 4, replicas=2, batching="continuous",
+                         max_batch=4, router="jsq", rate_rps=25.0,
+                         decode_tokens=6)
+    res = _fleet_scenario(spec, horizon=10.0).run()
+    serve = res.tenant("serve")
+    assert serve.requests_done > 100
+    _assert_conserved(serve)
+
+
+def test_no_request_lost_on_failure_mid_batch():
+    """A node dies under a two-replica fleet mid-run: the fleet shrinks
+    by whole replicas, in-flight batch members restart from prefill on
+    the survivor (keeping their arrival times, so the recovery stall is
+    visible in their latency), and nothing is dropped."""
+    spec = InferenceSpec("serve", 4, replicas=2, batching="continuous",
+                         max_batch=4, router="jsq", rate_rps=20.0,
+                         decode_tokens=6, nodes=tuple(range(8)),
+                         slo_p99_s=0.5)
+    scn = Scenario(name="fleet_failure", topology=FABRIC64,
+                   events=(Arrival(0.0, spec), NodeFailure(3.0, 2)),
+                   horizon=12.0)
+    res = scn.run()
+    serve = res.tenant("serve")
+    assert any(e[1] == "replaced" for e in res.log), res.log
+    assert len(serve.replica_spans) == 1          # shrunk 2 -> 1 replicas
+    assert serve.requests_done > 50
+    _assert_conserved(serve)
+    # the recovery stall shows up in the affected requests' latencies
+    assert max(serve.latencies) > serve.latency_quantile(0.5)
+
+
+@pytest.mark.slow
+def test_batching_horizon_conservation_and_stability():
+    """Long-horizon continuous batching: conservation holds over
+    thousands of requests and the fleet keeps absorbing the arrival rate
+    (no unbounded queue growth at a rate the batch capacity covers)."""
+    base = library.build("continuous_batching_relief")
+    scn = Scenario.from_dict({**base.to_dict(), "horizon": 120.0,
+                              "name": "batching_horizon"})
+    serve = scn.run().tenant("serve")
+    assert serve.requests_done > 4000
+    _assert_conserved(serve)
+    # open-loop stability: outstanding work stays a tiny fraction of the
+    # served volume (the single-stream discipline diverges here)
+    assert serve.requests_outstanding < 0.02 * serve.requests_done
+    assert serve.slo_attainment > 0.9
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def test_jsq_never_routes_to_a_strictly_longer_queue():
+    spec = InferenceSpec("serve", 2, replicas=3, batching="continuous",
+                         max_batch=4, router="jsq", rate_rps=30.0,
+                         decode_tokens=5)
+    serve = _fleet_scenario(spec, horizon=8.0).run().tenant("serve")
+    assert len(serve.routing_log) > 100
+    for choice, depths in serve.routing_log:
+        assert depths[choice] == min(depths), (choice, depths)
+
+
+def test_round_robin_cycles_blind():
+    spec = InferenceSpec("serve", 2, replicas=3, batching="continuous",
+                         max_batch=4, router="round_robin", rate_rps=30.0,
+                         decode_tokens=5)
+    serve = _fleet_scenario(spec, horizon=6.0).run().tenant("serve")
+    choices = [c for c, _ in serve.routing_log]
+    assert choices[:6] == [0, 1, 2, 0, 1, 2]
+
+
+def test_jsq_beats_round_robin_under_asymmetric_replicas():
+    """With one replica straddling a leaf boundary (slower), JSQ diverts
+    load to the fast replica and completes at least as many requests at
+    a lower p99 than blind round-robin."""
+    results = {}
+    for router in ("jsq", "round_robin"):
+        spec = InferenceSpec("serve", 6, replicas=2,
+                             batching="continuous", max_batch=4,
+                             router=router, rate_rps=20.0, decode_tokens=8,
+                             slo_p99_s=0.15, placement="compact")
+        scn = Scenario(
+            name=f"router_{router}", topology=FABRIC64,
+            events=(Arrival(0.0, JobSpec("train", 12, placement="compact",
+                                         grad_bytes=6e9)),
+                    Arrival(1.0, spec)),
+            horizon=12.0)
+        results[router] = scn.run().tenant("serve")
+    jsq, rr = results["jsq"], results["round_robin"]
+    assert jsq.requests_done >= rr.requests_done
+    assert jsq.latency_quantile(0.99) < rr.latency_quantile(0.99)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching dominates the single stream under load
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_batching_dominates_single_stream_at_high_rate():
+    """The acceptance claim, at test scale: at an arrival rate the single
+    stream cannot sustain, continuous batching completes strictly more
+    requests at strictly lower p99 — the canonical tradeoff curve's
+    high-rate end (``benchmarks.run --only batching`` tables it)."""
+    base = dict(n_ranks=4, replicas=2, router="jsq", rate_rps=40.0,
+                decode_tokens=8, slo_p99_s=0.6)
+    single = _fleet_scenario(
+        InferenceSpec("serve", batching="none", **base),
+        horizon=10.0).run().tenant("serve")
+    batched = _fleet_scenario(
+        InferenceSpec("serve", batching="continuous", max_batch=8, **base),
+        horizon=10.0).run().tenant("serve")
+    assert batched.requests_done > single.requests_done
+    assert batched.latency_quantile(0.99) < single.latency_quantile(0.99)
+    assert batched.slo_attainment > single.slo_attainment
+
+
+def test_slo_aware_jsq_beats_compact_round_robin_on_noisy_neighbor():
+    """The slo_placement library scenario vs its placement/router-blinded
+    twin: slo_aware + JSQ measurably improves SLO attainment."""
+    base = library.build("slo_placement")
+    smart = base.run()
+    d = base.to_dict()
+    d["events"][1]["spec"]["placement"] = "compact"
+    d["events"][1]["spec"]["router"] = "round_robin"
+    d["name"] = "slo_placement_blind"
+    blind = Scenario.from_dict(d).run()
+    assert smart.slo_attainment()["serve"] \
+        > blind.slo_attainment()["serve"]
+    assert max(smart.tenant("serve").replica_spans) == 1
+    assert max(blind.tenant("serve").replica_spans) > 1
+
+
+# ---------------------------------------------------------------------------
+# slo_aware placement unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_slo_aware_packs_chunks_whole_into_best_fit_leaves():
+    topo = fat_tree(64, nodes_per_leaf=8)
+    spec = InferenceSpec("s", 6, replicas=2, slo_p99_s=0.2)
+    # leaf 0 full, leaf 1 half-taken: best fit for a 6-chunk is leaf 1's
+    # mirror — the fullest leaf that still fits — then the next free leaf
+    nodes = place("slo_aware", topo, 12, taken=range(10), spec=spec)
+    chunks = [nodes[:6], nodes[6:]]
+    for chunk in chunks:
+        assert spanning_groups(topo, chunk) == 1
+    assert set(nodes).isdisjoint(range(10))
+
+
+def test_slo_aware_prefers_fullest_fitting_leaf():
+    topo = fat_tree(64, nodes_per_leaf=8)
+    spec = InferenceSpec("s", 6, replicas=1, slo_p99_s=0.2)
+    # leaf 1 has exactly 6 free (10..15), leaves 2+ have 8: best fit is
+    # leaf 1, preserving whole-leaf holes for trainers
+    nodes = place("slo_aware", topo, 6, taken=range(10), spec=spec)
+    assert nodes == list(range(10, 16))
+
+
+def test_slo_aware_falls_back_gracefully_when_no_leaf_fits():
+    topo = fat_tree(64, nodes_per_leaf=8)
+    # a 10-rank chunk cannot fit any 8-node leaf: compact fallback, still
+    # n distinct nodes, spanning > 1 (the tenant pays the shared tier)
+    spec = InferenceSpec("s", 10, replicas=1, slo_p99_s=0.2)
+    nodes = place("slo_aware", topo, 10, spec=spec)
+    assert sorted(nodes) == list(range(10))
+    assert spanning_groups(topo, nodes) == 2
+    # fragmented pool: every leaf keeps <= 4 free nodes, chunk of 6
+    taken = [nd for nd in range(64) if nd % 2 == 0]
+    frag = place("slo_aware", topo, 6,
+                 taken=taken, spec=InferenceSpec("s", 6, slo_p99_s=0.2))
+    assert len(set(frag)) == 6
+    assert set(frag).isdisjoint(taken)
+
+
+def test_slo_aware_without_slo_degrades_to_compact():
+    topo = fat_tree(64, nodes_per_leaf=8)
+    assert place("slo_aware", topo, 12, taken=range(5)) \
+        == place("compact", topo, 12, taken=range(5))
+    assert slo_aware(topo, 12, list(range(64)),
+                     spec=JobSpec("t", 12)) == list(range(12))
+
+
+# ---------------------------------------------------------------------------
+# spec validation + capacity accounting
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validation_rejects_malformed_fleet_shapes():
+    with pytest.raises(ValueError, match="batching"):
+        InferenceSpec("s", 4, batching="sometimes")
+    with pytest.raises(ValueError, match="max_batch"):
+        InferenceSpec("s", 4, max_batch=0)
+    with pytest.raises(ValueError, match="replicas"):
+        InferenceSpec("s", 4, replicas=0)
+    with pytest.raises(ValueError, match="decode_tokens"):
+        InferenceSpec("s", 4, decode_tokens=-1)
+
+
+def test_prefill_only_requests_complete_at_prefill():
+    """decode_tokens=0 (prefill-only serving, e.g. embedding fleets):
+    requests complete at the prefill finish — the pre-fleet path's
+    behavior — in both batching modes, without a stray decode step."""
+    for batching in ("none", "continuous"):
+        spec = InferenceSpec("serve", 4, batching=batching, max_batch=4,
+                             rate_rps=10.0, decode_tokens=0)
+        serve = _fleet_scenario(spec, horizon=6.0,
+                                train=False).run().tenant("serve")
+        assert serve.requests_done > 20
+        assert serve.tokens_done == 0
+        assert not serve.decode_step_times
+        _assert_conserved(serve)
+
+
+def test_scenario_validates_router_and_replica_capacity():
+    def scn(spec):
+        return Scenario(name="v", topology=FABRIC64,
+                        events=(Arrival(0.0, spec),), horizon=4.0)
+    with pytest.raises(ScenarioError, match="router"):
+        scn(InferenceSpec("s", 4, router="psychic"))
+    # capacity is consumed per replica: 5 x 16 > 64
+    with pytest.raises(ScenarioError, match="80 ranks"):
+        scn(InferenceSpec("s", 16, replicas=5))
+    # pinned fleets pin total_ranks nodes, not n_ranks
+    with pytest.raises(ScenarioError, match="8 distinct"):
+        scn(InferenceSpec("s", 4, replicas=2, nodes=tuple(range(4))))
+    ok = scn(InferenceSpec("s", 4, replicas=2, nodes=tuple(range(8))))
+    assert ok.events[0].spec.total_ranks == 8
+
+
+def test_fleet_spec_json_round_trip():
+    spec = InferenceSpec("serve", 4, replicas=3, batching="continuous",
+                         max_batch=16, router="jsq", slo_p99_s=0.25)
+    scn = Scenario(name="rt", topology=FABRIC64,
+                   events=(Arrival(0.0, spec),), horizon=4.0)
+    back = Scenario.from_json(scn.to_json())
+    assert back.to_dict() == scn.to_dict()
+    spec2 = back.events[0].spec
+    assert (spec2.batching, spec2.max_batch, spec2.replicas, spec2.router) \
+        == ("continuous", 16, 3, "jsq")
+
+
+def test_batch_bytes_occupancy_weighting():
+    assert batch_bytes(1.6e7, 1) == 1.6e7          # bit-exact anchor
+    assert batch_bytes(1.6e7, 4) == 4 * 1.6e7
+    assert math.isclose(batch_bytes(2e8, 3) / batch_bytes(2e8, 1), 3.0)
+    with pytest.raises(ValueError):
+        batch_bytes(1e6, -1)
