@@ -40,6 +40,7 @@ bench-smoke:     ## the CI benchmark smoke sections (ARTIFACTS= to persist)
 	$(PY) -m benchmarks.run --only batching $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 	$(PY) -m benchmarks.run --only scenarios $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 	$(PY) -m benchmarks.run --only pacing
+	$(PY) -m benchmarks.run --only backend $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 
 bench:           ## all benchmark sections
 	$(PY) -m benchmarks.run

@@ -1,0 +1,133 @@
+"""Backend sweep benchmark: batched jnp grid vs sequential reference.
+
+The tentpole claim for the kernel-registry backend: a dense
+:class:`~repro.fabric.scenario.ScenarioGrid` sweep (256 congestion
+variants here) runs as **one compiled program** on the jnp backend
+instead of 256 sequential Python engine loops, targeting >= 50x on the
+warm path. The comparison is honest about what repeats in practice:
+
+  * the **jnp warm** number is a full ``grid.run(backend="jnp")`` after
+    one prior run — compile cache, engine cache, and stream caches hot,
+    which is exactly the steady state of an interactive what-if study
+    (the cold time, dominated by one-time XLA compilation, is reported
+    separately);
+  * the **reference** number runs ``REF_SAMPLE`` evenly spaced variants
+    through the real sequential path and extrapolates linearly — the
+    reference engine's cost per variant is flat across congestion floats
+    (same topology, placement, schedule), and running all 256 would just
+    make CI slower without changing the ratio;
+  * a per-variant **equivalence spot check** compares jnp (float32
+    production dtype) against the reference on the sampled variants, so
+    the speedup table cannot silently drift away from the model it
+    claims to accelerate.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only backend``.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+ITERS = 400
+WARMUP = 40
+REF_SAMPLE = 12
+AXES = {
+    "congestion.u_mean": [0.15, 0.2, 0.25, 0.3, 0.35, 0.4, 0.45, 0.5],
+    "congestion.k_burst": [0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75, 2.0],
+    "congestion.u_sigma": [0.04, 0.08, 0.12, 0.16],
+}
+
+_ROWS: List[str] = []
+_RESULTS: Optional[List[Tuple[dict, object]]] = None
+_GRID = None
+
+
+def _grid():
+    global _GRID
+    if _GRID is None:
+        from repro.fabric.congestion import CongestionConfig
+        from repro.fabric.engine import JobSpec
+        from repro.fabric.scenario import (Scenario, ScenarioGrid,
+                                           TopologySpec)
+        base = Scenario(
+            name="backend-sweep",
+            topology=TopologySpec(n_nodes=64, nodes_per_leaf=8),
+            jobs=[JobSpec("train", 64)],
+            congestion=CongestionConfig(k_kick=0.25),
+            iters=ITERS, warmup=WARMUP)
+        _GRID = ScenarioGrid(base, AXES)
+    return _GRID
+
+
+def rows() -> List[str]:
+    global _RESULTS
+    if _ROWS:
+        return _ROWS
+    grid = _grid()
+    n = len(grid)
+
+    t0 = time.time()
+    grid.run(backend="jnp")
+    t_cold = time.time() - t0
+    t_warm = float("inf")
+    for _ in range(3):              # best of 3: shield CI-runner noise
+        t0 = time.time()
+        _RESULTS = grid.run(backend="jnp")
+        t_warm = min(t_warm, time.time() - t0)
+
+    # sequential reference on evenly spaced sample variants; the jnp
+    # result of the same variant doubles as the equivalence spot check
+    sample = list(range(0, n, max(1, n // REF_SAMPLE)))[:REF_SAMPLE]
+    t_ref = 0.0
+    worst_rel = 0.0
+    variants = grid.scenarios()
+    for i in sample:
+        t0 = time.time()
+        ref = variants[i].run()
+        t_ref += time.time() - t0
+        a = np.array(ref.series("train"))
+        b = np.array(_RESULTS[i][1].series("train"))
+        worst_rel = max(worst_rel, float(
+            np.max(np.abs(a - b) / np.abs(a))))
+    ref_per = t_ref / len(sample)
+    ref_est = ref_per * n
+    speedup = ref_est / t_warm
+
+    _ROWS.extend([
+        "metric,value",
+        f"variants,{n}",
+        f"iters,{ITERS}",
+        f"ref_s_per_variant,{ref_per:.4f}",
+        f"ref_est_s_sequential,{ref_est:.2f}",
+        f"jnp_cold_s,{t_cold:.2f}",
+        f"jnp_warm_s,{t_warm:.3f}",
+        f"speedup_warm,{speedup:.1f}",
+        f"equiv_max_rel_f32,{worst_rel:.2e}",
+        f"target_50x,{'PASS' if speedup >= 50.0 else 'MISS'}",
+    ])
+    return _ROWS
+
+
+def write_artifacts(outdir: str) -> List[str]:
+    """Persist the speedup table and the full per-variant sweep CSV."""
+    paths = []
+    p = os.path.join(outdir, "backend_speedup.csv")
+    with open(p, "w") as f:
+        f.write("\n".join(rows()) + "\n")
+    paths.append(p)
+    p = os.path.join(outdir, "backend_sweep.csv")
+    _grid().to_csv(p, results=_RESULTS)
+    paths.append(p)
+    return paths
+
+
+def main() -> None:
+    for ln in rows():
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,8 @@
   scenarios   — scenario-library smoke: every named scenario end to end
   pacing      — vectorized PacingBank vs scalar controllers (before/after)
   speedup     — compiled-schedule engine vs seed per-call loop wall-clock
+  backend     — batched jnp grid sweep vs sequential reference engine
+                (kernel-registry backend, targets >= 50x warm)
   kernels     — substrate kernel micro-benchmarks
   roofline    — per-cell roofline terms from the dry-run artifacts
 
@@ -35,7 +37,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["table1", "scaling", "taxonomy", "multitenant",
                              "lifecycle", "wfq", "batching", "scenarios",
-                             "pacing", "speedup", "kernels", "roofline"])
+                             "pacing", "speedup", "backend", "kernels",
+                             "roofline"])
     ap.add_argument("--artifacts", default=None, metavar="DIR",
                     help="write sections' CSV/JSON artifacts into DIR")
     args = ap.parse_args()
@@ -85,6 +88,11 @@ def main() -> None:
         from benchmarks import engine_speedup
         sections.append(("engine_speedup (compiled schedules vs seed loop)",
                          engine_speedup.rows))
+    if args.only in (None, "backend"):
+        from benchmarks import backend_bench
+        sections.append(("backend_bench (batched jnp sweep vs sequential "
+                         "reference)", backend_bench.rows))
+        artifact_writers.append(backend_bench.write_artifacts)
     if args.only in (None, "kernels"):
         from benchmarks import kernel_bench
         sections.append(("kernel_bench (substrate)", kernel_bench.rows))

@@ -54,17 +54,29 @@ def rows() -> List[str]:
 
 def write_artifacts(outdir: str) -> List[str]:
     """Persist the smoke table (CSV) and the seeded scenario library
-    (JSON dict forms, base_seed included) as CI artifacts."""
+    (JSON dict forms, base_seed included) as CI artifacts.
+
+    ``BENCH_scenarios.json`` is also refreshed at the repository root,
+    where it is *tracked in git*: the declarative inputs behind the
+    benchmark numbers diff in review alongside the code that changes
+    them, and a stale copy (a library edit without a bench run) shows up
+    as an uncommitted change in CI."""
     csv_path = os.path.join(outdir, "scenarios.csv")
     with open(csv_path, "w") as f:
         f.write("\n".join(rows()) + "\n")
+    payload = json.dumps({name: library.build(name).to_dict()
+                          for name in library.names()}, indent=1,
+                         sort_keys=True) + "\n"
     json_path = os.path.join(outdir, "BENCH_scenarios.json")
-    with open(json_path, "w") as f:
-        json.dump({name: library.build(name).to_dict()
-                   for name in library.names()}, f, indent=1,
-                  sort_keys=True)
-        f.write("\n")
-    return [csv_path, json_path]
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    tracked_path = os.path.join(repo_root, "BENCH_scenarios.json")
+    written = []
+    for path in dict.fromkeys(
+            (os.path.abspath(json_path), tracked_path)):
+        with open(path, "w") as f:
+            f.write(payload)
+        written.append(path)
+    return [csv_path] + written
 
 
 def main() -> None:

@@ -29,6 +29,17 @@ import numpy as np
 from repro.configs.base import PacingConfig
 
 
+def _clamp(x: float) -> float:
+    """Observation sanitizer: negative, -0.0, and **NaN** inputs all clamp
+    to ``0.0``. Bit-identical to the old ``max(0.0, x)`` for ordinary
+    floats; the explicit comparison pins the NaN case, where Python's
+    ``max(0.0, nan)`` keeps 0.0 but numpy's ``np.maximum`` propagates the
+    NaN — the divergence that silently broke the scalar-vs-bank
+    bit-equality contract (:class:`PacingBank` uses the matching
+    ``where(x > 0, x, 0)`` form)."""
+    return x if x > 0.0 else 0.0
+
+
 def _median(xs) -> float:
     s = sorted(xs)
     n = len(s)
@@ -83,9 +94,10 @@ class PacingController:
 
     # -- observation -------------------------------------------------------
     def observe(self, wait_time: float, step_time: float) -> None:
-        self._waits.append(max(0.0, wait_time))
-        self._early.append(max(0.0, wait_time) + self._delay)
-        self._steps.append(max(0.0, step_time))
+        wait = _clamp(wait_time)      # NaN/negative -> 0.0 (see _clamp)
+        self._waits.append(wait)
+        self._early.append(wait + self._delay)
+        self._steps.append(_clamp(step_time))
         self._seen += 1
 
     # -- decision ----------------------------------------------------------
@@ -179,12 +191,19 @@ class PacingBank:
 
     # -- observation -------------------------------------------------------
     def observe(self, wait_times: np.ndarray, step_times: np.ndarray) -> None:
-        """One iteration's observations for every rank at once."""
+        """One iteration's observations for every rank at once.
+
+        Sanitized like the scalar controller's ``_clamp``: ``where(x > 0,
+        x, 0)`` clamps negative *and NaN* observations to 0.0 — the old
+        ``np.maximum(0.0, x)`` propagated NaN while the scalar path kept
+        0.0, silently breaking the bit-equality contract between them."""
         pos = self._pos
-        w = np.maximum(0.0, wait_times)
+        wait_times = np.asarray(wait_times)
+        w = np.where(wait_times > 0.0, wait_times, 0.0)
         self._bw[:, pos] = w
         self._be[:, pos] = w + self._delay
-        self._bs[:, pos] = np.maximum(0.0, step_times)
+        step_times = np.asarray(step_times)
+        self._bs[:, pos] = np.where(step_times > 0.0, step_times, 0.0)
         self._pos = (pos + 1) % self._w
         if self._count < self._w:
             self._count += 1

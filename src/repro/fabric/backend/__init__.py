@@ -1,0 +1,167 @@
+"""Kernel-registry backend dispatch for the simulator's hot paths.
+
+The ROADMAP names the dense-sweep bottleneck explicitly: a 1000-point
+:class:`~repro.fabric.scenario.ScenarioGrid` runs 1000 sequential Python
+engine loops. The hot arithmetic lives in three places — the
+progressive-filling allocators (:mod:`repro.fabric.congestion`), the
+vectorized pacing bank (:mod:`repro.core.pacing`), and the busy-segment
+contention accounting (:mod:`repro.fabric.engine`) — and each is a pure
+function of floats, so it can be routed through a backend enum in the
+style of :mod:`repro.kernels.ops`:
+
+  * ``KernelType.REFERENCE`` — the existing Python/loop code, registered
+    as-is. This backend *is* the executable spec: goldens, baselines, and
+    every bit-exactness contract keep running through the same bytes.
+  * ``KernelType.JNP`` — batched :mod:`jax.numpy` kernels plus a
+    ``lax.scan``/``vmap`` whole-scenario runner
+    (:mod:`repro.fabric.backend.jnp_engine`) that executes every variant
+    of a grid sweep as one compiled program.
+  * ``KernelType.PALLAS`` — reserved. The enum member exists so kernels
+    can be registered without an API change, but nothing registers it
+    yet; requesting it raises :class:`BackendError`.
+
+Selection surfaces: ``Scenario.run(backend=...)``,
+``ScenarioGrid.run(backend=...)``, and the ``Policies.backend`` field as
+the declarative default. Kernel-level access for tests and benchmarks is
+``get_kernel(name, backend)``.
+
+Equivalence is *tiered per kernel*, not hand-waved globally: every entry
+in :data:`EQUIVALENCE_TIERS` declares how close the fast backend must
+track the reference — ``exact`` (bit-identical under float64), ``ulp``
+(a few ULPs, where summation order legitimately differs), or ``rtol``
+(relative tolerance, for whole-engine series where rounding differences
+feed back through the simulation). ``tests/test_backend.py`` asserts
+each kernel at its declared tier, under both float32 (the production
+default) and float64.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Callable, Dict, Tuple, Union
+
+
+class BackendError(RuntimeError):
+    """A kernel/scenario was requested on a backend that cannot run it
+    (unregistered kernel, unsupported scenario feature, or the reserved
+    ``pallas`` backend)."""
+
+
+class KernelType(enum.Enum):
+    """Which implementation family executes a hot-path kernel."""
+
+    REFERENCE = "reference"       # existing Python loops — the spec
+    JNP = "jnp"                   # batched jax.numpy / lax.scan / vmap
+    PALLAS = "pallas"             # reserved: enum slot only, no kernels
+
+    @classmethod
+    def parse(cls, spec: Union[str, "KernelType", None],
+              default: "KernelType" = None) -> "KernelType":
+        if spec is None:
+            return default if default is not None else cls.REFERENCE
+        if isinstance(spec, cls):
+            return spec
+        try:
+            return cls(str(spec).lower())
+        except ValueError:
+            raise BackendError(
+                f"unknown backend {spec!r}; one of "
+                f"{tuple(k.value for k in cls)}") from None
+
+
+BACKENDS: Tuple[str, ...] = tuple(k.value for k in KernelType)
+
+# Fairness modes the jnp whole-scenario runner can batch (the owner-
+# aggregated share models; see repro.fabric.backend.jnp_engine). Listed
+# here so Scenario validation can check eagerly without importing jax.
+JNP_SCENARIO_FAIRNESS: Tuple[str, ...] = ("maxmin", "wfq",
+                                          "strict_priority")
+
+# The kernel catalogue. Every name is registered for REFERENCE (the
+# executable spec) and JNP (the batched fast path); PALLAS is reserved.
+KERNELS: Tuple[str, ...] = (
+    "maxmin_shares",              # progressive-filling max-min allocator
+    "wfq_shares",                 # weighted progressive filling
+    "strict_priority_shares",     # descending priority classes
+    "drr_shares",                 # deficit round robin
+    "offered_share",              # offered-bytes proportional share
+    "pacing_decide",              # PacingBank window -> bounded delays
+    "segment_overlap",            # busy-segment contention accounting
+    "scenario",                   # whole-scenario runner (engine loop)
+)
+
+# name -> (tier, tolerance) — how close the fast backend must track the
+# reference, asserted per kernel by tests/test_backend.py:
+#   exact : bit-identical under float64 (same op sequence, stable sort)
+#   ulp   : within `tol` ULPs under float64 (summation order differs)
+#   rtol  : within relative `tol` (feedback loops amplify rounding; the
+#           float32 production dtype is asserted at a looser 1e-3)
+EQUIVALENCE_TIERS: Dict[str, Tuple[str, float]] = {
+    "maxmin_shares": ("exact", 0.0),
+    "wfq_shares": ("exact", 0.0),
+    "strict_priority_shares": ("exact", 0.0),
+    "drr_shares": ("exact", 0.0),
+    "offered_share": ("exact", 0.0),
+    "pacing_decide": ("ulp", 4.0),
+    "segment_overlap": ("ulp", 8.0),
+    "scenario": ("rtol", 1e-9),
+}
+
+_REGISTRY: Dict[Tuple[str, KernelType], Callable] = {}
+_LOADED: set = set()
+
+
+def register_kernel(name: str, backend: KernelType,
+                    fn: Callable = None) -> Callable:
+    """``register_kernel(name, backend, fn)`` directly or
+    ``@register_kernel(name, backend)`` as a decorator. Re-registering a
+    taken (name, backend) slot raises."""
+    if name not in KERNELS:
+        raise ValueError(f"unknown kernel {name!r}; one of {KERNELS}")
+
+    def _add(f: Callable) -> Callable:
+        key = (name, backend)
+        if key in _REGISTRY:
+            raise ValueError(
+                f"kernel {name!r} already registered for backend "
+                f"{backend.value!r}")
+        _REGISTRY[key] = f
+        return f
+
+    return _add(fn) if fn is not None else _add
+
+
+def _ensure_loaded(backend: KernelType) -> None:
+    """Import the backend's kernel module on first use (lazy so that the
+    reference path never pays a jax import)."""
+    if backend in _LOADED:
+        return
+    _LOADED.add(backend)
+    if backend is KernelType.REFERENCE:
+        from repro.fabric.backend import reference  # noqa: F401
+    elif backend is KernelType.JNP:
+        from repro.fabric.backend import jnp_engine  # noqa: F401
+        from repro.fabric.backend import jnp_kernels  # noqa: F401
+    # PALLAS: reserved — nothing to load; get_kernel reports it below.
+
+
+def get_kernel(name: str, backend: Union[str, KernelType]) -> Callable:
+    """The registered implementation of ``name`` on ``backend``."""
+    bk = KernelType.parse(backend)
+    _ensure_loaded(bk)
+    try:
+        return _REGISTRY[(name, bk)]
+    except KeyError:
+        if name not in KERNELS:
+            raise BackendError(
+                f"unknown kernel {name!r}; one of {KERNELS}") from None
+        avail = tuple(b.value for (n, b) in _REGISTRY if n == name)
+        raise BackendError(
+            f"kernel {name!r} has no {bk.value!r} implementation "
+            f"(registered backends: {avail or '()'})") from None
+
+
+def available_backends(name: str) -> Tuple[str, ...]:
+    """Backends that implement ``name`` (loads the lazy modules)."""
+    for bk in (KernelType.REFERENCE, KernelType.JNP):
+        _ensure_loaded(bk)
+    return tuple(b.value for (n, b) in _REGISTRY if n == name)

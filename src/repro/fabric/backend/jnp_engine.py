@@ -1,0 +1,580 @@
+"""Whole-scenario jnp runner: every grid variant as one batched program.
+
+The reference engine steps one scenario at a time in Python; a dense
+:class:`~repro.fabric.scenario.ScenarioGrid` therefore pays the
+interpreter once per variant per iteration. This module compiles the
+engine's iteration loop into a single ``lax.scan`` and ``vmap``s it over
+scenario variants, so a 256-point sweep executes as one XLA program
+(``benchmarks.run --only backend`` measures the speedup).
+
+The key structural fact that makes this possible: **every random stream
+the engine consumes is feedback-free.** Compute samples
+(:class:`~repro.fabric.stragglers.ComputeModel`) and the congestion
+AR(1) gaussians depend only on their seeds — never on simulation state —
+so both are pregenerated bit-identically in Python (and cached per seed,
+amortizing the host cost across grid variants that share streams) and
+the scan body is pure float arithmetic.
+
+What runs where:
+
+  * **Python prep (per variant, cached):** topology build, placement,
+    schedule compilation (reusing ``FabricEngine.__init__`` so the node
+    sets, seeds, and compiled schedules are exactly the reference
+    engine's), stream pregeneration, and schedule encoding into
+    ``(stage, entry)`` coefficient matrices.
+  * **Traced scan body (per iteration):** arrival windows, the AR(1)
+    update, per-link efficiencies, compiled-schedule evaluation,
+    co-tenant contention (same-round spans + a busy-segment ring buffer,
+    shares via the batched allocators in
+    :mod:`repro.fabric.backend.jnp_kernels`), congestion kick, BSP
+    finish/step bookkeeping, and the pacing bank.
+
+Deliberate deviations from the reference (why ``scenario`` sits in the
+``rtol`` equivalence tier, not ``exact``):
+
+  * float32 by default (float64 under ``jax.experimental.enable_x64``);
+  * the segment store is an unpruned ring buffer — semantically lossless
+    (stale segments overlap future windows by <= 0 and clamp to zero;
+    the reference's pruning threshold proves the same bound) until an
+    owner exceeds ``SEG_CAPACITY`` live segments;
+  * per-link byte totals are ``iters x bytes_per_call(None)`` — exact
+    for ring/tree (static bytes; the reference's repeated adds differ
+    only in accumulation rounding), the uncongested-winner approximation
+    for hierarchical;
+  * per-rank iteration records are not materialized (``trace`` is empty).
+
+Unsupported scenario features raise :class:`BackendError` eagerly:
+event/lifecycle timelines, and the ``offered`` / ``drr`` fairness modes
+(byte-weighted flows and the data-dependent quantized drain do not
+vectorize into the per-owner share call this runner batches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.fabric import _deprecation
+from repro.fabric.backend import (JNP_SCENARIO_FAIRNESS, BackendError,
+                                  KernelType, register_kernel)
+from repro.fabric.backend import jnp_kernels as K
+from repro.fabric.congestion import CongestionConfig
+from repro.fabric.engine import EngineResult, FabricEngine, JobResult
+from repro.fabric.stragglers import ComputeModel
+
+SUPPORTED_FAIRNESS = JNP_SCENARIO_FAIRNESS
+SEG_CAPACITY = 64                 # busy segments retained per owner
+
+# -- pregenerated random streams (feedback-free, cached per seed) -----------
+
+_COMPUTE_CACHE: Dict[tuple, np.ndarray] = {}
+_GAUSS_CACHE: Dict[tuple, np.ndarray] = {}
+
+
+def _compute_stream(cfg, n: int, seed: int, iters: int) -> np.ndarray:
+    """Replay ``ComputeModel.sample`` for ``iters`` iterations —
+    bit-identical to the stream the reference engine consumes (the model
+    holds no engine-fed state). Cached by (config, n, seed); the stream
+    is prefix-stable, so a longer request regenerates once."""
+    key = (cfg, n, seed)
+    hit = _COMPUTE_CACHE.get(key)
+    if hit is None or hit.shape[0] < iters:
+        cm = ComputeModel(cfg, n, seed=seed)
+        hit = np.array([cm.sample() for _ in range(iters)],
+                       dtype=np.float64)
+        _COMPUTE_CACHE[key] = hit
+    return hit[:iters]
+
+
+def _gauss_stream(seed: int, count: int) -> np.ndarray:
+    """The congestion AR(1) innovation stream: the engine's inlined
+    Box-Muller draws (``CongestionModel.advance``) replayed verbatim,
+    including the sin/cos pair cache carried across ``advance()`` calls —
+    bit-identical regardless of how the stream splits across iterations
+    or how ``random.gauss`` evolves between Python versions."""
+    key = (seed,)
+    hit = _GAUSS_CACHE.get(key)
+    if hit is None or hit.shape[0] < count:
+        rnd = random.Random(seed).random
+        cos, sin, log, sqrt = math.cos, math.sin, math.log, math.sqrt
+        twopi = 2.0 * math.pi
+        out = np.empty(count, dtype=np.float64)
+        g_next = None
+        for i in range(count):
+            z = g_next
+            if z is None:
+                x2pi = rnd() * twopi
+                g2rad = sqrt(-2.0 * log(1.0 - rnd()))
+                z = cos(x2pi) * g2rad
+                g_next = sin(x2pi) * g2rad
+            else:
+                g_next = None
+            out[i] = z
+        _GAUSS_CACHE[key] = hit = out
+    return hit[:count]
+
+
+# -- schedule encoding ------------------------------------------------------
+
+
+def _encode_schedule(sched, lidx: Dict[str, int], L: int):
+    """Freeze a CompiledSchedule into coefficient matrices.
+
+    ``total_s(eff)`` decomposes into stage maxima combined by sum/max
+    groups: ring = ``steps * max(entries)``; tree = ``sum_levels
+    2 * max(entries)`` (scaling by 2 distributes exactly over the sum);
+    hierarchical = ``max_intra_rings(steps_r * max_r) + inter``. Entry
+    time is ``num / (bw * eff[link]) + lat`` with unshared links mapped
+    to the constant-1.0 efficiency slot ``L``.
+
+    Returns ``(struct, arrays)`` — ``struct`` is the hashable group
+    signature (static); ``arrays`` the per-variant float coefficients.
+    """
+    from repro.fabric.collectives import (_HierSchedule, _RingSchedule,
+                                          _TreeSchedule, _ZeroSchedule)
+    stages: List[tuple] = []    # (m:int, entries:[(idx, num, bw, lat)])
+    groups: List[Tuple[str, Tuple[int, ...]]] = []
+
+    def add_stage(m: int, plan) -> int:
+        entries = [(lidx.get(ln, L), num, bw, lat)
+                   for (ln, num, bw, lat) in plan.entries]
+        stages.append((m, entries))
+        return len(stages) - 1
+
+    def add(sched) -> None:
+        if isinstance(sched, _ZeroSchedule):
+            return
+        if isinstance(sched, _RingSchedule):
+            groups.append(("sum", (add_stage(sched.steps, sched.plan),)))
+        elif isinstance(sched, _TreeSchedule):
+            groups.append(("sum", tuple(add_stage(2, plan)
+                                        for plan in sched.levels)))
+        elif isinstance(sched, _HierSchedule):
+            if sched.intra:
+                groups.append(("max", tuple(
+                    add_stage(r.steps, r.plan) for r in sched.intra)))
+            add(sched.inter)
+        else:
+            raise BackendError(
+                f"jnp backend cannot encode schedule "
+                f"{type(sched).__name__}")
+
+    add(sched)
+    S = len(stages)
+    E = max((len(e) for _, e in stages), default=0)
+    sidx = np.full((S, E), L, dtype=np.int32)
+    mask = np.zeros((S, E), dtype=bool)
+    num = np.zeros((S, E))
+    bw = np.ones((S, E))
+    lat = np.zeros((S, E))
+    m = np.zeros((S,))
+    for s, (mult, entries) in enumerate(stages):
+        m[s] = float(mult)
+        for e, (li, nm, b, lt) in enumerate(entries):
+            sidx[s, e], num[s, e], bw[s, e], lat[s, e] = li, nm, b, lt
+            mask[s, e] = True
+    struct = (tuple(groups), tuple(tuple(r) for r in sidx), E)
+    static = {"sidx": sidx, "mask": mask, "m": m, "groups": groups}
+    arrays = {"num": num, "bw": bw, "lat": lat}
+    return struct, static, arrays
+
+
+# -- per-variant prep -------------------------------------------------------
+
+
+class _Prep:
+    __slots__ = ("sig", "static", "data", "scenario", "topo", "jobs",
+                 "warmup")
+
+
+_ENGINE_CACHE: Dict[tuple, tuple] = {}
+
+
+def _build_jobs(scenario, topo):
+    """Topology + placed/compiled job runtimes for a scenario.
+
+    Cached on everything the build actually reads — topology spec, job
+    specs, fairness, base_seed (all frozen, hashable dataclasses) — and
+    NOT the congestion block, so a grid sweeping congestion floats (the
+    common dense sweep) builds its engine exactly once. The cached
+    ``_JobRuntime`` objects are never stepped — only their static fields
+    (spec, nodes, schedule, spanning, floor_denom, shared_demand) are
+    read — so sharing them across variants is safe."""
+    if topo is not None:            # hand-built topology: no spec key
+        with _deprecation.scenario_scope():
+            eng = FabricEngine(topo, list(scenario.jobs),
+                               congestion=scenario.congestion,
+                               base_seed=scenario.base_seed,
+                               fairness=scenario.policies.fairness)
+        return topo, eng._jobs
+    key = (scenario.topology, scenario.jobs, scenario.policies.fairness,
+           scenario.base_seed)
+    hit = _ENGINE_CACHE.get(key)
+    if hit is None:
+        topo = scenario.topology.build()
+        with _deprecation.scenario_scope():
+            eng = FabricEngine(topo, list(scenario.jobs),
+                               congestion=scenario.congestion,
+                               base_seed=scenario.base_seed,
+                               fairness=scenario.policies.fairness)
+        hit = _ENGINE_CACHE[key] = (topo, eng._jobs)
+    return hit
+
+
+def _prep(scenario, topo=None) -> _Prep:
+    if scenario.jobs is None:
+        raise BackendError(
+            "jnp backend runs static-jobs scenarios only; event/lifecycle "
+            "timelines run on the reference backend")
+    fairness = scenario.policies.fairness
+    if fairness not in SUPPORTED_FAIRNESS:
+        raise BackendError(
+            f"jnp backend supports fairness {SUPPORTED_FAIRNESS}, got "
+            f"{fairness!r}; run it on the reference backend")
+    topo, jobs = _build_jobs(scenario, topo)
+    J = len(jobs)
+    iters = scenario.iters
+    shared = [ln for ln, link in topo.links.items() if link.shared]
+    lidx = {ln: i for i, ln in enumerate(shared)}
+    L = len(shared)
+    cc = scenario.congestion if scenario.congestion is not None \
+        else CongestionConfig()
+
+    data: Dict[str, np.ndarray] = {}
+    sig_jobs = []
+    static_jobs = []
+    dem = np.zeros((J, L))
+    weights = np.zeros(J)
+    priorities = np.zeros(J)
+    floor = np.zeros(J)
+    ecmp = np.zeros(J)
+    for j, jr in enumerate(jobs):
+        # the engine's compute-seed formula (ComputeModel does not keep it)
+        cseed = jr.spec.seed if jr.spec.seed is not None \
+            else scenario.base_seed + 1 + 1009 * j
+        struct, sstat, sarr = _encode_schedule(jr.schedule, lidx, L)
+        data[f"num{j}"] = sarr["num"]
+        data[f"bw{j}"] = sarr["bw"]
+        data[f"lat{j}"] = sarr["lat"]
+        own = tuple(sorted(lidx[ln] for ln in jr.shared_demand))
+        for ln, b in jr.shared_demand.items():
+            dem[j, lidx[ln]] = b
+        weights[j] = jr.spec.weight
+        priorities[j] = float(jr.spec.priority)
+        floor[j] = jr.floor_denom
+        ecmp[j] = 1.0 + cc.ecmp_k * max(0, jr.spanning - 1)
+        pc = jr.spec.pacing
+        if jr.bank is not None:
+            data[f"comp{j}"] = _compute_stream(
+                jr.spec.stragglers, jr.n, cseed, iters)
+            data[f"pp{j}"] = np.array([
+                float(pc.warmup_iters), pc.cv_threshold,
+                pc.skew_threshold, pc.gain, pc.decay, pc.max_delay_frac])
+            pace_sig = (jr.n, pc.window, bool(pc.enabled))
+        else:
+            comp = _compute_stream(jr.spec.stragglers, jr.n, cseed, iters)
+            data[f"minc{j}"] = comp.min(axis=1)
+            data[f"maxc{j}"] = comp.max(axis=1)
+            pace_sig = None
+        sig_jobs.append((struct, own, pace_sig))
+        static_jobs.append({"sched": sstat, "own": np.array(own, np.int32),
+                            "pace": pace_sig, "n": jr.n})
+    data["dem"] = dem
+    data["w"] = weights
+    data["floor"] = floor
+    data["ecmp"] = ecmp
+    data["z"] = _gauss_stream(scenario.base_seed + 2,
+                              iters * L).reshape(iters, L) \
+        if L else np.zeros((iters, 0))
+    data["u0"] = np.full(L, cc.u_mean)
+    rho = cc.u_rho
+    data["cong"] = np.array([
+        rho, (1 - rho) * cc.u_mean, (1 - rho) ** 0.5, cc.u_sigma,
+        cc.u_max, cc.k_burst, cc.k_kick])
+
+    prep = _Prep()
+    prep.sig = (iters, J, L, fairness, tuple(sig_jobs),
+                tuple(priorities.tolist()) if fairness == "strict_priority"
+                else None,
+                tuple(tuple(row) for row in dem > 0.0))
+    prep.static = {"J": J, "L": L, "iters": iters, "fairness": fairness,
+                   "jobs": static_jobs, "priorities": priorities,
+                   "used": dem > 0.0}
+    prep.data = data
+    prep.scenario = scenario
+    prep.topo = topo
+    prep.jobs = jobs
+    prep.warmup = scenario.warmup
+    return prep
+
+
+# -- the compiled runner ----------------------------------------------------
+
+_RUNNERS: Dict[tuple, object] = {}
+
+
+def _relu(x):
+    return jnp.where(x > 0.0, x, 0.0)
+
+
+def _make_runner(static):
+    J = static["J"]
+    L = static["L"]
+    iters = static["iters"]
+    fairness = static["fairness"]
+    sjobs = static["jobs"]
+    priorities = static["priorities"]
+    used = static["used"]             # (J, L) static link-use mask
+    multi = J > 1
+    S = SEG_CAPACITY
+
+    def sched_total(j, eff_full, data):
+        sd = sjobs[j]["sched"]
+        if not sd["groups"]:
+            return jnp.zeros(())
+        t = data[f"num{j}"] / (data[f"bw{j}"] * eff_full[sd["sidx"]]) \
+            + data[f"lat{j}"]
+        t = jnp.where(sd["mask"], t, -jnp.inf)
+        smax = jnp.maximum(jnp.max(t, axis=1), 0.0) * sd["m"]
+        total = None
+        for kind, idxs in sd["groups"]:
+            if kind == "sum":
+                g = smax[idxs[0]]
+                for i in idxs[1:]:
+                    g = g + smax[i]
+            else:                     # max group: first-larger wins
+                g = jnp.zeros(())
+                for i in idxs:
+                    g = jnp.where(smax[i] > g, smax[i], g)
+            total = g if total is None else total + g
+        return total
+
+    def owner_shares(demands, i, data):
+        """Job i's allocator share on each of its links: ``demands`` is
+        ``(Lo, J)`` with slot 0 = the owner's unit demand."""
+        co = [k for k in range(J) if k != i]
+        if fairness == "wfq":
+            w = data["w"]
+            wvec = jnp.concatenate([w[i:i + 1], w[jnp.array(co)]])
+            return K.wfq_shares(demands, wvec)[:, 0]
+        if fairness == "strict_priority":
+            from repro.fabric.congestion import RESIDUAL_SHARE
+            pvec = np.concatenate([[priorities[i]],
+                                   [priorities[k] for k in co]])
+            share = K.strict_priority_shares(demands, pvec)[:, 0]
+            # the policy's starved-class floor (StrictPriorityFairness)
+            return jnp.where(share > RESIDUAL_SHARE, share,
+                             RESIDUAL_SHARE)
+        return K.maxmin_shares(demands)[:, 0]
+
+    def single(data):
+        cong = data["cong"]
+        rho, drift, iscale, sigma = cong[0], cong[1], cong[2], cong[3]
+        u_max, k_burst, k_kick = cong[4], cong[5], cong[6]
+
+        pace0 = []
+        for j in range(J):
+            if sjobs[j]["pace"] is not None:
+                n, w, _ = sjobs[j]["pace"]
+                pace0.append((jnp.zeros((n, w)), jnp.zeros((n, w)),
+                              jnp.zeros((n, w)), jnp.zeros(n),
+                              jnp.zeros(n)))
+            else:
+                pace0.append(jnp.zeros(()))    # scalar release clock
+        carry0 = (jnp.asarray(data["u0"]), tuple(pace0),
+                  jnp.zeros(J),                # prev_finish
+                  jnp.full((J, S), 0.0), jnp.full((J, S), -jnp.inf))
+
+        def step(carry, xs):
+            u, pace, prev_fin, seg_s, seg_e = carry
+            t = xs["t"]
+
+            # 1. arrival windows
+            first, last, skew, arrivals = [], [], [], []
+            for j in range(J):
+                if sjobs[j]["pace"] is not None:
+                    rel_arr = pace[j][4]
+                    arr = rel_arr + xs[f"comp{j}"]
+                    arrivals.append(arr)
+                    fj, lj = jnp.min(arr), jnp.max(arr)
+                else:
+                    rel = pace[j]
+                    arrivals.append(None)
+                    fj = rel + xs[f"minc{j}"]
+                    lj = rel + xs[f"maxc{j}"]
+                first.append(fj)
+                last.append(lj)
+                skew.append((lj - fj) / data["floor"][j])
+
+            # 2. AR(1) background congestion
+            u = rho * u + drift + iscale * (xs["z"] * sigma)
+            u = jnp.clip(u, 0.0, u_max)
+
+            # 3. per-job efficiencies, tentative durations, contention
+            effs = []
+            for j in range(J):
+                burst = 1.0 + k_burst * _relu(skew[j])
+                denom = burst * data["ecmp"][j]
+                eff = jnp.maximum(1e-3, (1.0 - u) / denom)
+                effs.append(jnp.concatenate([eff, jnp.ones(1)]))
+            durs0 = [sched_total(j, effs[j], data) for j in range(J)]
+
+            if multi:
+                s_v = jnp.stack(last)
+                e_v = s_v + jnp.stack(durs0)
+                new_effs = []
+                for i in range(J):
+                    own = sjobs[i]["own"]
+                    co = [k for k in range(J) if k != i]
+                    co_use = used[np.array(co)][:, own]     # (J-1, Lo)
+                    if own.size == 0 or not co_use.any():
+                        new_effs.append(effs[i])
+                        continue
+                    d_i = durs0[i]
+                    same = _relu(jnp.minimum(e_v[i], e_v[jnp.array(co)])
+                                 - jnp.maximum(s_v[i],
+                                               s_v[jnp.array(co)]))
+                    seg = K.segment_overlap(
+                        s_v[i], e_v[i], seg_s[jnp.array(co)],
+                        seg_e[jnp.array(co)])
+                    act = jnp.where(jnp.asarray(co_use.T),
+                                    (same + seg)[None, :], 0.0)
+                    d_safe = jnp.where(d_i > 0.0, d_i, 1.0)
+                    dem_co = jnp.minimum(1.0, act / d_safe)
+                    demands = jnp.concatenate(
+                        [jnp.ones((own.size, 1)), dem_co], axis=1)
+                    share = owner_shares(demands, i, data)
+                    active = (d_i > 0.0) & (act > 0.0).any(axis=1)
+                    share = jnp.where(active, share, 1.0)
+                    new_effs.append(
+                        effs[i].at[own].set(effs[i][own] * share))
+                effs = new_effs
+                durs = [sched_total(j, effs[j], data) for j in range(J)]
+                # record this round's busy segments (ring overwrite —
+                # stale entries clamp to zero overlap, no pruning needed)
+                slot = jnp.mod(t, S)
+                seg_s = seg_s.at[:, slot].set(jnp.stack(last))
+                seg_e = seg_e.at[:, slot].set(
+                    jnp.stack(last) + jnp.stack(durs))
+            else:
+                durs = durs0
+
+            # 4. queue-buildup kick, sequential per job
+            for j in range(J):
+                kk = k_kick * skew[j]
+                u_k = u + kk * (1.0 - u)
+                u_k = jnp.where(u_k > u_max, u_max, u_k)
+                u = jnp.where((k_kick > 0.0) & (skew[j] > 0.0), u_k, u)
+
+            # 5. BSP finish, step series, pacing, release updates
+            steps_t, new_pace, new_fin = [], [], []
+            for j in range(J):
+                finish = last[j] + durs[j]
+                steps_t.append(jnp.where(t > 0, finish - prev_fin[j],
+                                         finish))
+                new_fin.append(finish)
+                if sjobs[j]["pace"] is None:
+                    new_pace.append(finish)
+                    continue
+                n, w, enabled = sjobs[j]["pace"]
+                bw_, be_, bs_, delay, rel_arr = pace[j]
+                col = jnp.mod(t, w)
+                wt = last[j] - arrivals[j]
+                wt = jnp.where(wt > 0.0, wt, 0.0)
+                st = finish - rel_arr
+                st = jnp.where(st > 0.0, st, 0.0)
+                bw_ = bw_.at[:, col].set(wt)
+                be_ = be_.at[:, col].set(wt + delay)
+                bs_ = bs_.at[:, col].set(st)
+                pp = data[f"pp{j}"]
+                delays, delay = K.bank_decide(
+                    bw_, bs_, be_, delay, pos=jnp.mod(t + 1, w),
+                    count=jnp.minimum(t + 1, w), seen=t + 1,
+                    enabled=enabled, warmup_iters=pp[0],
+                    cv_threshold=pp[1], skew_threshold=pp[2],
+                    gain=pp[3], decay=pp[4], max_delay_frac=pp[5])
+                new_pace.append((bw_, be_, bs_, delay, finish + delays))
+
+            carry = (u, tuple(new_pace), jnp.stack(new_fin), seg_s,
+                     seg_e)
+            return carry, jnp.stack(steps_t)
+
+        xs = {"t": jnp.arange(iters), "z": jnp.asarray(data["z"])}
+        for j in range(J):
+            for k in (f"comp{j}", f"minc{j}", f"maxc{j}"):
+                if k in data:
+                    xs[k] = jnp.asarray(data[k])
+        _, steps = lax.scan(step, carry0, xs)
+        return steps                   # (iters, J)
+
+    return jax.jit(jax.vmap(single))
+
+
+def _get_runner(sig, static):
+    key = (sig, bool(jax.config.jax_enable_x64))
+    fn = _RUNNERS.get(key)
+    if fn is None:
+        fn = _RUNNERS[key] = _make_runner(static)
+    return fn
+
+
+# -- result assembly --------------------------------------------------------
+
+
+def _wrap(prep: _Prep, steps: np.ndarray):
+    """Build the standard Result shape from the scan output. Per-link
+    byte totals are ``iters x bytes_per_call(None)`` (see module
+    docstring); traces are empty (no per-rank record matrices)."""
+    from repro.fabric.scenario import Result
+    iters = prep.scenario.iters
+    job_results = []
+    fabric: Dict[str, float] = {}
+    for j, jr in enumerate(prep.jobs):
+        series = [float(x) for x in steps[prep.warmup:, j]]
+        link_bytes = {ln: iters * b for ln, b
+                      in jr.schedule.bytes_per_call(None).items()}
+        for ln, b in link_bytes.items():
+            fabric[ln] = fabric.get(ln, 0.0) + b
+        job_results.append(JobResult(jr.spec, jr.nodes, series,
+                                     link_bytes, [], algo=jr.algo))
+    raw = EngineResult(topo=prep.topo, jobs=job_results,
+                       link_bytes=fabric)
+    return Result(prep.scenario, raw, prep.topo)
+
+
+def run_scenarios(items: Sequence[Tuple[object, Optional[object]]]
+                  ) -> List[object]:
+    """Run ``(scenario, topo-or-None)`` pairs on the jnp backend.
+
+    Variants are grouped by structural signature (topology link
+    structure, job count/placement/schedule shape, fairness, pacing
+    windows, iteration count); each group compiles once and executes as
+    one vmapped program. Results come back in input order.
+    """
+    preps = [_prep(s, t) for s, t in items]
+    groups: Dict[tuple, List[int]] = {}
+    for i, p in enumerate(preps):
+        groups.setdefault(p.sig, []).append(i)
+    results: List[object] = [None] * len(preps)
+    for sig, idxs in groups.items():
+        static = preps[idxs[0]].static
+        data = {k: np.stack([preps[i].data[k] for i in idxs])
+                for k in preps[idxs[0]].data}
+        runner = _get_runner(sig, static)
+        out = np.asarray(runner(data))
+        for b, i in enumerate(idxs):
+            results[i] = _wrap(preps[i], out[b])
+    return results
+
+
+@register_kernel("scenario", KernelType.JNP)
+def run_scenario(scenario, topo=None):
+    """Single-scenario front door (``Scenario.run(backend="jnp")``)."""
+    return run_scenarios([(scenario, topo)])[0]

@@ -36,6 +36,27 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.fabric.topology import Topology
 
+# Residual service floor for shares that would otherwise reach 0.0: a
+# literal zero share never completes (and divides the cost model by zero).
+# Shared by the strict-priority starved-class floor
+# (:class:`repro.fabric.policies.StrictPriorityFairness`) and the
+# zero-byte-owner floor in :func:`offered_share`.
+RESIDUAL_SHARE = 1e-6
+
+
+def _check_demands(demands: Sequence[float], capacity: float) -> None:
+    """Allocator-boundary validation shared by every progressive-filling
+    allocator: demands must be finite non-negative rates and ``capacity``
+    a non-negative number. ``not (x >= 0.0)`` catches NaN (every
+    comparison with NaN is False), so a NaN demand cannot silently
+    propagate into negative or NaN allocations that break the
+    conservation invariant the property suites assert."""
+    if not capacity >= 0.0:
+        raise ValueError(f"capacity must be >= 0, got {capacity!r}")
+    for d in demands:
+        if not d >= 0.0:
+            raise ValueError(f"demands must be >= 0, got {d!r}")
+
 
 def maxmin_shares(demands: Sequence[float], capacity: float = 1.0
                   ) -> List[float]:
@@ -56,7 +77,12 @@ def maxmin_shares(demands: Sequence[float], capacity: float = 1.0
         starve small flows next to heavy ones;
       * equal demands split capacity equally (offered-bytes equivalence for
         symmetric flows).
+
+    Negative or NaN demands (or capacity) raise :class:`ValueError` at the
+    boundary — silently accepting them emits negative/NaN allocations that
+    violate the conservation invariant.
     """
+    _check_demands(demands, capacity)
     n = len(demands)
     alloc = [0.0] * n
     if n == 0:
@@ -107,6 +133,7 @@ def wfq_shares(demands: Sequence[float],
         return maxmin_shares(demands, capacity)
     if len(weights) != n:
         raise ValueError(f"{n} demands but {len(weights)} weights")
+    _check_demands(demands, capacity)
     w_left = 0.0
     for w in weights:
         if not w > 0.0:
@@ -179,7 +206,12 @@ def drr_shares(demands: Sequence[float],
         difference;
       * ring-order bias is bounded: raising ``rounds`` converges to the
         weighted fluid allocation.
+
+    Negative or NaN demands (or capacity) raise :class:`ValueError` at the
+    boundary, mirroring :func:`maxmin_shares` — a NaN backlog would spin
+    the deficit loop forever and a negative one emits negative sends.
     """
+    _check_demands(demands, capacity)
     n = len(demands)
     alloc = [0.0] * n
     if n == 0:
@@ -242,11 +274,18 @@ def offered_share(own_bytes: float, d_i: float,
     duration ``d_i``: each co-tenant flow ``(overlap_s, offered_bytes)``
     contributes its bytes scaled by how much of the window it overlaps;
     the owner keeps ``own / total``. Shared by both engines so the model
-    cannot fork."""
+    cannot fork.
+
+    The share is floored at :data:`RESIDUAL_SHARE` (mirroring the
+    strict-priority starved-class floor): a zero-byte collective next to
+    co-tenant flows (``total > own_bytes`` with ``own_bytes == 0.0``)
+    would otherwise keep share ``0.0``, which downstream duration
+    division turns into ``inf``."""
     total = own_bytes
     for ov, b in flows:
         total += b if ov >= d_i else (ov / d_i) * b
-    return own_bytes / total if total > own_bytes else 1.0
+    share = own_bytes / total if total > own_bytes else 1.0
+    return share if share > RESIDUAL_SHARE else RESIDUAL_SHARE
 
 
 def maxmin_share(d_i: float, owner_overlaps: Sequence[float]) -> float:

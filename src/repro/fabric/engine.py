@@ -263,6 +263,46 @@ class _JobRuntime:
         self.trace: list = []
 
 
+def link_overlaps(i: int, ln: str, s_i: float, e_i: float,
+                  jobs: Sequence["_JobRuntime"],
+                  spans: Sequence[Tuple[float, float]],
+                  segs: Sequence[Tuple[float, float, float, int]],
+                  ) -> Tuple[List[Tuple[float, float]], Dict[int, float]]:
+    """Busy-segment contention accounting for job ``i`` on shared link
+    ``ln`` over its tentative window ``[s_i, e_i)`` — the reference
+    ``segment_overlap`` kernel (:mod:`repro.fabric.backend`).
+
+    Co-tenant demand overlapping the window comes from two places: other
+    jobs' *current* tentative collectives (``spans``, same-round
+    contention) and the recorded busy segments of their past collectives
+    (``segs``, the per-link ``(start, end, demand_bytes, owner)`` rows —
+    BSP clocks drift apart, so a fast job steps many times inside one
+    long co-tenant collective). Returns the per-flow list
+    ``(overlap_s, offered_bytes)`` the byte-weighted policies consume and
+    the per-owner aggregated activity the owner-flow policies consume.
+    """
+    flows: List[Tuple[float, float]] = []
+    activity: Dict[int, float] = {}
+    for k, other in enumerate(jobs):
+        if k == i:
+            continue
+        d_k = other.shared_demand.get(ln)
+        if not d_k:
+            continue
+        ov = min(e_i, spans[k][1]) - max(s_i, spans[k][0])
+        if ov > 0.0:
+            flows.append((ov, d_k))
+            activity[k] = activity.get(k, 0.0) + ov
+    for (s_k, e_k, d_k, k) in segs:
+        if k == i:
+            continue
+        ov = min(e_i, e_k) - max(s_i, s_k)
+        if ov > 0.0:
+            flows.append((ov, d_k))
+            activity[k] = activity.get(k, 0.0) + ov
+    return flows, activity
+
+
 class FabricEngine:
     """Steps N jobs against one topology under shared congestion state."""
 
@@ -350,25 +390,9 @@ class FabricEngine:
                     # — offered weights each flow by its bytes; the owner-
                     # aggregated models see activity per owner (capped at
                     # the window) with that owner's weight and priority
-                    flows: List[Tuple[float, float]] = []
-                    activity: Dict[int, float] = {}
-                    for k, other in enumerate(jobs):
-                        if k == i:
-                            continue
-                        d_k = other.shared_demand.get(ln)
-                        if not d_k:
-                            continue
-                        ov = min(e_i, spans[k][1]) - max(s_i, spans[k][0])
-                        if ov > 0.0:
-                            flows.append((ov, d_k))
-                            activity[k] = activity.get(k, 0.0) + ov
-                    for (s_k, e_k, d_k, k) in segments.get(ln, ()):
-                        if k == i:
-                            continue
-                        ov = min(e_i, e_k) - max(s_i, s_k)
-                        if ov > 0.0:
-                            flows.append((ov, d_k))
-                            activity[k] = activity.get(k, 0.0) + ov
+                    flows, activity = link_overlaps(
+                        i, ln, s_i, e_i, jobs, spans,
+                        segments.get(ln, ()))
                     if not flows:
                         continue
                     share = policy.link_share(

@@ -47,8 +47,9 @@ from __future__ import annotations
 from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple, Union)
 
-from repro.fabric.congestion import (drr_share, maxmin_share, offered_share,
-                                     strict_priority_share, wfq_share)
+from repro.fabric.congestion import (RESIDUAL_SHARE, drr_share, maxmin_share,
+                                     offered_share, strict_priority_share,
+                                     wfq_share)
 
 # one co-tenant flow overlapping the window: (overlap_s, offered_bytes)
 Flow = Tuple[float, float]
@@ -249,7 +250,8 @@ class StrictPriorityFairness(FairnessPolicy):
     """
 
     name = "strict_priority"
-    RESIDUAL_SHARE = 1e-6
+    # single source with congestion.offered_share's zero-byte-owner floor
+    RESIDUAL_SHARE = RESIDUAL_SHARE
 
     def link_share(self, d_i, own_bytes, own_weight, own_priority, flows,
                    owners):

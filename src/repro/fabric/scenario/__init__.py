@@ -158,6 +158,12 @@ class Policies:
     ``replan_delay_s=None`` (or explicit ``restore_read_bw_Bps`` /
     ``restore_overhead_s``) derives re-place stalls from the
     checkpoint-restore cost model instead of the 0.5 s constant.
+
+    ``backend`` is the default execution backend for ``run()`` — a
+    :class:`repro.fabric.backend.KernelType` name (``"reference"`` is the
+    sequential Python engine and the bit-exactness spec; ``"jnp"`` the
+    batched compiled runner). ``Scenario.run(backend=...)`` and
+    ``ScenarioGrid.run(backend=...)`` override it per call.
     """
     fairness: str = "maxmin"
     scheduler: str = "fifo"
@@ -165,12 +171,17 @@ class Policies:
     replan_delay_s: Optional[float] = 0.5
     restore_read_bw_Bps: Optional[float] = None
     restore_overhead_s: Optional[float] = None
+    backend: str = "reference"
 
     def validate(self) -> None:
         if self.fairness not in FAIRNESS:
             raise ScenarioError(
                 f"unknown fairness mode {self.fairness!r}; one of "
                 f"{FAIRNESS.names()}")
+        from repro.fabric.backend import BACKENDS
+        if self.backend not in BACKENDS:
+            raise ScenarioError(
+                f"unknown backend {self.backend!r}; one of {BACKENDS}")
         if self.scheduler not in SCHEDULERS:
             raise ScenarioError(
                 f"unknown scheduler {self.scheduler!r}; one of "
@@ -343,6 +354,18 @@ class Scenario:
             raise ScenarioError(
                 "exactly one of jobs= (static population) and events= "
                 "(timeline) must be given")
+        if self.policies.backend == "jnp":
+            # eager: the batched runner's scope is known at declaration
+            from repro.fabric.backend import JNP_SCENARIO_FAIRNESS
+            if timed:
+                raise ScenarioError(
+                    "backend='jnp' runs static-jobs scenarios only; "
+                    "event timelines need backend='reference'")
+            if self.policies.fairness not in JNP_SCENARIO_FAIRNESS:
+                raise ScenarioError(
+                    f"backend='jnp' supports fairness "
+                    f"{JNP_SCENARIO_FAIRNESS}, got "
+                    f"{self.policies.fairness!r}")
         if static:
             if not self.jobs:
                 raise ScenarioError("jobs= must name at least one tenant")
@@ -501,13 +524,27 @@ class Scenario:
         return dataclasses.replace(self, **kw)
 
     # -- the front door ----------------------------------------------------
-    def run(self, topo: Optional[Topology] = None) -> "Result":
-        """Build the backend engine, step it, and wrap the outcome.
+    def run(self, topo: Optional[Topology] = None,
+            backend: Optional[str] = None) -> "Result":
+        """Run the scenario on an execution backend and wrap the outcome.
 
         ``topo`` overrides the built topology (escape hatch for callers
         holding a hand-constructed :class:`Topology`; such scenarios
         still validate against their declared ``topology`` spec).
+        ``backend`` (a :class:`repro.fabric.backend.KernelType` name)
+        overrides ``policies.backend`` for this call; the default
+        ``"reference"`` is the sequential Python engine and stays
+        bit-identical to the pre-backend behavior.
         """
+        from repro.fabric.backend import KernelType, get_kernel
+        bk = KernelType.parse(backend,
+                              KernelType.parse(self.policies.backend))
+        return get_kernel("scenario", bk)(self, topo)
+
+    def _run_reference(self, topo: Optional[Topology] = None) -> "Result":
+        """The sequential engine loop — the ``reference`` backend's
+        registered ``scenario`` kernel (and the executable spec every
+        other backend is measured against)."""
         topo = topo if topo is not None else self.topology.build()
         with _deprecation.scenario_scope():
             if self.jobs is not None:
@@ -735,8 +772,34 @@ class ScenarioGrid:
     def scenarios(self) -> List[Scenario]:
         return [scn for _, scn in self._variants]
 
-    def run(self) -> List[Tuple[Dict[str, Any], Result]]:
-        return [(params, scn.run()) for params, scn in self._variants]
+    def run(self, backend: Optional[str] = None
+            ) -> List[Tuple[Dict[str, Any], Result]]:
+        """Run every variant; ``backend`` overrides each variant's
+        ``policies.backend`` for this sweep. Variants resolving to the
+        ``jnp`` backend run as *one batched program per structural group*
+        (:func:`repro.fabric.backend.jnp_engine.run_scenarios`) instead
+        of sequential engine loops; results keep grid order either way.
+        """
+        from repro.fabric.backend import KernelType
+        resolved = [
+            KernelType.parse(backend,
+                             KernelType.parse(scn.policies.backend))
+            for _, scn in self._variants]
+        out: List[Optional[Tuple[Dict[str, Any], Result]]] = \
+            [None] * len(self._variants)
+        batched = [i for i, bk in enumerate(resolved)
+                   if bk is KernelType.JNP]
+        batched_set = set(batched)
+        for i, (params, scn) in enumerate(self._variants):
+            if i not in batched_set:
+                out[i] = (params, scn.run(backend=resolved[i].value))
+        if batched:
+            from repro.fabric.backend.jnp_engine import run_scenarios
+            results = run_scenarios(
+                [(self._variants[i][1], None) for i in batched])
+            for i, res in zip(batched, results):
+                out[i] = (self._variants[i][0], res)
+        return out
 
     # columns to_csv emits per (variant, tenant) row, pulled from
     # Result.diagnostics(); missing keys (e.g. inference metrics on a

@@ -1,0 +1,433 @@
+"""Kernel-registry backend equivalence suite.
+
+Every kernel in :data:`repro.fabric.backend.EQUIVALENCE_TIERS` is
+asserted here at its *declared* tier — the tier table is the contract,
+and this file is its enforcement:
+
+  exact : bit-identical to the reference Python under float64
+          (progressive-filling allocators, offered-bytes share — same
+          operation sequence, stable sort, left-to-right sums)
+  ulp   : within `tol` ULPs under float64 (pacing decide, busy-segment
+          overlap — summation order legitimately differs)
+  rtol  : whole-scenario series within relative `tol` under float64;
+          the float32 production dtype is asserted at a looser bound
+          (XLA fuses multiply-adds, and the simulation feeds rounding
+          differences back through the AR(1) congestion state)
+
+plus the registry mechanics (parse/dispatch/duplicate rejection, the
+reserved ``pallas`` slot) and the ``Scenario``/``ScenarioGrid``/
+``Policies.backend`` selection surfaces. Runs in tier-1; the heavier
+grid sweep carries the slow marker (CI's backend-equivalence job also
+runs ``benchmarks.run --only backend`` for the 50x target).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.fabric.backend import (BACKENDS, EQUIVALENCE_TIERS,
+                                  JNP_SCENARIO_FAIRNESS, KERNELS,
+                                  BackendError, KernelType,
+                                  available_backends, get_kernel,
+                                  register_kernel)
+
+try:
+    import jax
+    HAVE_JAX = True
+except ImportError:                   # registry tests still run
+    HAVE_JAX = False
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+
+
+def _within_ulps(got, want, n_ulps):
+    """True when ``got`` is within ``n_ulps`` float64 ULPs of ``want``
+    elementwise (``np.spacing`` is the ULP at each magnitude)."""
+    a = np.asarray(got, dtype=np.float64)
+    b = np.asarray(want, dtype=np.float64)
+    bound = n_ulps * np.spacing(np.maximum(np.abs(a), np.abs(b)))
+    return bool(np.all(np.abs(a - b) <= bound))
+
+
+# ---------------------------------------------------------------------------
+# registry mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_catalogue_and_tier_table_agree():
+    assert set(EQUIVALENCE_TIERS) == set(KERNELS)
+    assert BACKENDS == ("reference", "jnp", "pallas")
+    for tier, tol in EQUIVALENCE_TIERS.values():
+        assert tier in ("exact", "ulp", "rtol")
+        assert tol >= 0.0
+        assert (tol == 0.0) == (tier == "exact")
+
+
+def test_kernel_type_parse():
+    assert KernelType.parse("jnp") is KernelType.JNP
+    assert KernelType.parse("JNP") is KernelType.JNP
+    assert KernelType.parse(None) is KernelType.REFERENCE
+    assert KernelType.parse(None, KernelType.JNP) is KernelType.JNP
+    assert KernelType.parse(KernelType.PALLAS) is KernelType.PALLAS
+    with pytest.raises(BackendError, match="unknown backend"):
+        KernelType.parse("cuda")
+
+
+def test_unknown_kernel_and_reserved_backend_raise():
+    with pytest.raises(BackendError, match="unknown kernel"):
+        get_kernel("fft", KernelType.REFERENCE)
+    # pallas is an enum slot with no registrations — requesting it must
+    # be a clean BackendError, not a KeyError
+    with pytest.raises(BackendError, match="no 'pallas' implementation"):
+        get_kernel("maxmin_shares", KernelType.PALLAS)
+
+
+def test_duplicate_registration_rejected():
+    get_kernel("maxmin_shares", KernelType.REFERENCE)  # force the load
+    with pytest.raises(ValueError, match="already registered"):
+        register_kernel("maxmin_shares", KernelType.REFERENCE,
+                        lambda *a: None)
+    with pytest.raises(ValueError, match="unknown kernel"):
+        register_kernel("fft", KernelType.REFERENCE, lambda *a: None)
+
+
+@needs_jax
+def test_every_kernel_has_both_implementations():
+    for name in KERNELS:
+        assert set(available_backends(name)) == {"reference", "jnp"}
+
+
+# ---------------------------------------------------------------------------
+# exact tier: allocators + offered share, bit-identical under float64
+# ---------------------------------------------------------------------------
+
+
+def _rand_demands(rng, n):
+    # zeros included on purpose: they exercise the stable-sort prefix
+    return [0.0 if rng.random() < 0.2 else rng.uniform(0.0, 2.0)
+            for _ in range(n)]
+
+
+@needs_jax
+@pytest.mark.parametrize("name", ["maxmin_shares", "wfq_shares",
+                                  "strict_priority_shares", "drr_shares"])
+def test_allocator_kernels_bit_exact_under_x64(name):
+    tier, tol = EQUIVALENCE_TIERS[name]
+    assert (tier, tol) == ("exact", 0.0)
+    ref = get_kernel(name, KernelType.REFERENCE)
+    fast = get_kernel(name, "jnp")
+    rng = random.Random(5)
+    with jax.experimental.enable_x64():
+        for trial in range(60):
+            n = rng.randint(1, 8)
+            d = _rand_demands(rng, n)
+            cap = rng.choice([0.5, 1.0, 2.0])
+            if name == "strict_priority_shares":
+                prios = np.array([float(rng.randint(0, 3))
+                                  for _ in range(n)])
+                want = ref(d, list(prios), cap)
+                got = fast(np.array(d), prios, cap)
+            elif name in ("wfq_shares", "drr_shares"):
+                w = [rng.uniform(0.1, 2.0) for _ in range(n)]
+                want = ref(d, w, cap)
+                got = fast(np.array(d), np.array(w), cap)
+            else:
+                want = ref(d, cap)
+                got = fast(np.array(d), cap)
+            got = np.asarray(got)
+            assert got.dtype == np.float64
+            assert list(got) == want, (name, trial, d, cap)
+
+
+@needs_jax
+def test_offered_share_kernel_bit_exact_under_x64():
+    ref = get_kernel("offered_share", KernelType.REFERENCE)
+    fast = get_kernel("offered_share", "jnp")
+    rng = random.Random(6)
+    with jax.experimental.enable_x64():
+        for trial in range(60):
+            d_i = rng.uniform(0.05, 2.0)
+            # own_bytes == 0.0 hits the RESIDUAL_SHARE floor on both paths
+            own = 0.0 if rng.random() < 0.2 else rng.uniform(0.0, 5.0)
+            k = rng.randint(1, 6)
+            flows = [(rng.uniform(0.0, 3.0), rng.uniform(0.0, 5.0))
+                     for _ in range(k)]
+            want = ref(own, d_i, flows)
+            got = float(fast(own, d_i,
+                             np.array([f[0] for f in flows]),
+                             np.array([f[1] for f in flows])))
+            assert got == want, (trial, own, d_i, flows)
+
+
+@needs_jax
+def test_maxmin_kernel_zero_padding_is_exact():
+    """vmap batching pads ragged co-tenant lists with zero demands; for
+    the max-min allocator the padded result is *bit-identical* on the
+    real entries (zeros stable-sort first, consume nothing, and the
+    positional ``remaining / (n - pos)`` arithmetic is unchanged) — the
+    property the jnp engine's fixed-width owner matrices rely on."""
+    fast = get_kernel("maxmin_shares", "jnp")
+    rng = random.Random(13)
+    with jax.experimental.enable_x64():
+        for _ in range(30):
+            n = rng.randint(1, 6)
+            d = [rng.uniform(0.0, 2.0) for _ in range(n)]
+            base = np.asarray(fast(np.array(d), 1.0))
+            for pad in (1, 3):
+                padded = np.asarray(fast(np.array(d + [0.0] * pad), 1.0))
+                assert list(padded[:n]) == list(base)
+                assert list(padded[n:]) == [0.0] * pad
+
+
+@needs_jax
+@pytest.mark.parametrize("name", ["maxmin_shares", "wfq_shares"])
+def test_allocator_kernels_vmap_batch_matches_per_row(name):
+    """One batched call is the whole point of the backend — it must give
+    the same bits as calling the kernel row by row."""
+    fast = get_kernel(name, "jnp")
+    rng = np.random.default_rng(3)
+    D = rng.uniform(0.0, 2.0, size=(16, 5))
+    with jax.experimental.enable_x64():
+        if name == "wfq_shares":
+            W = rng.uniform(0.1, 2.0, size=(16, 5))
+            batched = np.asarray(jax.vmap(
+                lambda d, w: fast(d, w, 1.0))(D, W))
+            rows = np.stack([np.asarray(fast(D[i], W[i], 1.0))
+                             for i in range(16)])
+        else:
+            batched = np.asarray(jax.vmap(lambda d: fast(d, 1.0))(D))
+            rows = np.stack([np.asarray(fast(D[i], 1.0))
+                             for i in range(16)])
+    assert (batched == rows).all()
+
+
+# ---------------------------------------------------------------------------
+# ulp tier: segment overlap + pacing decide
+# ---------------------------------------------------------------------------
+
+
+@needs_jax
+def test_segment_overlap_kernel_within_ulp_tier():
+    tier, tol = EQUIVALENCE_TIERS["segment_overlap"]
+    assert tier == "ulp"
+    fast = get_kernel("segment_overlap", "jnp")
+    rng = random.Random(7)
+    with jax.experimental.enable_x64():
+        for trial in range(60):
+            k = rng.randint(1, 12)
+            starts = np.array([rng.uniform(0.0, 10.0) for _ in range(k)])
+            ends = np.array([s + rng.uniform(-1.0, 4.0) for s in starts])
+            for j in range(k):                # empty ring slots: end=-inf
+                if rng.random() < 0.25:
+                    ends[j] = -np.inf
+            s_i = rng.uniform(0.0, 10.0)
+            e_i = s_i + rng.uniform(0.0, 5.0)
+            # the reference arithmetic inside engine.link_overlaps:
+            # clamp-and-skip guard, left-to-right accumulation
+            want = 0.0
+            for s_k, e_k in zip(starts, ends):
+                ov = min(e_i, e_k) - max(s_i, s_k)
+                if ov > 0.0:
+                    want += ov
+            got = float(fast(s_i, e_i, starts, ends))
+            assert _within_ulps(got, want, tol), (trial, got, want)
+
+
+@needs_jax
+def test_pacing_decide_kernel_within_ulp_tier():
+    """The jnp kernel consumes the same ``(n, window)`` ring-buffer
+    state a live :class:`PacingBank` holds; with the cursor at 0 (whole
+    window wraps) the two must agree within the declared ULP budget on
+    both the bounded delays and the carried internal delay state."""
+    from repro.configs.base import PacingConfig
+    from repro.core.pacing import PacingBank
+
+    tier, tol = EQUIVALENCE_TIERS["pacing_decide"]
+    assert tier == "ulp"
+    fast = get_kernel("pacing_decide", "jnp")
+    cfg = PacingConfig(enabled=True, window=6, cv_threshold=0.05,
+                       skew_threshold=0.04, max_delay_frac=0.5, gain=0.8,
+                       decay=0.8, warmup_iters=4)
+    n = 8
+    bank = PacingBank(cfg, n)
+    rng = random.Random(9)
+    with jax.experimental.enable_x64():
+        for _ in range(5):
+            for _ in range(cfg.window):   # full wraps keep the cursor at 0
+                bank.observe(
+                    np.array([abs(rng.gauss(0.02, 0.03))
+                              for _ in range(n)]),
+                    np.array([0.2 + rng.gauss(0.0, 0.02)
+                              for _ in range(n)]))
+            assert bank._pos == 0
+            waits, steps = bank._bw.copy(), bank._bs.copy()
+            early, delay = bank._be.copy(), bank._delay.copy()
+            seen = bank._seen
+            want = bank.decide()          # mutates bank._delay
+            got, new_delay = fast(waits, steps, early, delay, seen, cfg)
+            assert _within_ulps(np.asarray(got), want, tol)
+            assert _within_ulps(np.asarray(new_delay), bank._delay, tol)
+
+
+# ---------------------------------------------------------------------------
+# rtol tier: whole scenarios, plus the selection surfaces
+# ---------------------------------------------------------------------------
+
+
+def _scenario(fairness="maxmin", *, backend=None, paced=False, name="bk"):
+    from repro.fabric.congestion import CongestionConfig
+    from repro.fabric.engine import JobSpec
+    from repro.fabric.scenario import Policies, Scenario, TopologySpec
+
+    pol = {} if backend is None else {"backend": backend}
+    if fairness == "strict_priority":
+        jobs = [JobSpec("a", 16, priority=5), JobSpec("b", 16, priority=0)]
+    else:
+        jobs = [JobSpec("a", 16), JobSpec("b", 16)]
+    if paced:
+        from repro.configs.base import PacingConfig
+        import dataclasses
+        pc = PacingConfig(enabled=True, window=6, cv_threshold=0.05,
+                          skew_threshold=0.04, max_delay_frac=0.5,
+                          gain=0.8, decay=0.8, warmup_iters=4)
+        jobs = [dataclasses.replace(j, pacing=pc) for j in jobs]
+    return Scenario(
+        name=name,
+        topology=TopologySpec(n_nodes=32, nodes_per_leaf=8),
+        jobs=jobs,
+        congestion=CongestionConfig(k_kick=0.25),
+        policies=Policies(fairness=fairness, **pol),
+        iters=40, warmup=5)
+
+
+def _series_close(ref_res, jnp_res, rtol):
+    for jname in ("a", "b"):
+        a = np.array(ref_res.series(jname))
+        b = np.array(jnp_res.series(jname))
+        assert a.shape == b.shape and len(a) > 0
+        assert np.allclose(a, b, rtol=rtol, atol=0.0), \
+            (jname, float(np.max(np.abs(a - b) / np.abs(a))))
+
+
+@needs_jax
+@pytest.mark.parametrize("fairness", list(JNP_SCENARIO_FAIRNESS))
+def test_scenario_kernel_rtol_tier_under_x64(fairness):
+    tier, tol = EQUIVALENCE_TIERS["scenario"]
+    assert tier == "rtol"
+    scn = _scenario(fairness)
+    ref = scn.run()                       # reference backend (default)
+    with jax.experimental.enable_x64():
+        fast = scn.run(backend="jnp")
+    _series_close(ref, fast, tol)
+
+
+@needs_jax
+def test_scenario_kernel_float32_production_tolerance():
+    """The float32 default is the production fast path; per-iteration
+    rounding feeds back through the AR(1) congestion state, so the bound
+    is necessarily looser than the float64 tier."""
+    scn = _scenario("maxmin")
+    ref = scn.run()
+    fast = scn.run(backend="jnp")
+    _series_close(ref, fast, 5e-2)
+    for jname in ("a", "b"):
+        a = np.array(ref.series(jname))
+        b = np.array(fast.series(jname))
+        assert abs(float(b.mean()) / float(a.mean()) - 1.0) < 1e-2
+
+
+@needs_jax
+def test_paced_scenario_equivalence_under_x64():
+    scn = _scenario("maxmin", paced=True)
+    ref = scn.run()
+    with jax.experimental.enable_x64():
+        fast = scn.run(backend="jnp")
+    _series_close(ref, fast, EQUIVALENCE_TIERS["scenario"][1])
+
+
+@needs_jax
+def test_policies_backend_field_is_the_declarative_default():
+    """``Policies.backend`` selects jnp without a ``run()`` argument, the
+    field survives the JSON round trip, and an explicit ``run(backend=)``
+    argument overrides the field in both directions."""
+    from repro.fabric.scenario import Scenario
+
+    scn = _scenario("maxmin", backend="jnp")
+    assert Scenario.from_json(scn.to_json()).policies.backend == "jnp"
+    via_field = scn.run()
+    via_arg = _scenario("maxmin").run(backend="jnp")
+    for jname in ("a", "b"):
+        assert via_field.series(jname) == via_arg.series(jname)
+    # override: the jnp-default scenario forced back onto the reference
+    # path is bit-identical to a plain reference run
+    ref = scn.run(backend="reference")
+    want = _scenario("maxmin").run()
+    for jname in ("a", "b"):
+        assert ref.series(jname) == want.series(jname)
+
+
+@needs_jax
+def test_grid_batched_run_matches_per_variant_reference():
+    """`ScenarioGrid.run(backend="jnp")` batches every variant through
+    one vmapped program; results must come back in grid order and match
+    each variant's sequential reference run."""
+    from repro.fabric.scenario import ScenarioGrid
+
+    grid = ScenarioGrid(_scenario("maxmin"), {
+        "congestion.u_mean": [0.2, 0.35],
+        "congestion.k_burst": [0.5, 1.5],
+    })
+    results = grid.run(backend="jnp")
+    variants = grid.scenarios()
+    assert len(results) == len(variants) == 4
+    for (params, res), scn in zip(results, variants):
+        _series_close(scn.run(), res, 5e-2)
+
+
+# ---------------------------------------------------------------------------
+# unsupported-feature error paths
+# ---------------------------------------------------------------------------
+
+
+def test_policies_rejects_unknown_backend():
+    from repro.fabric.scenario import Policies, ScenarioError
+    with pytest.raises(ScenarioError, match="unknown backend"):
+        Policies(backend="cuda").validate()
+
+
+def test_scenario_rejects_jnp_with_unsupported_fairness():
+    from repro.fabric.scenario import ScenarioError
+    with pytest.raises(ScenarioError, match="fairness"):
+        _scenario("offered", backend="jnp").validate()
+
+
+def test_scenario_run_rejects_reserved_pallas_backend():
+    with pytest.raises(BackendError, match="pallas"):
+        _scenario("maxmin").run(backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# heavier sweep (slow marker; CI backend-equivalence job)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@needs_jax
+def test_grid_batched_equivalence_wide_sweep():
+    """A wider, longer sweep of the batched runner against the
+    sequential reference — every variant, both jobs, float32 bound."""
+    import dataclasses
+
+    from repro.fabric.scenario import ScenarioGrid
+
+    base = dataclasses.replace(_scenario("wfq", name="bk-wide"), iters=200,
+                               warmup=20)
+    grid = ScenarioGrid(base, {
+        "congestion.u_mean": [0.15, 0.25, 0.35, 0.45],
+        "congestion.k_burst": [0.5, 1.0, 1.5, 2.0],
+    })
+    results = grid.run(backend="jnp")
+    variants = grid.scenarios()
+    assert len(results) == 16
+    for (params, res), scn in zip(results, variants):
+        _series_close(scn.run(), res, 5e-2)

@@ -263,3 +263,33 @@ def test_bank_respects_warmup_and_disabled():
     for _ in range(9):
         bank.observe(np.full(4, 0.5), np.full(4, 0.2))
         assert bank.decide().tolist() == [0.0] * 4
+
+
+def test_bank_matches_scalar_on_nan_and_negative_observations():
+    """Regression (backend PR): NaN wait/step observations — a dead
+    rank's sentinel, or an uninitialized timer — must sanitize to 0.0 on
+    *both* paths. The bank's old ``np.maximum(0.0, x)`` propagated NaN
+    while the scalar controller's ``_clamp`` kept 0.0, silently breaking
+    the bit-equality contract between them; both now use the
+    ``where(x > 0, x, 0)`` form, so the two stay float-exact even under
+    adversarial inputs."""
+    cfg = mk_cfg(window=6, skew_threshold=0.04)
+    n = 8
+    ctrls = [PacingController(cfg) for _ in range(n)]
+    bank = PacingBank(cfg, n)
+    rng = random.Random(11)
+    bad = [float("nan"), -0.5, 0.0]
+    for _ in range(80):
+        waits = [rng.choice(bad) if rng.random() < 0.3
+                 else abs(rng.gauss(0.02, 0.02)) for _ in range(n)]
+        steps = [rng.choice(bad) if rng.random() < 0.2
+                 else 0.2 + rng.gauss(0.0, 0.02) for _ in range(n)]
+        scalar = []
+        for r in range(n):
+            ctrls[r].observe(waits[r], steps[r])
+            scalar.append(ctrls[r].decide().delay)
+        bank.observe(np.asarray(waits), np.asarray(steps))
+        out = bank.decide()
+        assert not np.isnan(out).any()
+        assert out.tolist() == scalar
+    assert bank.activations.tolist() == [c.activations for c in ctrls]

@@ -237,3 +237,42 @@ def test_pacing_bounded_in_simulation():
         med = meds[len(meds) // 2]
         for rec in rank_recs:
             assert rec.pacing_delay <= 0.6 * med * 1.5  # frac=0.6 + slack
+
+
+def _hand_topology(n_shared: int):
+    """A topology with *exactly* ``n_shared`` shared links. The fat-tree
+    and TPU-pod constructors cannot produce zero shared links, so the
+    congestion model's no-shared-links edge case needs a hand-built one."""
+    from repro.fabric.topology import Link, Topology
+    links = {f"s{i}": Link(f"s{i}", 50.0, 5e-6, shared=True)
+             for i in range(n_shared)}
+    links["leaf"] = Link("leaf", 50.0, 5e-6, shared=False)
+    return Topology(name=f"hand{n_shared}", n_ranks=2, links=links)
+
+
+@pytest.mark.parametrize("n_shared", [0, 1, 3, 4])
+def test_congestion_advance_preserves_gauss_stream(n_shared):
+    """`CongestionModel.advance` inlines ``random.gauss`` (with its
+    Box-Muller pair cache) for speed; the optimization is only sound if
+    the RNG ends up in *exactly* the state ``n_shared`` sequential
+    ``gauss(0, 1)`` draws would leave — including ``gauss_next`` — for
+    every link-count parity:
+
+      * 0 links: advance() must be a stream no-op, not eat a pair;
+      * 1 / odd links: the cached second gaussian must survive across
+        advance() boundaries and be consumed by the *next* call;
+      * even links: the cache is empty at every boundary.
+
+    ``getstate()`` captures the Mersenne state *and* ``gauss_next``, so
+    equality here is the full stream-consistency property."""
+    import random as _random
+    seed = 7
+    cm = CongestionModel(CongestionConfig(u_sigma=0.2),
+                         _hand_topology(n_shared), seed=seed)
+    ref = _random.Random(seed)
+    assert len(cm.u) == n_shared
+    for _ in range(7):
+        cm.advance()
+        for _ in range(n_shared):
+            ref.gauss(0.0, 1.0)
+        assert cm.rng.getstate() == ref.getstate()

@@ -8,6 +8,7 @@ no-starvation direction versus the offered-bytes split.
 The allocator invariants run twice: as seeded random sweeps (always on, no
 optional deps) and as hypothesis property tests when hypothesis is
 installed (see requirements-dev.txt)."""
+import math
 import random
 
 import pytest
@@ -607,3 +608,65 @@ def test_fairness_policy_instance_is_accepted_directly():
     ref = FabricEngine(_fabric(), _contending_pair(), base_seed=0,
                        fairness="maxmin").run(30, warmup=5)
     assert res.job("a").step_times == ref.job("a").step_times
+
+
+# ---------------------------------------------------------------------------
+# allocator-boundary validation (backend PR bugfixes)
+# ---------------------------------------------------------------------------
+
+# every progressive-filling allocator, normalized to (demands, capacity)
+_ALLOCATORS = [
+    ("maxmin", lambda d, c: maxmin_shares(d, capacity=c)),
+    ("wfq", lambda d, c: wfq_shares(d, capacity=c)),
+    ("strict_priority",
+     lambda d, c: strict_priority_shares(d, [0.0] * len(d), capacity=c)),
+    ("drr", lambda d, c: drr_shares(d, capacity=c)),
+]
+
+
+@pytest.mark.parametrize("alloc", [a for _, a in _ALLOCATORS],
+                         ids=[n for n, _ in _ALLOCATORS])
+@pytest.mark.parametrize("demands", [
+    [-0.1, 0.5],                      # negative rate
+    [0.5, float("nan")],              # NaN poisons every comparison
+    [float("-inf")],
+])
+def test_allocators_reject_invalid_demands(alloc, demands):
+    """A negative or NaN demand used to flow straight into the
+    progressive fill and come out as a negative or NaN *allocation*,
+    silently breaking the conservation invariants asserted above. The
+    shared boundary check now rejects it at the API edge."""
+    with pytest.raises(ValueError, match="demands"):
+        alloc(demands, 1.0)
+
+
+@pytest.mark.parametrize("alloc", [a for _, a in _ALLOCATORS],
+                         ids=[n for n, _ in _ALLOCATORS])
+@pytest.mark.parametrize("capacity", [-1.0, float("nan")])
+def test_allocators_reject_invalid_capacity(alloc, capacity):
+    with pytest.raises(ValueError, match="capacity"):
+        alloc([0.5, 0.5], capacity)
+
+
+def test_allocators_accept_zero_demands_and_capacity():
+    """The validation must not over-reject: all-zero demands and zero
+    capacity are legitimate edge inputs with well-defined allocations."""
+    for _, alloc in _ALLOCATORS:
+        assert alloc([0.0, 0.0], 1.0) == [0.0, 0.0]
+        assert alloc([0.5, 0.5], 0.0) == [0.0, 0.0]
+
+
+def test_offered_share_zero_byte_collective_floor():
+    """Regression: a zero-byte collective next to co-tenant flows got
+    share 0.0, which downstream duration division turned into ``inf``
+    step times. The share is now floored at RESIDUAL_SHARE, mirroring
+    the strict-priority starved-class floor."""
+    from repro.fabric.congestion import RESIDUAL_SHARE, offered_share
+
+    share = offered_share(0.0, 1.0, [(1.0, 5.0)])
+    assert share == RESIDUAL_SHARE
+    assert math.isfinite(1.0 / share)
+    # the floor must not disturb the normal proportional split...
+    assert offered_share(2.0, 1.0, [(1.0, 2.0)]) == pytest.approx(0.5)
+    # ...or the uncontended owner, who keeps the whole link
+    assert offered_share(0.0, 1.0, []) == 1.0
