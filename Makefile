@@ -10,8 +10,8 @@ export PYTHONPATH := src
 
 SLOW_MARKER := slow
 
-.PHONY: test test-slow test-all bench-smoke bench scenarios baselines \
-	baselines-check
+.PHONY: test test-slow test-all test-pallas bench-smoke bench scenarios \
+	baselines baselines-check
 
 test:            ## default tier-1 ($(SLOW_MARKER) excluded via pytest.ini)
 	$(PY) -m pytest -x -q
@@ -22,6 +22,9 @@ test-slow:       ## full-fidelity runs only (the CI slow job)
 test-all:        ## everything: tier-1 plus the slow suite, explicitly
 	$(PY) -m pytest -x -q
 	$(PY) -m pytest -q -m "$(SLOW_MARKER)"
+
+test-pallas:     ## pallas interpret-mode equivalence (the CI pallas job)
+	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q tests/test_backend.py -k pallas
 
 scenarios:       ## run every named scenario in the library end to end
 	$(PY) -m benchmarks.run --only scenarios
@@ -41,6 +44,7 @@ bench-smoke:     ## the CI benchmark smoke sections (ARTIFACTS= to persist)
 	$(PY) -m benchmarks.run --only scenarios $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 	$(PY) -m benchmarks.run --only pacing
 	$(PY) -m benchmarks.run --only backend $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
+	$(PY) -m benchmarks.run --only kernels $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 
 bench:           ## all benchmark sections
 	$(PY) -m benchmarks.run

@@ -1,18 +1,42 @@
-"""Kernel micro-benchmarks (substrate layer): wall-time of the XLA-path
-kernels on CPU plus correctness drift vs the pure-jnp oracle.
+"""Kernel micro-benchmarks: the substrate kernels (XLA path vs the
+pure-jnp oracle) plus the fabric kernel registry's hot paths — the
+progressive-filling allocator family and the busy-segment overlap — as
+reference Python vs batched jnp vs Pallas (interpret mode on CPU).
 
-On this CPU container the numbers are *relative* health checks (XLA path vs
-naive oracle); on TPU the same harness times the Pallas kernels.
+On this CPU container the numbers are *relative* health checks; on TPU
+the same harness times the compiled Pallas kernels. The fabric section
+runs each kernel at the dense-sweep shape (256 variants x 16 links =
+4096 rows) and reports a ``parity`` verdict: the Pallas interpret path
+must at least match the jnp kernel on the allocator core (PASS/MISS),
+and the two backends' outputs must agree bit-for-bit.
+
+``--artifacts DIR`` (see ``benchmarks.run``) persists the timing table
+as ``kernel_bench.csv`` and the benched kernel grid — shapes, backends,
+declared equivalence tiers — as ``BENCH_kernels.json``, refreshed at the
+repository root where it is tracked in git (the inputs behind the
+numbers diff in review, as with ``BENCH_scenarios.json``).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import List
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
+
+# the dense-sweep launch shape: 256 grid variants x 16 shared links,
+# 8 co-tenant flows per row; overlap rows carry the engine's per-owner
+# segment-ring capacity
+SWEEP_ROWS = 256 * 16
+SWEEP_FLOWS = 8
+SWEEP_SEGS = 64
+_REF_ROWS = 256        # reference Python is timed on a row subsample
 
 
 def _time(fn, *args, iters=3, warmup=1):
@@ -24,7 +48,16 @@ def _time(fn, *args, iters=3, warmup=1):
     return (time.perf_counter() - t0) / iters * 1e6, out   # us
 
 
-def rows() -> List[str]:
+def _time_host(fn, iters=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    return (time.perf_counter() - t0) / iters * 1e6, out   # us
+
+
+def substrate_rows() -> List[str]:
     key = jax.random.PRNGKey(0)
     lines = ["kernel,case,us_per_call,max_abs_err_vs_ref"]
 
@@ -74,6 +107,147 @@ def rows() -> List[str]:
                                                      Dp)[0])))
     lines.append(f"mamba_scan,B{B}xS{S}xD{D}xN{N},{us:.0f},{err:.2e}")
     return lines
+
+
+def fabric_cases() -> List[dict]:
+    """The benched fabric kernel grid (the deterministic content of
+    ``BENCH_kernels.json``): shape, backends, and declared tier per
+    kernel."""
+    from repro.fabric.backend import EQUIVALENCE_TIERS
+    cases = []
+    for name in ("maxmin_shares", "wfq_shares", "strict_priority_shares"):
+        tier, tol = EQUIVALENCE_TIERS[name]
+        cases.append({
+            "kernel": name,
+            "case": f"R{SWEEP_ROWS}xn{SWEEP_FLOWS}",
+            "rows": SWEEP_ROWS, "cols": SWEEP_FLOWS,
+            "backends": ["reference", "jnp", "pallas"],
+            "tier": tier, "tol": tol,
+            "parity_target": "pallas_us <= jnp_us",
+        })
+    tier, tol = EQUIVALENCE_TIERS["segment_overlap"]
+    cases.append({
+        "kernel": "segment_overlap",
+        "case": f"R{SWEEP_ROWS}xS{SWEEP_SEGS}",
+        "rows": SWEEP_ROWS, "cols": SWEEP_SEGS,
+        "backends": ["reference", "jnp", "pallas"],
+        "tier": tier, "tol": tol,
+        "parity_target": None,
+    })
+    return cases
+
+
+_FABRIC_ROWS: List[str] = []
+
+
+def fabric_rows() -> List[str]:
+    if _FABRIC_ROWS:
+        return _FABRIC_ROWS
+    from repro.fabric.backend import get_kernel
+
+    rng = np.random.default_rng(42)
+    D = rng.uniform(0.0, 2.0, size=(SWEEP_ROWS, SWEEP_FLOWS))
+    D[rng.uniform(size=D.shape) < 0.2] = 0.0
+    W = rng.uniform(0.1, 2.0, size=(SWEEP_ROWS, SWEEP_FLOWS))
+    prios = np.array([float(p) for p in rng.integers(0, 3, SWEEP_FLOWS)])
+
+    lines = ["kernel,case,ref_us,jnp_us,pallas_us,speedup_vs_jnp,"
+             "max_abs_err,parity"]
+
+    def bench(name, ref_call, jnp_args, static=None, parity_target=True):
+        # structural args (priorities) are static: close over them so
+        # jit only traces the float inputs
+        if static:
+            jk = jax.jit(lambda *a: get_kernel(name, "jnp")(*a, *static))
+            pk = jax.jit(
+                lambda *a: get_kernel(name, "pallas")(*a, *static))
+        else:
+            jk = jax.jit(get_kernel(name, "jnp"))
+            pk = jax.jit(get_kernel(name, "pallas"))
+        ref_us, _ = _time_host(ref_call)
+        ref_us *= SWEEP_ROWS / _REF_ROWS       # per-sweep extrapolation
+        jnp_us, jout = _time(jk, *jnp_args)
+        pal_us, pout = _time(pk, *jnp_args)
+        err = float(jnp.max(jnp.abs(jout - pout)))
+        speedup = jnp_us / pal_us if pal_us > 0 else float("inf")
+        # the parity bar applies to the allocator core (fabric_cases
+        # declares the target); interpret-mode overlap has no bar — the
+        # jnp version is a single fused reduction, and off-TPU the win
+        # comes from the allocators it shares a launch with
+        parity = ("PASS" if pal_us <= jnp_us else "MISS") \
+            if parity_target else "n/a"
+        case = (f"R{SWEEP_ROWS}xS{SWEEP_SEGS}" if name == "segment_overlap"
+                else f"R{SWEEP_ROWS}xn{SWEEP_FLOWS}")
+        lines.append(f"{name},{case},{ref_us:.0f},{jnp_us:.0f},"
+                     f"{pal_us:.0f},{speedup:.1f}x,{err:.2e},{parity}")
+
+    from repro.fabric import congestion as C
+
+    d_rows = [list(map(float, D[i])) for i in range(_REF_ROWS)]
+    w_rows = [list(map(float, W[i])) for i in range(_REF_ROWS)]
+    dj = jnp.asarray(D)
+    wj = jnp.asarray(W)
+
+    bench("maxmin_shares",
+          lambda: [C.maxmin_shares(d, 1.0) for d in d_rows],
+          (dj,))
+    bench("wfq_shares",
+          lambda: [C.wfq_shares(d, w, 1.0)
+                   for d, w in zip(d_rows, w_rows)],
+          (dj, wj))
+    pr_list = list(map(float, prios))
+    bench("strict_priority_shares",
+          lambda: [C.strict_priority_shares(d, pr_list, 1.0)
+                   for d in d_rows],
+          (dj,), static=(prios,))
+
+    S0 = rng.uniform(0.0, 10.0, size=(SWEEP_ROWS, SWEEP_SEGS))
+    E0 = S0 + rng.uniform(0.0, 3.0, size=(SWEEP_ROWS, SWEEP_SEGS))
+    sj, ej = jnp.asarray(S0), jnp.asarray(E0)
+
+    def ref_overlap():
+        out = []
+        for i in range(_REF_ROWS):
+            tot = 0.0
+            for s_k, e_k in zip(S0[i], E0[i]):
+                ov = min(7.0, e_k) - max(2.0, s_k)
+                if ov > 0.0:
+                    tot += ov
+            out.append(tot)
+        return out
+
+    bench("segment_overlap", ref_overlap, (2.0, 7.0, sj, ej),
+          parity_target=False)
+
+    _FABRIC_ROWS.extend(lines)
+    return _FABRIC_ROWS
+
+
+def rows() -> List[str]:
+    return substrate_rows() + [""] + fabric_rows()
+
+
+def write_artifacts(outdir: str) -> List[str]:
+    """Persist the full timing table as ``kernel_bench.csv`` and the
+    benched fabric kernel grid as ``BENCH_kernels.json`` — also refreshed
+    at the repository root, where it is tracked in git (same pattern as
+    ``BENCH_scenarios.json``: deterministic inputs diff in review; the
+    nondeterministic timings stay in the CSV artifact)."""
+    csv_path = os.path.join(outdir, "kernel_bench.csv")
+    with open(csv_path, "w") as f:
+        f.write("\n".join(substrate_rows() + fabric_rows()) + "\n")
+    payload = json.dumps({c["kernel"]: c for c in fabric_cases()},
+                         indent=1, sort_keys=True) + "\n"
+    json_path = os.path.join(outdir, "BENCH_kernels.json")
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    tracked_path = os.path.join(repo_root, "BENCH_kernels.json")
+    written = []
+    for path in dict.fromkeys(
+            (os.path.abspath(json_path), tracked_path)):
+        with open(path, "w") as f:
+            f.write(payload)
+        written.append(path)
+    return [csv_path] + written
 
 
 def main() -> None:

@@ -15,7 +15,9 @@
   speedup     — compiled-schedule engine vs seed per-call loop wall-clock
   backend     — batched jnp grid sweep vs sequential reference engine
                 (kernel-registry backend, targets >= 50x warm)
-  kernels     — substrate kernel micro-benchmarks
+  kernels     — kernel micro-benchmarks: substrate (attention/rmsnorm/
+                wkv6/mamba) + the fabric registry hot paths (reference
+                vs jnp vs pallas-interpret at the dense-sweep shape)
   roofline    — per-cell roofline terms from the dry-run artifacts
 
 Run everything: ``PYTHONPATH=src python -m benchmarks.run``
@@ -95,7 +97,9 @@ def main() -> None:
         artifact_writers.append(backend_bench.write_artifacts)
     if args.only in (None, "kernels"):
         from benchmarks import kernel_bench
-        sections.append(("kernel_bench (substrate)", kernel_bench.rows))
+        sections.append(("kernel_bench (substrate + fabric registry)",
+                         kernel_bench.rows))
+        artifact_writers.append(kernel_bench.write_artifacts)
     if args.only in (None, "roofline"):
         from benchmarks import roofline_table
         sections.append(("roofline_table single-pod (assignment)",

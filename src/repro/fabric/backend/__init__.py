@@ -16,9 +16,17 @@ style of :mod:`repro.kernels.ops`:
     ``lax.scan``/``vmap`` whole-scenario runner
     (:mod:`repro.fabric.backend.jnp_engine`) that executes every variant
     of a grid sweep as one compiled program.
-  * ``KernelType.PALLAS`` — reserved. The enum member exists so kernels
-    can be registered without an API change, but nothing registers it
-    yet; requesting it raises :class:`BackendError`.
+  * ``KernelType.PALLAS`` — Pallas kernels
+    (:mod:`repro.fabric.backend.pallas_kernels`) for the two hot paths
+    that dominate dense sweeps: the fused waterfilling allocator family
+    (``maxmin``/``wfq``/``strict_priority`` via one primitive) and the
+    busy-segment overlap reduction. On TPU they compile via
+    ``pl.pallas_call``; on CPU they run in interpret mode so CI
+    exercises the identical kernel code. The ``scenario`` kernel is the
+    shared scan/vmap runner with its allocator/overlap calls dispatched
+    to the Pallas kernels. Kernels without a Pallas win
+    (:data:`PALLAS_KERNELS` is the registered subset) still raise
+    :class:`BackendError` naming the nearest supported backend.
 
 Selection surfaces: ``Scenario.run(backend=...)``,
 ``ScenarioGrid.run(backend=...)``, and the ``Policies.backend`` field as
@@ -42,8 +50,9 @@ from typing import Callable, Dict, Tuple, Union
 
 class BackendError(RuntimeError):
     """A kernel/scenario was requested on a backend that cannot run it
-    (unregistered kernel, unsupported scenario feature, or the reserved
-    ``pallas`` backend)."""
+    (unregistered kernel/backend combination or an unsupported scenario
+    feature); the message names the offending feature and the nearest
+    backend that supports it."""
 
 
 class KernelType(enum.Enum):
@@ -51,7 +60,8 @@ class KernelType(enum.Enum):
 
     REFERENCE = "reference"       # existing Python loops — the spec
     JNP = "jnp"                   # batched jax.numpy / lax.scan / vmap
-    PALLAS = "pallas"             # reserved: enum slot only, no kernels
+    PALLAS = "pallas"             # fused Pallas kernels (TPU; interpret
+    #                               mode on CPU), PALLAS_KERNELS subset
 
     @classmethod
     def parse(cls, spec: Union[str, "KernelType", None],
@@ -70,14 +80,21 @@ class KernelType(enum.Enum):
 
 BACKENDS: Tuple[str, ...] = tuple(k.value for k in KernelType)
 
-# Fairness modes the jnp whole-scenario runner can batch (the owner-
-# aggregated share models; see repro.fabric.backend.jnp_engine). Listed
-# here so Scenario validation can check eagerly without importing jax.
+# Fairness modes the batched whole-scenario runner can batch (the owner-
+# aggregated share models; see repro.fabric.backend.jnp_engine). Both
+# accelerated backends (jnp and pallas) share the runner and therefore
+# this envelope. Listed here so Scenario validation can check eagerly
+# without importing jax.
 JNP_SCENARIO_FAIRNESS: Tuple[str, ...] = ("maxmin", "wfq",
                                           "strict_priority")
 
+# Backends the batched scan/vmap scenario runner serves (eagerly
+# validated by Scenario; the runner itself dispatches per-kernel).
+BATCHED_SCENARIO_BACKENDS: Tuple[str, ...] = ("jnp", "pallas")
+
 # The kernel catalogue. Every name is registered for REFERENCE (the
-# executable spec) and JNP (the batched fast path); PALLAS is reserved.
+# executable spec) and JNP (the batched fast path); the PALLAS_KERNELS
+# subset below additionally registers for PALLAS.
 KERNELS: Tuple[str, ...] = (
     "maxmin_shares",              # progressive-filling max-min allocator
     "wfq_shares",                 # weighted progressive filling
@@ -105,6 +122,19 @@ EQUIVALENCE_TIERS: Dict[str, Tuple[str, float]] = {
     "segment_overlap": ("ulp", 8.0),
     "scenario": ("rtol", 1e-9),
 }
+
+# The kernels with a Pallas registration (the fused waterfill family,
+# the overlap reduction, and the scenario runner they feed). Each lands
+# by registering and declaring its tier above — drr's owner-aggregation
+# path and the byte-weighted offered share stay jnp/reference until
+# their formulations vectorize (ROADMAP open item).
+PALLAS_KERNELS: Tuple[str, ...] = (
+    "maxmin_shares",
+    "wfq_shares",
+    "strict_priority_shares",
+    "segment_overlap",
+    "scenario",
+)
 
 _REGISTRY: Dict[Tuple[str, KernelType], Callable] = {}
 _LOADED: set = set()
@@ -141,7 +171,19 @@ def _ensure_loaded(backend: KernelType) -> None:
     elif backend is KernelType.JNP:
         from repro.fabric.backend import jnp_engine  # noqa: F401
         from repro.fabric.backend import jnp_kernels  # noqa: F401
-    # PALLAS: reserved — nothing to load; get_kernel reports it below.
+    elif backend is KernelType.PALLAS:
+        from repro.fabric.backend import pallas_kernels  # noqa: F401
+
+
+def nearest_backend(name: str, requested: KernelType) -> Union[str, None]:
+    """The closest registered stand-in for ``name`` when ``requested``
+    has no implementation: the fastest backend below the requested one
+    (``pallas -> jnp -> reference``), or ``None`` for unknown kernels."""
+    avail = available_backends(name)
+    for candidate in ("jnp", "reference"):
+        if candidate != requested.value and candidate in avail:
+            return candidate
+    return None
 
 
 def get_kernel(name: str, backend: Union[str, KernelType]) -> Callable:
@@ -155,13 +197,15 @@ def get_kernel(name: str, backend: Union[str, KernelType]) -> Callable:
             raise BackendError(
                 f"unknown kernel {name!r}; one of {KERNELS}") from None
         avail = tuple(b.value for (n, b) in _REGISTRY if n == name)
+        near = nearest_backend(name, bk)
+        hint = f"; nearest supported backend: {near!r}" if near else ""
         raise BackendError(
             f"kernel {name!r} has no {bk.value!r} implementation "
-            f"(registered backends: {avail or '()'})") from None
+            f"(registered backends: {avail or '()'}){hint}") from None
 
 
 def available_backends(name: str) -> Tuple[str, ...]:
     """Backends that implement ``name`` (loads the lazy modules)."""
-    for bk in (KernelType.REFERENCE, KernelType.JNP):
+    for bk in KernelType:
         _ensure_loaded(bk)
     return tuple(b.value for (n, b) in _REGISTRY if n == name)

@@ -46,7 +46,16 @@ Deliberate deviations from the reference (why ``scenario`` sits in the
 Unsupported scenario features raise :class:`BackendError` eagerly:
 event/lifecycle timelines, and the ``offered`` / ``drr`` fairness modes
 (byte-weighted flows and the data-dependent quantized drain do not
-vectorize into the per-owner share call this runner batches).
+vectorize into the per-owner share call this runner batches). The error
+names the offending feature and the nearest backend that supports it.
+
+Per-kernel dispatch: the scan body does not hardcode the jnp kernels —
+the allocator family and the segment-overlap reduction are fetched from
+the kernel registry for the requested backend (``kernels=`` on
+:func:`run_scenarios`), so the same compiled runner serves both
+``backend="jnp"`` (:mod:`repro.fabric.backend.jnp_kernels`) and
+``backend="pallas"`` (:mod:`repro.fabric.backend.pallas_kernels`, where
+the fused waterfill and overlap kernels run via ``pl.pallas_call``).
 """
 from __future__ import annotations
 
@@ -63,7 +72,7 @@ from jax import lax
 
 from repro.fabric import _deprecation
 from repro.fabric.backend import (JNP_SCENARIO_FAIRNESS, BackendError,
-                                  KernelType, register_kernel)
+                                  KernelType, get_kernel, register_kernel)
 from repro.fabric.backend import jnp_kernels as K
 from repro.fabric.congestion import CongestionConfig
 from repro.fabric.engine import EngineResult, FabricEngine, JobResult
@@ -228,16 +237,18 @@ def _build_jobs(scenario, topo):
     return hit
 
 
-def _prep(scenario, topo=None) -> _Prep:
+def _prep(scenario, topo=None, backend: str = "jnp") -> _Prep:
     if scenario.jobs is None:
         raise BackendError(
-            "jnp backend runs static-jobs scenarios only; event/lifecycle "
-            "timelines run on the reference backend")
+            f"backend={backend!r} runs static-jobs scenarios only; "
+            f"unsupported feature: events= (lifecycle timeline); nearest "
+            f"supported backend: 'reference'")
     fairness = scenario.policies.fairness
     if fairness not in SUPPORTED_FAIRNESS:
         raise BackendError(
-            f"jnp backend supports fairness {SUPPORTED_FAIRNESS}, got "
-            f"{fairness!r}; run it on the reference backend")
+            f"backend={backend!r} supports fairness {SUPPORTED_FAIRNESS}; "
+            f"unsupported feature: fairness={fairness!r}; nearest "
+            f"supported backend: 'reference'")
     topo, jobs = _build_jobs(scenario, topo)
     J = len(jobs)
     iters = scenario.iters
@@ -324,7 +335,7 @@ def _relu(x):
     return jnp.where(x > 0.0, x, 0.0)
 
 
-def _make_runner(static):
+def _make_runner(static, kernels: KernelType):
     J = static["J"]
     L = static["L"]
     iters = static["iters"]
@@ -334,6 +345,13 @@ def _make_runner(static):
     used = static["used"]             # (J, L) static link-use mask
     multi = J > 1
     S = SEG_CAPACITY
+    # registry dispatch: allocators + overlap come from the requested
+    # backend (jnp or pallas); the pacing bank stays on the jnp kernel
+    # (it has no pallas registration — not one of the two hot paths).
+    maxmin_k = get_kernel("maxmin_shares", kernels)
+    wfq_k = get_kernel("wfq_shares", kernels)
+    sp_k = get_kernel("strict_priority_shares", kernels)
+    overlap_k = get_kernel("segment_overlap", kernels)
 
     def sched_total(j, eff_full, data):
         sd = sjobs[j]["sched"]
@@ -363,16 +381,16 @@ def _make_runner(static):
         if fairness == "wfq":
             w = data["w"]
             wvec = jnp.concatenate([w[i:i + 1], w[jnp.array(co)]])
-            return K.wfq_shares(demands, wvec)[:, 0]
+            return wfq_k(demands, wvec)[:, 0]
         if fairness == "strict_priority":
             from repro.fabric.congestion import RESIDUAL_SHARE
             pvec = np.concatenate([[priorities[i]],
                                    [priorities[k] for k in co]])
-            share = K.strict_priority_shares(demands, pvec)[:, 0]
+            share = sp_k(demands, pvec)[:, 0]
             # the policy's starved-class floor (StrictPriorityFairness)
             return jnp.where(share > RESIDUAL_SHARE, share,
                              RESIDUAL_SHARE)
-        return K.maxmin_shares(demands)[:, 0]
+        return maxmin_k(demands)[:, 0]
 
     def single(data):
         cong = data["cong"]
@@ -441,7 +459,7 @@ def _make_runner(static):
                     same = _relu(jnp.minimum(e_v[i], e_v[jnp.array(co)])
                                  - jnp.maximum(s_v[i],
                                                s_v[jnp.array(co)]))
-                    seg = K.segment_overlap(
+                    seg = overlap_k(
                         s_v[i], e_v[i], seg_s[jnp.array(co)],
                         seg_e[jnp.array(co)])
                     act = jnp.where(jnp.asarray(co_use.T),
@@ -517,11 +535,11 @@ def _make_runner(static):
     return jax.jit(jax.vmap(single))
 
 
-def _get_runner(sig, static):
-    key = (sig, bool(jax.config.jax_enable_x64))
+def _get_runner(sig, static, kernels: KernelType):
+    key = (sig, kernels, bool(jax.config.jax_enable_x64))
     fn = _RUNNERS.get(key)
     if fn is None:
-        fn = _RUNNERS[key] = _make_runner(static)
+        fn = _RUNNERS[key] = _make_runner(static, kernels)
     return fn
 
 
@@ -549,16 +567,20 @@ def _wrap(prep: _Prep, steps: np.ndarray):
     return Result(prep.scenario, raw, prep.topo)
 
 
-def run_scenarios(items: Sequence[Tuple[object, Optional[object]]]
-                  ) -> List[object]:
-    """Run ``(scenario, topo-or-None)`` pairs on the jnp backend.
+def run_scenarios(items: Sequence[Tuple[object, Optional[object]]],
+                  kernels: KernelType = KernelType.JNP) -> List[object]:
+    """Run ``(scenario, topo-or-None)`` pairs on the batched runner.
 
     Variants are grouped by structural signature (topology link
     structure, job count/placement/schedule shape, fairness, pacing
     windows, iteration count); each group compiles once and executes as
-    one vmapped program. Results come back in input order.
+    one vmapped program. Results come back in input order. ``kernels``
+    picks which registry backend serves the allocator and
+    segment-overlap calls inside the scan body (``KernelType.JNP`` or
+    ``KernelType.PALLAS``).
     """
-    preps = [_prep(s, t) for s, t in items]
+    kernels = KernelType.parse(kernels, default=KernelType.JNP)
+    preps = [_prep(s, t, backend=kernels.value) for s, t in items]
     groups: Dict[tuple, List[int]] = {}
     for i, p in enumerate(preps):
         groups.setdefault(p.sig, []).append(i)
@@ -567,7 +589,7 @@ def run_scenarios(items: Sequence[Tuple[object, Optional[object]]]
         static = preps[idxs[0]].static
         data = {k: np.stack([preps[i].data[k] for i in idxs])
                 for k in preps[idxs[0]].data}
-        runner = _get_runner(sig, static)
+        runner = _get_runner(sig, static, kernels)
         out = np.asarray(runner(data))
         for b, i in enumerate(idxs):
             results[i] = _wrap(preps[i], out[b])

@@ -53,6 +53,28 @@ def _leftright_sum(a: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
     return total
 
 
+def check_demands_launch(demands, capacity) -> None:
+    """The allocator rejection contract, shared by the jnp and pallas
+    backends: NaN/negative demands or capacity raise *before* any kernel
+    launch, with text identical to the reference boundary check
+    (:func:`repro.fabric.congestion._check_demands`). Tracer inputs are
+    skipped — inside ``jit``/``vmap``/``scan`` the concrete scenario
+    inputs were already validated at the launch boundary."""
+    if isinstance(demands, jax.core.Tracer) or \
+            isinstance(capacity, jax.core.Tracer):
+        return
+    c = np.asarray(capacity, dtype=np.float64).reshape(-1)
+    bad = ~(c >= 0.0)
+    if bad.any():
+        raise ValueError(
+            f"capacity must be >= 0, got {float(c[np.argmax(bad)])!r}")
+    d = np.asarray(demands, dtype=np.float64).reshape(-1)
+    bad = ~(d >= 0.0)
+    if bad.any():
+        raise ValueError(
+            f"demands must be >= 0, got {float(d[np.argmax(bad)])!r}")
+
+
 @register_kernel("maxmin_shares", KernelType.JNP)
 def maxmin_shares(demands, capacity=1.0) -> jnp.ndarray:
     """Batched progressive-filling max-min allocator.
@@ -62,6 +84,7 @@ def maxmin_shares(demands, capacity=1.0) -> jnp.ndarray:
     under float64: stable ascending sort, then the same
     ``min(demand, remaining / flows_left)`` fill per position.
     """
+    check_demands_launch(demands, capacity)
     d = jnp.asarray(demands, dtype=float)
     n = d.shape[-1]
     if n == 0:
@@ -92,6 +115,7 @@ def wfq_shares(demands, weights=None, capacity=1.0) -> jnp.ndarray:
     flow order — the same float the Python loop's running sum produces.
     ``weights=None`` falls through to :func:`maxmin_shares`.
     """
+    check_demands_launch(demands, capacity)
     d = jnp.asarray(demands, dtype=float)
     if weights is None:
         return maxmin_shares(d, capacity)
@@ -132,6 +156,7 @@ def strict_priority_shares(demands, priorities, capacity=1.0
     the reference's post-class clamp, so even the rounding of
     ``remaining`` matches the Python loop.
     """
+    check_demands_launch(demands, capacity)
     d = jnp.asarray(demands, dtype=float)
     pr = np.asarray(priorities)
     n = d.shape[-1]
@@ -202,6 +227,7 @@ def drr_shares(demands, weights=None, capacity=1.0, rounds: int = 64
     batch lane drains, masking finished lanes). The per-flow arithmetic
     — deficit top-up, backlog/remaining caps, the early break once the
     link saturates mid-round — replicates the reference loop exactly."""
+    check_demands_launch(demands, capacity)
     d = jnp.asarray(demands, dtype=float)
     n = d.shape[-1]
     if n == 0:

@@ -162,8 +162,10 @@ class Policies:
     ``backend`` is the default execution backend for ``run()`` — a
     :class:`repro.fabric.backend.KernelType` name (``"reference"`` is the
     sequential Python engine and the bit-exactness spec; ``"jnp"`` the
-    batched compiled runner). ``Scenario.run(backend=...)`` and
-    ``ScenarioGrid.run(backend=...)`` override it per call.
+    batched compiled runner; ``"pallas"`` the same runner with the
+    allocator and segment-overlap kernels fused via Pallas — TPU
+    ``pallas_call``, interpret mode on CPU). ``Scenario.run(backend=...)``
+    and ``ScenarioGrid.run(backend=...)`` override it per call.
     """
     fairness: str = "maxmin"
     scheduler: str = "fifo"
@@ -354,16 +356,19 @@ class Scenario:
             raise ScenarioError(
                 "exactly one of jobs= (static population) and events= "
                 "(timeline) must be given")
-        if self.policies.backend == "jnp":
+        from repro.fabric.backend import (BATCHED_SCENARIO_BACKENDS,
+                                          JNP_SCENARIO_FAIRNESS)
+        if self.policies.backend in BATCHED_SCENARIO_BACKENDS:
             # eager: the batched runner's scope is known at declaration
-            from repro.fabric.backend import JNP_SCENARIO_FAIRNESS
+            # (jnp and pallas share the scan/vmap runner and its envelope)
+            bk = self.policies.backend
             if timed:
                 raise ScenarioError(
-                    "backend='jnp' runs static-jobs scenarios only; "
-                    "event timelines need backend='reference'")
+                    f"backend={bk!r} runs static-jobs scenarios only; "
+                    f"event timelines need backend='reference'")
             if self.policies.fairness not in JNP_SCENARIO_FAIRNESS:
                 raise ScenarioError(
-                    f"backend='jnp' supports fairness "
+                    f"backend={bk!r} supports fairness "
                     f"{JNP_SCENARIO_FAIRNESS}, got "
                     f"{self.policies.fairness!r}")
         if static:
@@ -775,10 +780,12 @@ class ScenarioGrid:
     def run(self, backend: Optional[str] = None
             ) -> List[Tuple[Dict[str, Any], Result]]:
         """Run every variant; ``backend`` overrides each variant's
-        ``policies.backend`` for this sweep. Variants resolving to the
-        ``jnp`` backend run as *one batched program per structural group*
-        (:func:`repro.fabric.backend.jnp_engine.run_scenarios`) instead
-        of sequential engine loops; results keep grid order either way.
+        ``policies.backend`` for this sweep. Variants resolving to a
+        batched backend (``jnp`` or ``pallas``) run as *one batched
+        program per structural group*
+        (:func:`repro.fabric.backend.jnp_engine.run_scenarios`, with the
+        allocator/overlap kernels dispatched per backend) instead of
+        sequential engine loops; results keep grid order either way.
         """
         from repro.fabric.backend import KernelType
         resolved = [
@@ -787,18 +794,24 @@ class ScenarioGrid:
             for _, scn in self._variants]
         out: List[Optional[Tuple[Dict[str, Any], Result]]] = \
             [None] * len(self._variants)
-        batched = [i for i, bk in enumerate(resolved)
-                   if bk is KernelType.JNP]
-        batched_set = set(batched)
+        batched_kinds = (KernelType.JNP, KernelType.PALLAS)
+        batched_set = {i for i, bk in enumerate(resolved)
+                       if bk in batched_kinds}
         for i, (params, scn) in enumerate(self._variants):
             if i not in batched_set:
                 out[i] = (params, scn.run(backend=resolved[i].value))
-        if batched:
+        if batched_set:
             from repro.fabric.backend.jnp_engine import run_scenarios
-            results = run_scenarios(
-                [(self._variants[i][1], None) for i in batched])
-            for i, res in zip(batched, results):
-                out[i] = (self._variants[i][0], res)
+            for kind in batched_kinds:
+                idxs = [i for i in sorted(batched_set)
+                        if resolved[i] is kind]
+                if not idxs:
+                    continue
+                results = run_scenarios(
+                    [(self._variants[i][1], None) for i in idxs],
+                    kernels=kind)
+                for i, res in zip(idxs, results):
+                    out[i] = (self._variants[i][0], res)
         return out
 
     # columns to_csv emits per (variant, tenant) row, pulled from

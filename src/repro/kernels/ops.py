@@ -3,7 +3,10 @@ Pallas (CPU validation) and the pure-XLA chunked implementations.
 
 Backend selection (``REPRO_KERNELS`` env var or :func:`set_backend`):
 
-  * ``auto``      — Pallas on TPU, XLA elsewhere (default).
+  * ``auto``      — Pallas on TPU, XLA elsewhere (default). Kernels with no
+                    XLA twin (``pallas_only=True`` — the fabric backend's
+                    Pallas kernels) resolve to ``interpret`` off-TPU instead,
+                    so there is one consistent resolution path for them.
   * ``pallas``    — force Pallas (real TPU).
   * ``interpret`` — Pallas kernel body interpreted in Python on CPU; used by
                     the kernel-validation tests, far too slow for real work.
@@ -43,12 +46,19 @@ def set_backend(name: str) -> None:
     _BACKEND = name
 
 
-def backend() -> str:
+def backend(pallas_only: bool = False) -> str:
+    """Resolve the kernel backend. ``pallas_only=True`` is for kernels
+    that exist only as Pallas code (no chunked-XLA twin): off-TPU their
+    ``auto`` resolution is ``interpret`` — the only way to execute the
+    kernel body on CPU — never ``xla``."""
     b = _BACKEND or os.environ.get("REPRO_KERNELS", "auto")
     if b not in _VALID:
         raise ValueError(f"REPRO_KERNELS={b!r} not in {_VALID}")
     if b == "auto":
-        b = "pallas" if jax.default_backend() == "tpu" else "xla"
+        if jax.default_backend() == "tpu":
+            b = "pallas"
+        else:
+            b = "interpret" if pallas_only else "xla"
     return b
 
 

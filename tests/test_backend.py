@@ -14,11 +14,17 @@ and this file is its enforcement:
           (XLA fuses multiply-adds, and the simulation feeds rounding
           differences back through the AR(1) congestion state)
 
-plus the registry mechanics (parse/dispatch/duplicate rejection, the
-reserved ``pallas`` slot) and the ``Scenario``/``ScenarioGrid``/
-``Policies.backend`` selection surfaces. Runs in tier-1; the heavier
-grid sweep carries the slow marker (CI's backend-equivalence job also
-runs ``benchmarks.run --only backend`` for the 50x target).
+plus the registry mechanics (parse/dispatch/duplicate rejection,
+nearest-backend error hints), the Pallas tier (the fused waterfill and
+segment-overlap kernels of
+:mod:`repro.fabric.backend.pallas_kernels`, asserted at the same
+declared tiers — on CPU they run in interpret mode, so this file
+exercises the identical kernel code CI ships to TPU), and the
+``Scenario``/``ScenarioGrid``/``Policies.backend`` selection surfaces.
+Runs in tier-1; the heavier grid sweeps carry the slow marker (CI's
+backend-equivalence job also runs ``benchmarks.run --only backend`` for
+the 50x target, and the pallas-interpret job runs the ``-k pallas``
+subset under ``JAX_PLATFORMS=cpu``).
 """
 import random
 
@@ -27,7 +33,7 @@ import pytest
 
 from repro.fabric.backend import (BACKENDS, EQUIVALENCE_TIERS,
                                   JNP_SCENARIO_FAIRNESS, KERNELS,
-                                  BackendError, KernelType,
+                                  PALLAS_KERNELS, BackendError, KernelType,
                                   available_backends, get_kernel,
                                   register_kernel)
 
@@ -76,10 +82,15 @@ def test_kernel_type_parse():
 def test_unknown_kernel_and_reserved_backend_raise():
     with pytest.raises(BackendError, match="unknown kernel"):
         get_kernel("fft", KernelType.REFERENCE)
-    # pallas is an enum slot with no registrations — requesting it must
-    # be a clean BackendError, not a KeyError
-    with pytest.raises(BackendError, match="no 'pallas' implementation"):
-        get_kernel("maxmin_shares", KernelType.PALLAS)
+    # drr has no pallas registration (the quantized drain does not
+    # vectorize) — a clean BackendError naming the nearest stand-in,
+    # not a KeyError
+    with pytest.raises(BackendError) as exc:
+        get_kernel("drr_shares", KernelType.PALLAS)
+    msg = str(exc.value)
+    assert "no 'pallas' implementation" in msg
+    assert "drr_shares" in msg
+    assert "nearest supported backend: 'jnp'" in msg
 
 
 def test_duplicate_registration_rejected():
@@ -92,9 +103,12 @@ def test_duplicate_registration_rejected():
 
 
 @needs_jax
-def test_every_kernel_has_both_implementations():
+def test_every_kernel_has_its_declared_implementations():
     for name in KERNELS:
-        assert set(available_backends(name)) == {"reference", "jnp"}
+        want = {"reference", "jnp"}
+        if name in PALLAS_KERNELS:
+            want.add("pallas")
+        assert set(available_backends(name)) == want, name
 
 
 # ---------------------------------------------------------------------------
@@ -401,9 +415,263 @@ def test_scenario_rejects_jnp_with_unsupported_fairness():
         _scenario("offered", backend="jnp").validate()
 
 
-def test_scenario_run_rejects_reserved_pallas_backend():
-    with pytest.raises(BackendError, match="pallas"):
-        _scenario("maxmin").run(backend="pallas")
+def test_scenario_pallas_rejects_unsupported_fairness_with_hint():
+    """The batched runner's BackendError names the offending feature and
+    the nearest backend that supports it — for the eager `validate()`
+    path and for a direct `run()` alike."""
+    from repro.fabric.scenario import ScenarioError
+    with pytest.raises(ScenarioError, match="fairness"):
+        _scenario("drr", backend="pallas").validate()
+    with pytest.raises(BackendError) as exc:
+        _scenario("offered").run(backend="pallas")
+    msg = str(exc.value)
+    assert "backend='pallas'" in msg
+    assert "fairness='offered'" in msg
+    assert "nearest supported backend: 'reference'" in msg
+
+
+def test_scenario_pallas_rejects_event_timelines_with_hint():
+    import dataclasses
+
+    from repro.fabric import Arrival
+    from repro.fabric.scenario import ScenarioError
+
+    base = _scenario("maxmin")
+    timed = dataclasses.replace(
+        base, jobs=None, events=(Arrival(0.0, base.jobs[0]),),
+        horizon=5.0)
+    with pytest.raises(ScenarioError, match="static-jobs"):
+        dataclasses.replace(
+            timed, policies=dataclasses.replace(
+                timed.policies, backend="pallas")).validate()
+    with pytest.raises(BackendError) as exc:
+        timed.run(backend="pallas")
+    msg = str(exc.value)
+    assert "events=" in msg
+    assert "nearest supported backend: 'reference'" in msg
+
+
+# ---------------------------------------------------------------------------
+# pallas tier: fused kernels in interpret mode (CI: pallas-interpret job)
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_only_auto_resolution_matrix():
+    """The :mod:`repro.kernels.ops` resolution matrix for kernels with no
+    XLA twin (``pallas_only=True`` — the fabric Pallas kernels): ``auto``
+    resolves to ``interpret`` off-TPU, never ``xla``; explicit modes pass
+    through unchanged. Pinned off-TPU (the CI case)."""
+    from repro.kernels import ops
+    if HAVE_JAX and jax.default_backend() == "tpu":
+        pytest.skip("matrix below pins the off-TPU resolution")
+    saved = ops._BACKEND
+    try:
+        matrix = {
+            # forced:   (pallas_only=False, pallas_only=True)
+            "auto": ("xla", "interpret"),
+            "pallas": ("pallas", "pallas"),
+            "interpret": ("interpret", "interpret"),
+            "xla": ("xla", "xla"),
+        }
+        for forced, (plain, ponly) in matrix.items():
+            ops.set_backend(forced)
+            assert ops.backend() == plain, forced
+            assert ops.backend(pallas_only=True) == ponly, forced
+    finally:
+        ops._BACKEND = saved
+
+
+@needs_jax
+def test_pallas_waterfill_specs_block_geometry():
+    """The TPU compile path's shape contract, unit-tested without TPU
+    hardware: row blocks are sublane-aligned (multiples of 8), capped,
+    and rows pad to a whole number of blocks."""
+    from repro.fabric.backend.pallas_kernels import (_MAX_BLOCK_ROWS,
+                                                    _SUBLANE,
+                                                    waterfill_specs)
+    for rows, n in [(1, 1), (7, 3), (8, 8), (100, 8), (4096, 8),
+                    (4097, 16), (513, 2)]:
+        grid, br, padded = waterfill_specs(rows, n)
+        assert br % _SUBLANE == 0
+        assert br <= max(_MAX_BLOCK_ROWS, _SUBLANE)
+        assert padded == grid[0] * br
+        assert padded >= rows and padded - rows < br
+    # small row counts never over-allocate a full max block
+    _, br, padded = waterfill_specs(3, 4)
+    assert br == _SUBLANE and padded == _SUBLANE
+    # explicit block_rows is honored (aligned up)
+    grid, br, padded = waterfill_specs(100, 8, block_rows=30)
+    assert br == 32 and padded % 32 == 0
+    with pytest.raises(ValueError, match=">= 1"):
+        waterfill_specs(0, 4)
+    with pytest.raises(ValueError, match=">= 1"):
+        waterfill_specs(4, 0)
+
+
+@needs_jax
+@pytest.mark.parametrize("name", ["maxmin_shares", "wfq_shares",
+                                  "strict_priority_shares"])
+def test_pallas_allocators_bit_exact_under_x64(name):
+    """The fused waterfill family at its declared tier: bit-identical to
+    the reference Python under float64 (interpret mode on CPU runs the
+    same kernel code the TPU lowering compiles)."""
+    tier, tol = EQUIVALENCE_TIERS[name]
+    assert (tier, tol) == ("exact", 0.0)
+    ref = get_kernel(name, KernelType.REFERENCE)
+    fast = get_kernel(name, "pallas")
+    rng = random.Random(11)
+    with jax.experimental.enable_x64():
+        for trial in range(40):
+            n = rng.randint(1, 8)
+            d = _rand_demands(rng, n)
+            cap = rng.choice([0.5, 1.0, 2.0])
+            if name == "strict_priority_shares":
+                prios = np.array([float(rng.randint(0, 3))
+                                  for _ in range(n)])
+                want = ref(d, list(prios), cap)
+                got = fast(np.array(d), prios, cap)
+            elif name == "wfq_shares":
+                w = [rng.uniform(0.1, 2.0) for _ in range(n)]
+                want = ref(d, w, cap)
+                got = fast(np.array(d), np.array(w), cap)
+            else:
+                want = ref(d, cap)
+                got = fast(np.array(d), cap)
+            got = np.asarray(got)
+            assert got.dtype == np.float64
+            assert list(got) == want, (name, trial, d, cap)
+
+
+@needs_jax
+def test_pallas_allocator_edge_cases():
+    """Degenerate grids the sweep runner actually produces: zero-demand
+    rows, all-saturated links (zero leftover capacity), and the
+    single-tenant one-flow row."""
+    mm = get_kernel("maxmin_shares", "pallas")
+    wfq = get_kernel("wfq_shares", "pallas")
+    sp = get_kernel("strict_priority_shares", "pallas")
+    with jax.experimental.enable_x64():
+        # zero-demand rows allocate exactly zero and nothing else
+        z = np.zeros((3, 4))
+        assert np.asarray(mm(z, 1.0)).tolist() == z.tolist()
+        assert np.asarray(wfq(z, np.ones(4), 1.0)).tolist() == z.tolist()
+        # all-saturated: capacity 0.0 gives everyone exactly 0.0
+        d = np.array([[0.5, 1.5, 0.7]])
+        assert np.asarray(mm(d, 0.0)).tolist() == [[0.0, 0.0, 0.0]]
+        assert np.asarray(
+            sp(d, np.array([2.0, 1.0, 0.0]), 0.0)).tolist() \
+            == [[0.0, 0.0, 0.0]]
+        # oversubscribed link: allocations conserve the full capacity
+        big = np.array([[2.0, 3.0, 5.0]])
+        out = np.asarray(mm(big, 1.0))
+        assert float(out.sum()) == pytest.approx(1.0, abs=0.0)
+        # single-tenant degenerate grid: one flow takes min(demand, cap)
+        one = np.array([[0.3]])
+        assert np.asarray(mm(one, 1.0)).tolist() == [[0.3]]
+        assert np.asarray(mm(np.array([[4.0]]), 1.0)).tolist() == [[1.0]]
+        # ragged zero-padding stays exact (the runner's batching device)
+        d5 = np.array([0.9, 0.1, 1.2, 0.0, 0.0])
+        base = np.asarray(mm(d5[:3], 1.0))
+        padded = np.asarray(mm(d5, 1.0))
+        assert padded[:3].tolist() == base.tolist()
+        assert padded[3:].tolist() == [0.0, 0.0]
+
+
+@needs_jax
+@pytest.mark.parametrize("backend", ["reference", "jnp", "pallas"])
+def test_pallas_rejection_contract_identical_across_backends(backend):
+    """NaN/negative demands or capacity are rejected *before* kernel
+    launch with the same ``ValueError`` text on every backend — the
+    allocator-boundary contract (`repro.fabric.congestion`)."""
+    mm = get_kernel("maxmin_shares", backend)
+    bad_d = [0.5, -0.25, 1.0]
+    nan_d = [0.5, float("nan")]
+    with pytest.raises(ValueError) as exc:
+        mm(bad_d if backend == "reference" else np.array(bad_d), 1.0)
+    assert str(exc.value) == "demands must be >= 0, got -0.25"
+    with pytest.raises(ValueError) as exc:
+        mm(nan_d if backend == "reference" else np.array(nan_d), 1.0)
+    assert str(exc.value) == "demands must be >= 0, got nan"
+    with pytest.raises(ValueError) as exc:
+        mm([0.5] if backend == "reference" else np.array([0.5]), -2.0)
+    assert str(exc.value) == "capacity must be >= 0, got -2.0"
+
+
+@needs_jax
+def test_pallas_segment_overlap_within_ulp_tier():
+    tier, tol = EQUIVALENCE_TIERS["segment_overlap"]
+    assert tier == "ulp"
+    fast = get_kernel("segment_overlap", "pallas")
+    rng = random.Random(17)
+    with jax.experimental.enable_x64():
+        for trial in range(40):
+            k = rng.randint(1, 12)
+            starts = np.array([rng.uniform(0.0, 10.0) for _ in range(k)])
+            ends = np.array([s + rng.uniform(-1.0, 4.0) for s in starts])
+            for j in range(k):                # empty ring slots: end=-inf
+                if rng.random() < 0.25:
+                    ends[j] = -np.inf
+            s_i = rng.uniform(0.0, 10.0)
+            e_i = s_i + rng.uniform(0.0, 5.0)
+            want = 0.0
+            for s_k, e_k in zip(starts, ends):
+                ov = min(e_i, e_k) - max(s_i, s_k)
+                if ov > 0.0:
+                    want += ov
+            got = float(fast(s_i, e_i, starts, ends))
+            assert _within_ulps(got, want, tol), (trial, got, want)
+        # batched rows match per-row calls bit-for-bit
+        S = np.random.default_rng(2).uniform(0.0, 10.0, (6, 9))
+        E = S + np.random.default_rng(3).uniform(0.0, 3.0, (6, 9))
+        batched = np.asarray(fast(2.0, 7.0, S, E))
+        rows = np.array([float(fast(2.0, 7.0, S[i], E[i]))
+                         for i in range(6)])
+        assert (batched == rows).all()
+
+
+@needs_jax
+@pytest.mark.parametrize("fairness", list(JNP_SCENARIO_FAIRNESS))
+def test_scenario_pallas_rtol_tier_under_x64(fairness):
+    """`Scenario.run(backend="pallas")` — the scan runner with fused
+    allocator/overlap kernels — holds the scenario tier against the
+    sequential reference, per fairness mode."""
+    tier, tol = EQUIVALENCE_TIERS["scenario"]
+    assert tier == "rtol"
+    scn = _scenario(fairness)
+    ref = scn.run()
+    with jax.experimental.enable_x64():
+        fast = scn.run(backend="pallas")
+    _series_close(ref, fast, tol)
+
+
+@needs_jax
+def test_grid_pallas_backend_matches_jnp_bits():
+    """Pallas and jnp share the scan runner; with bit-exact allocators
+    and identical overlap arithmetic the two batched grid runs must be
+    bit-identical under float64."""
+    from repro.fabric.scenario import ScenarioGrid
+
+    grid = ScenarioGrid(_scenario("wfq"), {
+        "congestion.u_mean": [0.2, 0.4],
+    })
+    with jax.experimental.enable_x64():
+        via_jnp = grid.run(backend="jnp")
+        via_pallas = grid.run(backend="pallas")
+    for (_, rj), (_, rp) in zip(via_jnp, via_pallas):
+        for jname in ("a", "b"):
+            assert rj.series(jname) == rp.series(jname)
+
+
+@needs_jax
+def test_policies_backend_pallas_field_selects_pallas():
+    from repro.fabric.scenario import Scenario
+
+    scn = _scenario("maxmin", backend="pallas")
+    assert Scenario.from_json(scn.to_json()).policies.backend == "pallas"
+    via_field = scn.run()
+    via_arg = _scenario("maxmin").run(backend="pallas")
+    for jname in ("a", "b"):
+        assert via_field.series(jname) == via_arg.series(jname)
 
 
 # ---------------------------------------------------------------------------
@@ -431,3 +699,26 @@ def test_grid_batched_equivalence_wide_sweep():
     assert len(results) == 16
     for (params, res), scn in zip(results, variants):
         _series_close(scn.run(), res, 5e-2)
+
+
+@pytest.mark.slow
+@needs_jax
+def test_grid_pallas_256_variant_congestion_sweep():
+    """The acceptance sweep: 256 congestion variants through
+    ``ScenarioGrid.run(backend="pallas")`` as one batched program, held
+    to the declared scenario tier against the sequential reference under
+    float64 (where the fused allocators are bit-exact, the whole-series
+    bound is the tier's rtol)."""
+    from repro.fabric.scenario import ScenarioGrid
+
+    tier, tol = EQUIVALENCE_TIERS["scenario"]
+    grid = ScenarioGrid(_scenario("wfq", name="bk-pallas-256"), {
+        "congestion.u_mean": [0.05 + 0.025 * i for i in range(16)],
+        "congestion.k_burst": [0.25 * (i + 1) for i in range(16)],
+    })
+    with jax.experimental.enable_x64():
+        results = grid.run(backend="pallas")
+    variants = grid.scenarios()
+    assert len(results) == 256
+    for (params, res), scn in zip(results, variants):
+        _series_close(scn.run(), res, tol)
