@@ -11,7 +11,7 @@ export PYTHONPATH := src
 SLOW_MARKER := slow
 
 .PHONY: test test-slow test-all test-pallas bench-smoke bench scenarios \
-	baselines baselines-check
+	baselines baselines-check trace traces
 
 test:            ## default tier-1 ($(SLOW_MARKER) excluded via pytest.ini)
 	$(PY) -m pytest -x -q
@@ -28,12 +28,22 @@ test-pallas:     ## pallas interpret-mode equivalence (the CI pallas job)
 
 scenarios:       ## run every named scenario in the library end to end
 	$(PY) -m benchmarks.run --only scenarios
+	$(PY) -m benchmarks.run --only trace
+
+trace:           ## bundled-trace fit + replay gates + calibration (CI job)
+	$(PY) -m benchmarks.run --only trace $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
+
+traces:          ## regenerate tests/traces/ from the seeded generators
+	$(PY) tests/traces/generate.py
 
 baselines:       ## (re)record tests/baselines/ fingerprints — review the diff!
 	$(PY) tests/test_baselines.py
+	$(PY) tests/test_trace_baselines.py
 
 baselines-check: ## fail on any library-scenario fingerprint drift (CI job)
 	$(PY) tests/test_baselines.py --check
+	$(PY) tests/test_trace_baselines.py --check
+	$(PY) tests/traces/generate.py --check
 
 bench-smoke:     ## the CI benchmark smoke sections (ARTIFACTS= to persist)
 	$(PY) -m benchmarks.run --only table1

@@ -18,6 +18,8 @@
   kernels     — kernel micro-benchmarks: substrate (attention/rmsnorm/
                 wkv6/mamba) + the fabric registry hot paths (reference
                 vs jnp vs pallas-interpret at the dense-sweep shape)
+  trace       — bundled-trace validation: fit + replay error report
+                (mean/p99 gates) and the congestion calibration sweep
   roofline    — per-cell roofline terms from the dry-run artifacts
 
 Run everything: ``PYTHONPATH=src python -m benchmarks.run``
@@ -40,7 +42,7 @@ def main() -> None:
                     choices=["table1", "scaling", "taxonomy", "multitenant",
                              "lifecycle", "wfq", "batching", "scenarios",
                              "pacing", "speedup", "backend", "kernels",
-                             "roofline"])
+                             "trace", "roofline"])
     ap.add_argument("--artifacts", default=None, metavar="DIR",
                     help="write sections' CSV/JSON artifacts into DIR")
     args = ap.parse_args()
@@ -100,6 +102,11 @@ def main() -> None:
         sections.append(("kernel_bench (substrate + fabric registry)",
                          kernel_bench.rows))
         artifact_writers.append(kernel_bench.write_artifacts)
+    if args.only in (None, "trace"):
+        from benchmarks import trace_validation
+        sections.append(("trace_validation (bundled-trace fit + replay "
+                         "gates + calibration)", trace_validation.rows))
+        artifact_writers.append(trace_validation.write_artifacts)
     if args.only in (None, "roofline"):
         from benchmarks import roofline_table
         sections.append(("roofline_table single-pod (assignment)",

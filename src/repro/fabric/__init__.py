@@ -37,3 +37,6 @@ from repro.fabric.topology import (FatTree, Link, Topology,        # noqa: F401
 from repro.fabric.scenario import (Policies, Result, Scenario,     # noqa: F401
                                    ScenarioError, ScenarioGrid,
                                    TopologySpec)
+from repro.fabric.trace import (Calibration, Trace, TraceError,    # noqa: F401
+                                TraceFit, TraceValidation, calibrate,
+                                fit_trace, load_trace)

@@ -525,6 +525,18 @@ class Scenario:
     def from_json(cls, s: str) -> "Scenario":
         return cls.from_dict(json.loads(s))
 
+    @classmethod
+    def from_trace(cls, path_or_records, topology=None) -> "Scenario":
+        """Fit a replayable scenario to a PRISM-style trace (a
+        :class:`repro.fabric.trace.Trace`, a file path, a dict tree, or
+        a bare record list with an explicit ``topology=``). See
+        :func:`repro.fabric.trace.fit_trace` for the fitting contract;
+        malformed traces raise :class:`repro.fabric.trace.TraceError`
+        with the offending record index."""
+        from repro.fabric import trace as _trace
+        return _trace.scenario_from_trace(path_or_records,
+                                          topology=topology)
+
     def replace(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
 
@@ -698,6 +710,23 @@ class Result:
                 entry["requests_done"] = t.requests_done
             snap["tenants"].append(entry)
         return snap
+
+    # -- trace export / validation ------------------------------------------
+    def to_trace(self):
+        """Export this run as a :class:`repro.fabric.trace.Trace`
+        (reference backend only — the export walks the engines' step
+        instrumentation). The round trip
+        ``Scenario.from_trace(result.to_trace())`` is the self-
+        consistency anchor the trace test tier pins."""
+        from repro.fabric import trace as _trace
+        return _trace.result_to_trace(self)
+
+    def validate(self, trace, topology=None):
+        """Predicted-vs-observed error report against a trace:
+        :class:`repro.fabric.trace.TraceValidation` with per-tenant
+        mean/p99 relative error and series correlation."""
+        from repro.fabric import trace as _trace
+        return _trace.validate_result(self, trace, topology=topology)
 
 
 # ---------------------------------------------------------------------------

@@ -249,6 +249,11 @@ class TrainingTenant(Tenant):
         self.weight = spec.weight
         self.priority = spec.priority
         self.step_times: List[float] = []
+        # trace instrumentation (repro.fabric.trace): absolute finish
+        # timestamp and contended collective duration per step, aligned
+        # 1:1 with step_times — observation only, no engine effect
+        self.step_finish: List[float] = []
+        self.comm_times: List[float] = []
         self.iters_done = 0
         self._release = 0.0
         self._release_arr: Optional[np.ndarray] = None
@@ -315,6 +320,8 @@ class TrainingTenant(Tenant):
 
     def resolved(self, finish: float, dur: float) -> None:
         self.step_times.append(finish - self._prev_finish)
+        self.step_finish.append(finish)
+        self.comm_times.append(dur)
         self._prev_finish = finish
         self.iters_done += 1
         if self._bank is None:
@@ -535,6 +542,12 @@ class InferenceTenant(Tenant):
         self.latencies: List[float] = []
         self.slo_ok: List[bool] = []  # per request, when slo_p99_s is set
         self.decode_step_times: List[float] = []
+        # trace instrumentation (repro.fabric.trace) — observation only:
+        # (arrival, finish) per completed request, and (finish, kind,
+        # duration, payload bytes, occupancy) per resolved collective
+        self.request_log: List[Tuple[float, float]] = []
+        self.collective_log: List[Tuple[float, str, float, float,
+                                        int]] = []
         self.requests_arrived = 0
         self.requests_done = 0
         self.tokens_done = 0
@@ -598,6 +611,7 @@ class InferenceTenant(Tenant):
         spec = self.spec
         lat = finish - req.arrival
         self.latencies.append(lat)
+        self.request_log.append((req.arrival, finish))
         if spec.slo_p99_s is not None:
             self.slo_ok.append(lat <= spec.slo_p99_s)
         self.requests_done += 1
@@ -656,7 +670,18 @@ class InferenceTenant(Tenant):
         self.pending_floor = floor
 
     def resolved(self, finish: float, dur: float) -> None:
-        self._pending_replica.resolved(finish)
+        rep = self._pending_replica
+        # snapshot the collective before the replica resets its pending
+        # kind: occupancy is the joiner count for a prefill, the batch
+        # size for a decode, and payload follows batch_bytes
+        ckind = rep._kind
+        occ = len(rep._joining) if ckind == "prefill" else len(rep.batch)
+        base = self.spec.prefill_bytes if ckind == "prefill" \
+            else self.spec.decode_bytes
+        self.collective_log.append(
+            (finish, ckind, dur, batch_bytes(base, max(occ, 1)),
+             max(occ, 1)))
+        rep.resolved(finish)
         self._pending_replica = None
         if finish > self._last_finish:
             self._last_finish = finish

@@ -1,0 +1,126 @@
+"""Golden trace-replay fixtures for the bundled traces.
+
+For each trace under ``tests/traces/`` the importer's output is pinned
+end to end: the fitted ``Scenario.to_dict()`` (what ``fit_trace``
+recovered), the replay ``Result.fingerprint()``, and the
+predicted-vs-observed error report (``Result.validate(trace)``) are
+persisted as versioned JSON under ``tests/baselines/traces/`` with the
+same float-hex discipline as the scenario-library baselines — any drift
+in the fitters, the engines, or the bundled traces themselves fails
+with a readable per-path diff.
+
+Regenerate (only when a behavior change is intended and reviewed):
+
+    make baselines            # regenerates these alongside the library set
+    make baselines-check      # checks both sets
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.fabric import trace as trace_mod
+
+import test_baselines  # _hexify / diff_paths / REGEN_HINT
+
+TRACE_DIR = os.path.join(os.path.dirname(__file__), "traces")
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "baselines", "traces")
+FIXTURE_VERSION = 1
+
+
+def trace_path(name: str) -> str:
+    return os.path.join(TRACE_DIR, f"{name}.json")
+
+
+def fixture_path(name: str) -> str:
+    return os.path.join(FIXTURE_DIR, f"{name}.json")
+
+
+def snapshot(name: str):
+    """The fixture payload for one bundled trace (fresh fit + replay)."""
+    tr = trace_mod.load_trace(trace_path(name))
+    fit = trace_mod.fit_trace(tr)
+    result = fit.scenario.run(backend="reference")
+    validation = trace_mod.validate_result(result, tr)
+    return {"version": FIXTURE_VERSION, "trace": name,
+            "scenario": test_baselines._hexify(fit.scenario.to_dict()),
+            "notes": list(fit.notes),
+            "fingerprint": result.fingerprint(),
+            "validation": test_baselines._hexify(validation.to_dict())}
+
+
+def check(name: str):
+    path = fixture_path(name)
+    if not os.path.exists(path):
+        return [f"$: no fixture recorded at {path}"]
+    with open(path) as f:
+        expected = json.load(f)
+    return test_baselines.diff_paths(expected, snapshot(name))
+
+
+@pytest.mark.parametrize("name", sorted(trace_mod.BUNDLED_TRACES))
+def test_trace_fit_matches_fixture(name):
+    drift = check(name)
+    assert not drift, (
+        f"{name}: trace fit drifted from tests/baselines/traces/{name}.json"
+        f" — {test_baselines.REGEN_HINT}\n  " + "\n  ".join(drift))
+
+
+def test_every_fixture_names_a_bundled_trace():
+    on_disk = {f[:-5] for f in os.listdir(FIXTURE_DIR)
+               if f.endswith(".json")}
+    assert on_disk == set(trace_mod.BUNDLED_TRACES), (
+        f"fixture files {sorted(on_disk)} != bundled traces "
+        f"{sorted(trace_mod.BUNDLED_TRACES)} — {test_baselines.REGEN_HINT}")
+
+
+def test_bundled_traces_match_their_generators():
+    """The committed trace files are bit-identical to a fresh export of
+    the seeded generator scenarios (tests/traces/generate.py --check)."""
+    for name in trace_mod.BUNDLED_TRACES:
+        with open(trace_path(name)) as f:
+            committed = json.load(f)
+        assert committed == trace_mod.generate_bundled(name).to_dict(), (
+            f"{name}: tests/traces/{name}.json differs from a fresh "
+            f"export — regenerate with `python tests/traces/generate.py`")
+
+
+# ---------------------------------------------------------------------------
+# regen / check entry points (wired into make baselines / baselines-check)
+# ---------------------------------------------------------------------------
+
+
+def regen() -> None:
+    os.makedirs(FIXTURE_DIR, exist_ok=True)
+    names = set(trace_mod.BUNDLED_TRACES)
+    for stale in sorted(os.listdir(FIXTURE_DIR)):
+        if stale.endswith(".json") and stale[:-5] not in names:
+            os.remove(os.path.join(FIXTURE_DIR, stale))
+            print(f"removed stale traces/{stale}")
+    for name in sorted(names):
+        with open(fixture_path(name), "w") as f:
+            json.dump(snapshot(name), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {fixture_path(name)}")
+
+
+def run_check() -> int:
+    bad = 0
+    for name in sorted(trace_mod.BUNDLED_TRACES):
+        drift = check(name)
+        if drift:
+            bad += 1
+            print(f"DRIFT traces/{name}:")
+            for d in drift:
+                print(f"  {d}")
+        else:
+            print(f"ok    traces/{name}")
+    if bad:
+        print(f"\n{bad} trace fixture(s) drifted from tests/baselines/"
+              f"traces/ — {test_baselines.REGEN_HINT}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(run_check() if "--check" in sys.argv[1:] else (regen() or 0))

@@ -1,0 +1,62 @@
+"""Regenerate the bundled synthetic traces under ``tests/traces/``.
+
+Each trace is exported from a seeded generator scenario
+(:func:`repro.fabric.trace.bundled_scenario`) run on the reference
+backend, so regeneration is bit-reproducible: ``python
+tests/traces/generate.py`` (or ``make traces``) rewrites the files and
+``--check`` verifies the committed files match a fresh export without
+touching them. The trace-replay baseline fixtures
+(``tests/baselines/traces/``) pin what the importer fits from these
+files — regenerate those too (``make baselines``) if a deliberate
+engine change moves the traces.
+"""
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def trace_path(name: str) -> str:
+    return os.path.join(HERE, f"{name}.json")
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(HERE, "..", "..", "src"))
+    from repro.fabric.trace import BUNDLED_TRACES, generate_bundled
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="verify committed traces match a fresh export")
+    args = ap.parse_args()
+
+    stale = []
+    for name in BUNDLED_TRACES:
+        fresh = generate_bundled(name).to_dict()
+        path = trace_path(name)
+        if args.check:
+            if not os.path.exists(path):
+                stale.append(f"{path}: missing")
+                continue
+            with open(path) as f:
+                committed = json.load(f)
+            if committed != fresh:
+                stale.append(f"{path}: differs from a fresh export")
+            else:
+                print(f"ok {path}")
+        else:
+            with open(path, "w") as f:
+                json.dump(fresh, f, indent=1)
+                f.write("\n")
+            print(f"wrote {path} ({len(fresh['records'])} records)")
+    if stale:
+        print("\n".join(stale), file=sys.stderr)
+        print("regenerate with: python tests/traces/generate.py",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
