@@ -11,7 +11,7 @@ export PYTHONPATH := src
 SLOW_MARKER := slow
 
 .PHONY: test test-slow test-all test-pallas bench-smoke bench scenarios \
-	baselines baselines-check trace traces
+	baselines baselines-check trace traces advisor
 
 test:            ## default tier-1 ($(SLOW_MARKER) excluded via pytest.ini)
 	$(PY) -m pytest -x -q
@@ -36,13 +36,18 @@ trace:           ## bundled-trace fit + replay gates + calibration (CI job)
 traces:          ## regenerate tests/traces/ from the seeded generators
 	$(PY) tests/traces/generate.py
 
+advisor:         ## bottleneck attribution + what-if advisor (CI job)
+	$(PY) -m benchmarks.run --only advisor $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
+
 baselines:       ## (re)record tests/baselines/ fingerprints — review the diff!
 	$(PY) tests/test_baselines.py
 	$(PY) tests/test_trace_baselines.py
+	$(PY) tests/test_advisor_baselines.py
 
 baselines-check: ## fail on any library-scenario fingerprint drift (CI job)
 	$(PY) tests/test_baselines.py --check
 	$(PY) tests/test_trace_baselines.py --check
+	$(PY) tests/test_advisor_baselines.py --check
 	$(PY) tests/traces/generate.py --check
 
 bench-smoke:     ## the CI benchmark smoke sections (ARTIFACTS= to persist)
@@ -55,6 +60,7 @@ bench-smoke:     ## the CI benchmark smoke sections (ARTIFACTS= to persist)
 	$(PY) -m benchmarks.run --only pacing
 	$(PY) -m benchmarks.run --only backend $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 	$(PY) -m benchmarks.run --only kernels $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
+	$(PY) -m benchmarks.run --only advisor $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 
 bench:           ## all benchmark sections
 	$(PY) -m benchmarks.run

@@ -42,7 +42,7 @@ def main() -> None:
                     choices=["table1", "scaling", "taxonomy", "multitenant",
                              "lifecycle", "wfq", "batching", "scenarios",
                              "pacing", "speedup", "backend", "kernels",
-                             "trace", "roofline"])
+                             "trace", "advisor", "roofline"])
     ap.add_argument("--artifacts", default=None, metavar="DIR",
                     help="write sections' CSV/JSON artifacts into DIR")
     args = ap.parse_args()
@@ -107,6 +107,11 @@ def main() -> None:
         sections.append(("trace_validation (bundled-trace fit + replay "
                          "gates + calibration)", trace_validation.rows))
         artifact_writers.append(trace_validation.write_artifacts)
+    if args.only in (None, "advisor"):
+        from benchmarks import advisor_bench
+        sections.append(("advisor (bottleneck attribution + what-if "
+                         "recommendations)", advisor_bench.rows))
+        artifact_writers.append(advisor_bench.write_artifacts)
     if args.only in (None, "roofline"):
         from benchmarks import roofline_table
         sections.append(("roofline_table single-pod (assignment)",

@@ -209,3 +209,37 @@ def available_backends(name: str) -> Tuple[str, ...]:
     for bk in KernelType:
         _ensure_loaded(bk)
     return tuple(b.value for (n, b) in _REGISTRY if n == name)
+
+
+def counterfactual_sweep(scenarios, backend: Union[str, KernelType] = "jnp"
+                         ) -> list:
+    """Run an arbitrary scenario list for the what-if advisor
+    (:mod:`repro.fabric.advisor`): every batched-eligible variant (static
+    jobs, fairness inside :data:`JNP_SCENARIO_FAIRNESS`) executes through
+    the vmapped runner as one program per structural group, everything
+    else — event timelines, exotic fairness — falls back to the reference
+    engine, as does the whole batch if the runner rejects a schedule
+    shape. Returns ``(result, backend_name)`` pairs in input order, so
+    the advisor can grade each prediction's confidence by the
+    equivalence tier of the backend that produced it.
+    """
+    kind = KernelType.parse(backend, default=KernelType.JNP)
+    out: list = [None] * len(scenarios)
+    eligible: list = []
+    if kind in (KernelType.JNP, KernelType.PALLAS):
+        eligible = [i for i, s in enumerate(scenarios)
+                    if s.jobs is not None
+                    and s.policies.fairness in JNP_SCENARIO_FAIRNESS]
+    if eligible:
+        from repro.fabric.backend.jnp_engine import run_scenarios
+        try:
+            results = run_scenarios(
+                [(scenarios[i], None) for i in eligible], kernels=kind)
+            for i, res in zip(eligible, results):
+                out[i] = (res, kind.value)
+        except BackendError:
+            pass            # fall through: run the stragglers on reference
+    for i, s in enumerate(scenarios):
+        if out[i] is None:
+            out[i] = (s.run(backend="reference"), "reference")
+    return out

@@ -454,3 +454,30 @@ def select_algo(topo: Topology, ranks: Sequence[int], nbytes: float, *,
         if best is None or key < best[0]:
             best = (key, algo, sched)
     return best[1], best[2]
+
+
+def shared_byte_fraction(topo: Topology,
+                         schedule: CompiledSchedule) -> float:
+    """Fraction of one collective call's bytes that cross *shared* links.
+
+    Attribution uses this as the byte-exposure weight of a tenant on the
+    contended tier: a compact intra-leaf ring moves 0.0 of its bytes on
+    shared links, a fully scattered one close to 1.0. Evaluated on the
+    uncongested flow structure (``link_eff=None``).
+    """
+    total = 0.0
+    shared = 0.0
+    for ln, b in schedule.bytes_per_call(None).items():
+        total += b
+        if topo.link(ln).shared:
+            shared += b
+    return shared / total if total > 0.0 else 0.0
+
+
+def uniform_shared_eff(topo: Topology, eff: float) -> Dict[str, float]:
+    """A ``link_eff`` dict applying one efficiency to every shared link
+    (non-shared links fall back to 1.0 inside :meth:`_StepPlan.time`).
+    The advisor evaluates counterfactual comm floors with this — e.g.
+    ``total_s(uniform_shared_eff(topo, 1/ecmp))`` isolates the span
+    derate under a quiet, unskewed fabric."""
+    return {name: eff for name, link in topo.links.items() if link.shared}

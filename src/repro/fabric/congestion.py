@@ -425,3 +425,21 @@ class CongestionModel:
         link = self.topo.link(link_name)
         u = self.u.get(link_name, 0.0)
         return link.latency_s * (u / max(1e-3, 1.0 - u))
+
+
+def derate_factors(cfg: CongestionConfig, skew_ratio: float,
+                   spanning_groups: int = 1) -> Dict[str, float]:
+    """The multiplicative derate terms behind :meth:`CongestionModel.
+    link_eff`, exposed individually for bottleneck attribution.
+
+    ``link_eff`` divides the raw bandwidth by ``burst * ecmp`` and scales
+    it by ``1 - u``; the advisor needs each factor on its own so it can
+    apportion a tenant's overhead between synchronization amplification
+    (``burst``), background contention (``background``) and placement
+    span (``ecmp``). Must mirror the ``link_eff`` arithmetic exactly.
+    """
+    return {
+        "background": 1.0 - cfg.u_mean,
+        "burst": 1.0 + cfg.k_burst * max(0.0, skew_ratio),
+        "ecmp": 1.0 + cfg.ecmp_k * max(0, spanning_groups - 1),
+    }

@@ -165,13 +165,22 @@ class JobResult:
 
     def __init__(self, spec: JobSpec, nodes: List[int],
                  step_times: List[float], link_bytes: Dict[str, float],
-                 trace: list, algo: Optional[str] = None):
+                 trace: list, algo: Optional[str] = None,
+                 comm_times: Optional[List[float]] = None,
+                 comm_solo: Optional[List[float]] = None,
+                 skews: Optional[List[float]] = None):
         self.spec = spec
         self.name = spec.name
         self.nodes = nodes
         self.algo = algo if algo is not None else spec.algo
         self.step_times = step_times
         self.link_bytes = link_bytes
+        # observation-only instrumentation aligned 1:1 with step_times:
+        # contended collective duration, pre-contention (co-tenant-free)
+        # duration, and the arrival-skew each step saw (advisor inputs)
+        self.comm_times = comm_times if comm_times is not None else []
+        self.comm_solo = comm_solo if comm_solo is not None else []
+        self.skews = skews if skews is not None else []
         self._trace = trace
         self._records: Optional[List[List[IterationRecord]]] = None
 
@@ -220,7 +229,7 @@ class _JobRuntime:
                  "spanning", "floor_denom", "shared_demand", "release",
                  "release_arr", "prev_finish", "step_times", "link_totals",
                  "trace", "compute", "arrival", "first", "last", "skew",
-                 "eff", "dur")
+                 "eff", "dur", "dur0", "comm_times", "comm_solo", "skews")
 
     def __init__(self, spec: JobSpec, nodes: List[int], topo: Topology,
                  compute_seed: int, weighted: bool = False):
@@ -261,6 +270,10 @@ class _JobRuntime:
         self.step_times: List[float] = []
         self.link_totals: Dict[str, float] = {}
         self.trace: list = []
+        # observation-only per-reported-step logs (advisor attribution)
+        self.comm_times: List[float] = []
+        self.comm_solo: List[float] = []
+        self.skews: List[float] = []
 
 
 def link_overlaps(i: int, ln: str, s_i: float, e_i: float,
@@ -470,13 +483,16 @@ class FabricEngine:
             # 3. collective costs; co-tenants split overlapping bandwidth
             if multi:
                 durs0 = [jr.schedule.total_s(jr.eff) for jr in jobs]
-                for jr, eff in zip(jobs, self._contended_effs(durs0)):
+                for jr, d0, eff in zip(jobs, durs0,
+                                       self._contended_effs(durs0)):
                     jr.eff = eff
+                    jr.dur0 = d0
                     jr.dur = jr.schedule.total_s(eff)
                 self._record_segments()
             else:
                 jr = jobs[0]
                 jr.dur = jr.schedule.total_s(jr.eff)
+                jr.dur0 = jr.dur
 
             # 4. bursty entries leave queue state behind on the shared tier
             for jr in jobs:
@@ -491,6 +507,9 @@ class FabricEngine:
                 step = finish - jr.prev_finish if t > 0 else finish
                 if t >= warmup:
                     jr.step_times.append(step)
+                    jr.comm_times.append(jr.dur)
+                    jr.comm_solo.append(jr.dur0)
+                    jr.skews.append(jr.skew)
 
                 if jr.bank is None:
                     jr.trace.append((jr.compute, jr.last, finish,
@@ -511,7 +530,9 @@ class FabricEngine:
                 jr.prev_finish = finish
 
         results = [JobResult(jr.spec, jr.nodes, jr.step_times,
-                             jr.link_totals, jr.trace, algo=jr.algo)
+                             jr.link_totals, jr.trace, algo=jr.algo,
+                             comm_times=jr.comm_times,
+                             comm_solo=jr.comm_solo, skews=jr.skews)
                    for jr in jobs]
         if not multi:
             fabric_totals = dict(results[0].link_bytes)

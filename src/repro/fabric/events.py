@@ -226,8 +226,16 @@ class LifecycleEngine:
     def _admit(self, entry) -> bool:
         """Admit a queue entry (fresh spec or preempted tenant). Returns
         True only when the entry was actually placed (capacity consumed
-        or victims evicted); False when it (re-)blocked or was rejected
-        outright."""
+        or victims evicted); False when it (re-)blocked, was held back by
+        the scheduler's admission gate, or was rejected outright."""
+        if not self.scheduler.permits(self, entry):
+            # reservation-style schedulers (EASY) hold entries that would
+            # delay the reserved head waiter even when capacity fits them
+            self.scheduler.enqueue(entry)
+            self._record("held",
+                         f"{entry.name}: held by {self.scheduler.name} "
+                         f"reservation")
+            return False
         reason = self._try_place(entry)
         if reason is self._REJECTED:
             return False
@@ -614,7 +622,7 @@ class LifecycleEngine:
         tenant.pending_schedule.accumulate_bytes(eff, tenant.link_bytes)
         tenant.pending_schedule.accumulate_bytes(eff, self.link_bytes)
         self._now = max(self._now, finish)
-        tenant.resolved(finish, dur)
+        tenant.resolved(finish, dur, d0)
         for kind, detail in tenant.drain_log():
             self._record(kind, detail)
         if tenant.detector is not None:

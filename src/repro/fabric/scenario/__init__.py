@@ -711,6 +711,32 @@ class Result:
             snap["tenants"].append(entry)
         return snap
 
+    def attribute(self):
+        """Bottleneck attribution (:func:`repro.fabric.advisor.
+        attribute`): decompose each tenant's overhead above its
+        uncontended compute+comm floor into the paper's failure-mode
+        buckets (synchronization / contention / locality) plus a signed
+        residual that reconstructs the measured overhead bit-exactly.
+        Needs a reference-backend result (the batched backends carry
+        series only)."""
+        from repro.fabric import advisor as _advisor
+        return _advisor.attribute(self)
+
+    def advise(self, **kw):
+        """Attribution-guided counterfactual recommendations
+        (:func:`repro.fabric.advisor.advise`): ranked
+        :class:`~repro.fabric.advisor.Recommendation` values along the
+        axes the attribution implicates, executed as one batched sweep
+        and reference-verified at the top."""
+        from repro.fabric import advisor as _advisor
+        return _advisor.advise(self.scenario, self, **kw)
+
+    def diagnose(self) -> str:
+        """The attribution summary as a report string — the narrative
+        front door ROADMAP promised (``diagnostics()`` stays the raw
+        per-tenant metric dict)."""
+        return self.attribute().summary()
+
     # -- trace export / validation ------------------------------------------
     def to_trace(self):
         """Export this run as a :class:`repro.fabric.trace.Trace`

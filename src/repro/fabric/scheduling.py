@@ -21,8 +21,7 @@ This module makes the policy explicit and pluggable
     offered to the rest of the queue. Admission stays work-conserving
     (PR-2 semantics): a *fresh arrival* that fits free capacity is
     admitted immediately, without reserving nodes for queued waiters —
-    EASY-style reservations need runtime estimates and are a ROADMAP
-    follow-up.
+    ``easy`` adds exactly that reservation.
   * ``preempt`` — ``backfill`` plus admission-time eviction: when a blocked
     entry outranks running *training* tenants, the engine evicts the
     lowest-priority victims (most recently admitted first among equals)
@@ -42,11 +41,14 @@ the policy name) per scenario.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Union
+import math
+import statistics
+from typing import List, Optional, Tuple, Union
 
 from repro.fabric.engine import JobSpec
+from repro.fabric.placement import place
 from repro.fabric.policies import SCHEDULERS
-from repro.fabric.workloads import InferenceSpec, Tenant
+from repro.fabric.workloads import InferenceSpec, Tenant, _compile
 
 # a spec that has never been admitted, or a preempted tenant that will
 # resume with its progress intact
@@ -97,6 +99,14 @@ class Scheduler:
     def on_blocked(self, engine, entry: QueueEntry) -> bool:
         return False
 
+    def permits(self, engine, entry: QueueEntry) -> bool:
+        """Admission gate the engine consults *before* trying to place
+        ``entry``. The default is work-conserving (everything is
+        permitted); reservation-style schedulers (EASY) return False to
+        hold an entry that would delay the reserved head waiter, and the
+        engine re-enqueues it without a placement attempt."""
+        return True
+
 
 @SCHEDULERS.register("fifo")
 class FifoScheduler(Scheduler):
@@ -145,6 +155,160 @@ class PreemptScheduler(BackfillScheduler):
 
     def on_blocked(self, engine, entry: QueueEntry) -> bool:
         return engine._preempt_for(entry)
+
+
+@SCHEDULERS.register("easy")
+class EasyScheduler(BackfillScheduler):
+    """Backfill with an EASY-style **reservation** for the head waiter.
+
+    Plain backfill is work-conserving but can starve a wide tenant: while
+    it waits for enough free nodes, every smaller arrival slips past it
+    and re-occupies the capacity it was accumulating. EASY (the classic
+    Argonne backfill variant) fixes that with one reservation: using
+    runtime estimates it computes the *shadow time* ``t_res`` — the
+    earliest instant enough running tenants will have released nodes for
+    the head of the queue — and only backfills an entry when doing so
+    cannot delay that start: the entry either finishes by ``t_res``
+    (estimated from its ``JobSpec.iters`` iteration budget, observed
+    step times for a preempted resume) or fits inside the *extra* nodes
+    that will be free at ``t_res`` beyond the head's need.
+
+    Runtime estimates: a running training tenant finishes after its
+    remaining iteration budget at its observed mean step time (its
+    compiled-schedule floor derated by the configured mean shared-link
+    utilization before any step lands); a scheduled :class:`Departure`
+    caps any tenant's estimate; tenants with neither (open-ended
+    training, inference fleets with no departure) never release — when
+    the head's need cannot be met by estimable releases there is no
+    reservation to protect and backfill is unrestricted. Entries whose
+    completion cannot be estimated (no iteration budget) only backfill
+    through the extra-nodes condition, never the time condition, so a
+    bad estimate can hold work back but never delay the reserved head.
+    """
+
+    name = "easy"
+
+    # -- reservation math --------------------------------------------------
+    @staticmethod
+    def _need(entry: QueueEntry) -> int:
+        if isinstance(entry, Tenant):
+            return len(entry.nodes)
+        return entry.total_ranks
+
+    def _head(self) -> Optional[QueueEntry]:
+        """The reserved waiter: highest priority in the queue, arrival
+        order among equals (the first entry a drain would offer)."""
+        head = None
+        for entry in self.queue:
+            if head is None or entry_priority(entry) > entry_priority(head):
+                head = entry
+        return head
+
+    @staticmethod
+    def _est_step(engine, floor: float, base_s: float) -> float:
+        """Optimistic per-step estimate before any step has landed: local
+        compute plus the schedule floor derated by the mean background
+        utilization of the shared tier."""
+        u = min(engine.congestion_cfg.u_mean, 0.99)
+        return base_s + floor / (1.0 - u)
+
+    @staticmethod
+    def _departure_at(engine, name: str) -> float:
+        from repro.fabric.events import Departure
+        for (t, _i, ev) in engine._timeline:
+            if isinstance(ev, Departure) and ev.name == name \
+                    and t >= engine._now:
+                return t
+        return math.inf
+
+    def _est_finish(self, engine, tenant: Tenant) -> float:
+        """Estimated release time of a *running* tenant's nodes."""
+        est = math.inf
+        if tenant.kind == "training" and tenant.spec.iters is not None:
+            remaining = max(tenant.spec.iters - tenant.iters_done, 0)
+            if tenant.step_times:
+                per = statistics.fmean(tenant.step_times)
+            else:
+                per = self._est_step(engine, tenant.floor_denom,
+                                     tenant.spec.stragglers.base_compute_s)
+            est = engine._now + remaining * per
+        return min(est, self._departure_at(engine, tenant.name))
+
+    def _est_completion(self, engine, entry: QueueEntry
+                        ) -> Optional[float]:
+        """Estimated completion if ``entry`` were admitted now; None when
+        no iteration budget bounds it (inference, open-ended training)."""
+        if isinstance(entry, Tenant):
+            if entry.kind != "training" or entry.spec.iters is None:
+                return None
+            remaining = max(entry.spec.iters - entry.iters_done, 0)
+            if entry.step_times:
+                per = statistics.fmean(entry.step_times)
+            else:
+                per = self._est_step(engine, entry.floor_denom,
+                                     entry.spec.stragglers.base_compute_s)
+            return engine._now + remaining * per
+        if not isinstance(entry, JobSpec) or entry.iters is None:
+            return None
+        # fresh spec: trial-place with the exact seed admission would use
+        # so the compiled-schedule floor matches the real placement
+        taken = set(engine._taken) | engine._dead
+        if entry.nodes is not None:
+            nodes = list(entry.nodes)
+            if taken.intersection(nodes):
+                return None
+        else:
+            try:
+                nodes = place(entry.placement, engine.topo,
+                              entry.total_ranks, taken=taken,
+                              seed=engine.base_seed
+                              + 101 * engine._tenant_seq, spec=entry)
+            except ValueError:
+                return None
+        _algo, sched = _compile(engine.topo, nodes, entry.grad_bytes,
+                                entry.algo, entry.group)
+        per = self._est_step(engine, sched.total_s(None),
+                             entry.stragglers.base_compute_s)
+        return engine._now + entry.iters * per
+
+    def _reservation(self, engine, head: QueueEntry
+                     ) -> Optional[Tuple[float, int]]:
+        """``(t_res, extra)`` for the head's reservation: the estimated
+        shadow time and the nodes free at it beyond the head's need —
+        or None when estimable releases can never satisfy the head
+        (nothing to protect)."""
+        need_h = self._need(head)
+        free = engine.topo.n_ranks - len(set(engine._taken) | engine._dead)
+        if free >= need_h:
+            return engine._now, free - need_h
+        releases = sorted(
+            (self._est_finish(engine, t),
+             sum(1 for nd in t.nodes if nd not in engine._dead))
+            for t in engine._active)
+        for est, n in releases:
+            if math.isinf(est):
+                return None
+            free += n
+            if free >= need_h:
+                return est, free - need_h
+        return None
+
+    def permits(self, engine, entry: QueueEntry) -> bool:
+        head = self._head()
+        if head is None or head is entry \
+                or entry_name(head) == entry_name(entry) \
+                or entry_priority(entry) > entry_priority(head):
+            # no reservation, the reserved waiter itself, or an entry
+            # that outranks it (and so becomes the effective head)
+            return True
+        res = self._reservation(engine, head)
+        if res is None:
+            return True
+        t_res, extra = res
+        if self._need(entry) <= extra:
+            return True
+        est = self._est_completion(engine, entry)
+        return est is not None and est <= t_res
 
 
 def make_scheduler(spec: Union[str, Scheduler], **kwargs) -> Scheduler:

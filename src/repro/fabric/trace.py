@@ -54,6 +54,7 @@ import json
 import math
 import os
 import statistics
+import warnings
 from typing import (Any, Dict, List, Mapping, Optional, Sequence, Tuple,
                     Union)
 
@@ -71,6 +72,30 @@ RECORD_KINDS = ("arrival", "step", "collective", "request", "failure",
                 "departure")
 TENANT_KINDS = ("training", "inference")
 COLLECTIVE_KINDS = ("prefill", "decode")
+
+
+# index-of-dispersion (variance/mean of inter-arrivals) above which a
+# Poisson replay misrepresents the request stream's burst structure
+BURST_DISPERSION_THRESHOLD = 2.0
+
+
+class BurstDispersionWarning(UserWarning):
+    """A trace-fitted inference tenant's arrival stream is burstier than
+    the Poisson replay model (index of dispersion above
+    :data:`BURST_DISPERSION_THRESHOLD`): replayed tail latency will
+    understate the observed tail, and what-if predictions for this
+    tenant deserve discounted confidence (the advisor's ``bursty=``
+    parameter). ``tenant`` / ``dispersion`` carry the offender so
+    callers can filter programmatically."""
+
+    def __init__(self, tenant: str, dispersion: float):
+        self.tenant = tenant
+        self.dispersion = dispersion
+        super().__init__(
+            f"tenant {tenant!r}: bursty arrivals (dispersion "
+            f"{dispersion:.2f} > {BURST_DISPERSION_THRESHOLD}); the "
+            f"Poisson rate fit is a mean-rate approximation and replayed "
+            f"tails will understate the observed ones")
 
 
 class TraceError(ValueError):
@@ -839,11 +864,13 @@ def _fit_inference_spec(tr: Trace, marker: Mapping[str, Any],
         rate, dispersion = fit_poisson_rate(
             [float(r["arrival_s"]) for r in reqs])
         arrivals[name] = (rate, dispersion)
-        if dispersion > 2.0:
+        if dispersion > BURST_DISPERSION_THRESHOLD:
             notes.append(
                 f"tenant {name!r}: bursty arrivals (dispersion "
                 f"{dispersion:.2f}); the Poisson rate fit is a mean-rate "
                 f"approximation")
+            warnings.warn(BurstDispersionWarning(name, dispersion),
+                          stacklevel=2)
     except TraceError:
         rate = float(marker.get("rate_rps", defaults.rate_rps))
         notes.append(f"tenant {name!r}: fewer than 2 completed requests; "

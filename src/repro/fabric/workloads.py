@@ -216,8 +216,11 @@ class Tenant:
         """Form the next pending collective (sets ``pending_*``)."""
         raise NotImplementedError
 
-    def resolved(self, finish: float, dur: float) -> None:
-        """The pending collective completed at ``finish``."""
+    def resolved(self, finish: float, dur: float,
+                 d0: Optional[float] = None) -> None:
+        """The pending collective completed at ``finish`` after ``dur``
+        seconds contended (``d0`` = its co-tenant-free duration under the
+        same background congestion; observation only — advisor input)."""
         raise NotImplementedError
 
     def shrink_plan(self, survivors: int) -> int:
@@ -254,6 +257,15 @@ class TrainingTenant(Tenant):
         # 1:1 with step_times — observation only, no engine effect
         self.step_finish: List[float] = []
         self.comm_times: List[float] = []
+        # advisor instrumentation — observation only, no engine effect:
+        # pre-contention collective duration, entry skew, and per-rank
+        # compute mean/max per resolved step, aligned 1:1 with step_times
+        self.comm_solo: List[float] = []
+        self.skews: List[float] = []
+        self.comp_means: List[float] = []
+        self.comp_maxs: List[float] = []
+        self._comp_mean = 0.0
+        self._comp_max = 0.0
         self.iters_done = 0
         self._release = 0.0
         self._release_arr: Optional[np.ndarray] = None
@@ -312,16 +324,23 @@ class TrainingTenant(Tenant):
             first = float(arrival.min())
             last = float(arrival.max())
         self._last = last
+        self._comp_mean = statistics.fmean(compute)
+        self._comp_max = max(compute)
         self.pending_start = last
         self.pending_skew = (last - first) / self.floor_denom
         self.pending_schedule = self.schedule
         self.pending_demand = self.demand
         self.pending_floor = self.floor_denom
 
-    def resolved(self, finish: float, dur: float) -> None:
+    def resolved(self, finish: float, dur: float,
+                 d0: Optional[float] = None) -> None:
         self.step_times.append(finish - self._prev_finish)
         self.step_finish.append(finish)
         self.comm_times.append(dur)
+        self.comm_solo.append(d0 if d0 is not None else dur)
+        self.skews.append(self.pending_skew)
+        self.comp_means.append(self._comp_mean)
+        self.comp_maxs.append(self._comp_max)
         self._prev_finish = finish
         self.iters_done += 1
         if self._bank is None:
@@ -548,6 +567,10 @@ class InferenceTenant(Tenant):
         self.request_log: List[Tuple[float, float]] = []
         self.collective_log: List[Tuple[float, str, float, float,
                                         int]] = []
+        # advisor instrumentation — observation only: pre-contention
+        # duration of each resolved collective, aligned 1:1 with
+        # collective_log (parallel list; trace.py unpacks the 5-tuples)
+        self.collective_solo: List[float] = []
         self.requests_arrived = 0
         self.requests_done = 0
         self.tokens_done = 0
@@ -669,7 +692,8 @@ class InferenceTenant(Tenant):
         self.pending_demand = demand
         self.pending_floor = floor
 
-    def resolved(self, finish: float, dur: float) -> None:
+    def resolved(self, finish: float, dur: float,
+                 d0: Optional[float] = None) -> None:
         rep = self._pending_replica
         # snapshot the collective before the replica resets its pending
         # kind: occupancy is the joiner count for a prefill, the batch
@@ -681,6 +705,7 @@ class InferenceTenant(Tenant):
         self.collective_log.append(
             (finish, ckind, dur, batch_bytes(base, max(occ, 1)),
              max(occ, 1)))
+        self.collective_solo.append(d0 if d0 is not None else dur)
         rep.resolved(finish)
         self._pending_replica = None
         if finish > self._last_finish:

@@ -1,0 +1,132 @@
+"""Versioned attribution baselines for the library failure modes.
+
+The attribution invariants (``tests/test_advisor.py``) check structure;
+these baselines pin the *numbers*: each failure-mode library scenario's
+full per-tenant bucket decomposition — measured/floor/sync/contention/
+locality/residual, mean and p99, plus the analytic factors — persisted
+bit-exactly (float hex) under ``tests/baselines/advisor/``. A change to
+the engine, the congestion model, or the attribution arithmetic that
+moves any bucket by one ulp fails here with a per-path diff.
+
+Regenerate (only when a behavior change is intended and reviewed):
+
+    make baselines            # regenerates these alongside the others
+    make baselines-check      # CI drift gate
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.fabric.advisor import attribute
+from repro.fabric.scenario import library
+from test_baselines import _hexify, diff_paths
+
+ADVISOR_BASELINE_DIR = os.path.join(os.path.dirname(__file__),
+                                    "baselines", "advisor")
+BASELINE_VERSION = 1
+
+# attribution is pinned for the paper's named failure modes plus the
+# mixed training/inference scenario (the coarse inference path)
+PINNED = ("synchronization_amplification", "topology_contention",
+          "locality_variance", "noisy_neighbor_inference")
+
+REGEN_HINT = ("if the change is intended and reviewed, regenerate with "
+              "`make baselines` and commit the diff under "
+              "tests/baselines/advisor/")
+
+
+def snapshot(name: str) -> dict:
+    result = library.build(name).run()
+    return {"version": BASELINE_VERSION, "scenario": name,
+            "attribution": _hexify(attribute(result).to_dict())}
+
+
+def baseline_path(name: str) -> str:
+    return os.path.join(ADVISOR_BASELINE_DIR, f"{name}.json")
+
+
+def check(name: str) -> list:
+    path = baseline_path(name)
+    if not os.path.exists(path):
+        return [f"$: no advisor baseline recorded at {path}"]
+    with open(path) as f:
+        expected = json.load(f)
+    return diff_paths(expected, snapshot(name))
+
+
+@pytest.mark.parametrize("name", sorted(PINNED))
+def test_attribution_matches_baseline(name):
+    drift = check(name)
+    assert not drift, (
+        f"{name}: attribution drifted from tests/baselines/advisor/"
+        f"{name}.json — {REGEN_HINT}\n  " + "\n  ".join(drift))
+
+
+def test_every_advisor_baseline_is_pinned():
+    on_disk = {f[:-5] for f in os.listdir(ADVISOR_BASELINE_DIR)
+               if f.endswith(".json")}
+    assert on_disk == set(PINNED), (
+        f"advisor baseline files {sorted(on_disk)} != pinned set "
+        f"{sorted(PINNED)} — {REGEN_HINT}")
+
+
+def test_baselines_pin_the_dominant_buckets():
+    """The acceptance matrix is readable straight off the committed
+    files (no simulation): each failure mode's recorded dominant bucket
+    matches its name."""
+    expect = {"synchronization_amplification": ("bsp", "synchronization_s"),
+              "topology_contention": ("primary", "contention_s"),
+              "locality_variance": ("job", "locality_s")}
+    for name, (tenant, bucket) in expect.items():
+        with open(baseline_path(name)) as f:
+            mean = json.load(f)["attribution"]["tenants"][tenant]["mean"]
+        vals = {k: float.fromhex(v) for k, v in mean.items()
+                if k in ("synchronization_s", "contention_s",
+                         "locality_s")}
+        assert max(vals, key=vals.get) == bucket, (name, vals)
+
+
+# ---------------------------------------------------------------------------
+# regen / check entry points (driven by make baselines / baselines-check)
+# ---------------------------------------------------------------------------
+
+
+def regen(only=None) -> None:
+    os.makedirs(ADVISOR_BASELINE_DIR, exist_ok=True)
+    for stale in sorted(os.listdir(ADVISOR_BASELINE_DIR)):
+        if stale.endswith(".json") and stale[:-5] not in PINNED:
+            os.remove(os.path.join(ADVISOR_BASELINE_DIR, stale))
+            print(f"removed stale {stale}")
+    for name in sorted(PINNED):
+        if only and name not in only:
+            continue
+        with open(baseline_path(name), "w") as f:
+            json.dump(snapshot(name), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {baseline_path(name)}")
+
+
+def run_check() -> int:
+    bad = 0
+    for name in sorted(PINNED):
+        drift = check(name)
+        if drift:
+            bad += 1
+            print(f"DRIFT {name}:")
+            for d in drift:
+                print(f"  {d}")
+        else:
+            print(f"ok    {name}")
+    if bad:
+        print(f"\n{bad} attribution(s) drifted from "
+              f"tests/baselines/advisor/ — {REGEN_HINT}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--check" in argv:
+        sys.exit(run_check())
+    regen(only=set(argv) or None)
