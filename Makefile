@@ -11,7 +11,7 @@ export PYTHONPATH := src
 SLOW_MARKER := slow
 
 .PHONY: test test-slow test-all test-pallas bench-smoke bench scenarios \
-	baselines baselines-check trace traces advisor
+	baselines baselines-check trace traces advisor docs-check
 
 test:            ## default tier-1 ($(SLOW_MARKER) excluded via pytest.ini)
 	$(PY) -m pytest -x -q
@@ -39,6 +39,9 @@ traces:          ## regenerate tests/traces/ from the seeded generators
 advisor:         ## bottleneck attribution + what-if advisor (CI job)
 	$(PY) -m benchmarks.run --only advisor $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 
+docs-check:      ## run every fenced python block in docs/ + check links (CI job)
+	$(PY) scripts/docs_check.py
+
 baselines:       ## (re)record tests/baselines/ fingerprints — review the diff!
 	$(PY) tests/test_baselines.py
 	$(PY) tests/test_trace_baselines.py
@@ -57,6 +60,7 @@ bench-smoke:     ## the CI benchmark smoke sections (ARTIFACTS= to persist)
 	$(PY) -m benchmarks.run --only wfq
 	$(PY) -m benchmarks.run --only batching $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 	$(PY) -m benchmarks.run --only scenarios $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
+	$(PY) -m benchmarks.run --only topology $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 	$(PY) -m benchmarks.run --only pacing
 	$(PY) -m benchmarks.run --only backend $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))
 	$(PY) -m benchmarks.run --only kernels $(if $(ARTIFACTS),--artifacts $(ARTIFACTS))

@@ -11,6 +11,8 @@
   batching    — continuous-batching sweep: batch size vs p99/throughput
                 (single stream vs batch-join fleets at high arrival rate)
   scenarios   — scenario-library smoke: every named scenario end to end
+  topology    — ranks vs step cost across fat_tree/rail/multi-pod and
+                ecmp_static vs adaptive_spray (sparse-fabric scaling)
   pacing      — vectorized PacingBank vs scalar controllers (before/after)
   speedup     — compiled-schedule engine vs seed per-call loop wall-clock
   backend     — batched jnp grid sweep vs sequential reference engine
@@ -41,8 +43,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["table1", "scaling", "taxonomy", "multitenant",
                              "lifecycle", "wfq", "batching", "scenarios",
-                             "pacing", "speedup", "backend", "kernels",
-                             "trace", "advisor", "roofline"])
+                             "topology", "pacing", "speedup", "backend",
+                             "kernels", "trace", "advisor", "roofline"])
     ap.add_argument("--artifacts", default=None, metavar="DIR",
                     help="write sections' CSV/JSON artifacts into DIR")
     args = ap.parse_args()
@@ -84,6 +86,11 @@ def main() -> None:
         sections.append(("scenarios (named scenario library smoke)",
                          scenarios.rows))
         artifact_writers.append(scenarios.write_artifacts)
+    if args.only in (None, "topology"):
+        from benchmarks import topology_bench
+        sections.append(("topology_bench (sparse fabrics: ranks vs step "
+                         "cost, ecmp vs spray)", topology_bench.rows))
+        artifact_writers.append(topology_bench.write_artifacts)
     if args.only in (None, "pacing"):
         from benchmarks import pacing_bench
         sections.append(("pacing (vectorized bank vs scalar controllers)",

@@ -31,8 +31,10 @@ measured overhead bit-exactly.
 
 **Counterfactual advisor** — :func:`advise` generates alternate
 scenarios only along axes the attribution implicates (placement swaps
-for locality, fairness/weight/scheduler changes for contention —
-including the EASY-backfill scheduler — pacing and algo changes for
+for locality, fairness/weight/scheduler/routing changes for contention —
+including the EASY-backfill scheduler and, on multi-pod fabrics with
+parallel inter-pod paths still on ``ecmp_static``, the
+``adaptive_spray`` routing policy — pacing and algo changes for
 synchronization), executes them as one batched sweep
 (:func:`repro.fabric.backend.counterfactual_sweep`), optionally
 re-verifies the best cells on the reference backend, and returns ranked
@@ -557,6 +559,11 @@ def _candidates(scenario, attr: Attribution
                 add(f"algo {spec.algo}->hierarchical", "locality",
                     spec.name, {f"{path}.algo": "hierarchical"})
         if "contention" in implicated:
+            if scenario.topology.kind == "multi_pod" \
+                    and scenario.topology.inter_pod_links > 1 \
+                    and scenario.policies.routing == "ecmp_static":
+                add("adaptive inter-pod routing", "contention", spec.name,
+                    {"policies.routing": "adaptive_spray"})
             if spec.weight < 4.0:
                 add("wfq weight boost", "contention", spec.name,
                     {"policies.fairness": "wfq",

@@ -229,7 +229,9 @@ def counterfactual_sweep(scenarios, backend: Union[str, KernelType] = "jnp"
     if kind in (KernelType.JNP, KernelType.PALLAS):
         eligible = [i for i, s in enumerate(scenarios)
                     if s.jobs is not None
-                    and s.policies.fairness in JNP_SCENARIO_FAIRNESS]
+                    and s.policies.fairness in JNP_SCENARIO_FAIRNESS
+                    and getattr(s.policies, "routing", "ecmp_static")
+                    == "ecmp_static"]
     if eligible:
         from repro.fabric.backend.jnp_engine import run_scenarios
         try:

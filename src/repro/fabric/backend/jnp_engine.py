@@ -147,11 +147,16 @@ def _encode_schedule(sched, lidx: Dict[str, int], L: int):
     signature (static); ``arrays`` the per-variant float coefficients.
     """
     from repro.fabric.collectives import (_HierSchedule, _RingSchedule,
-                                          _TreeSchedule, _ZeroSchedule)
+                                          _SharpSchedule, _TreeSchedule,
+                                          _ZeroSchedule)
     stages: List[tuple] = []    # (m:int, entries:[(idx, num, bw, lat)])
     groups: List[Tuple[str, Tuple[int, ...]]] = []
 
     def add_stage(m: int, plan) -> int:
+        if getattr(plan, "spray", ()):
+            raise BackendError(
+                "jnp backend cannot encode adaptive-spray step plans; "
+                "nearest supported backend: 'reference'")
         entries = [(lidx.get(ln, L), num, bw, lat)
                    for (ln, num, bw, lat) in plan.entries]
         stages.append((m, entries))
@@ -160,7 +165,7 @@ def _encode_schedule(sched, lidx: Dict[str, int], L: int):
     def add(sched) -> None:
         if isinstance(sched, _ZeroSchedule):
             return
-        if isinstance(sched, _RingSchedule):
+        if isinstance(sched, (_RingSchedule, _SharpSchedule)):
             groups.append(("sum", (add_stage(sched.steps, sched.plan),)))
         elif isinstance(sched, _TreeSchedule):
             groups.append(("sum", tuple(add_stage(2, plan)
@@ -221,10 +226,11 @@ def _build_jobs(scenario, topo):
             eng = FabricEngine(topo, list(scenario.jobs),
                                congestion=scenario.congestion,
                                base_seed=scenario.base_seed,
-                               fairness=scenario.policies.fairness)
+                               fairness=scenario.policies.fairness,
+                               routing=scenario.policies.routing)
         return topo, eng._jobs
     key = (scenario.topology, scenario.jobs, scenario.policies.fairness,
-           scenario.base_seed)
+           scenario.policies.routing, scenario.base_seed)
     hit = _ENGINE_CACHE.get(key)
     if hit is None:
         topo = scenario.topology.build()
@@ -232,7 +238,8 @@ def _build_jobs(scenario, topo):
             eng = FabricEngine(topo, list(scenario.jobs),
                                congestion=scenario.congestion,
                                base_seed=scenario.base_seed,
-                               fairness=scenario.policies.fairness)
+                               fairness=scenario.policies.fairness,
+                               routing=scenario.policies.routing)
         hit = _ENGINE_CACHE[key] = (topo, eng._jobs)
     return hit
 
@@ -249,10 +256,23 @@ def _prep(scenario, topo=None, backend: str = "jnp") -> _Prep:
             f"backend={backend!r} supports fairness {SUPPORTED_FAIRNESS}; "
             f"unsupported feature: fairness={fairness!r}; nearest "
             f"supported backend: 'reference'")
+    from repro.fabric.policies import ROUTING
+    if ROUTING.get(scenario.policies.routing).adaptive:
+        raise BackendError(
+            f"backend={backend!r} runs static-jobs scenarios only; "
+            f"unsupported feature: routing={scenario.policies.routing!r} "
+            f"(per-iteration byte re-split); nearest supported backend: "
+            f"'reference'")
     topo, jobs = _build_jobs(scenario, topo)
     J = len(jobs)
     iters = scenario.iters
-    shared = [ln for ln, link in topo.links.items() if link.shared]
+    if topo.sparse_links:
+        # match the reference engine's tracked-link insertion order
+        # (CongestionModel.track per job) so the gauss stream lines up
+        shared = list(dict.fromkeys(
+            ln for jr in jobs for ln in jr.shared_demand))
+    else:
+        shared = [ln for ln, link in topo.links.items() if link.shared]
     lidx = {ln: i for i, ln in enumerate(shared)}
     L = len(shared)
     cc = scenario.congestion if scenario.congestion is not None \

@@ -10,13 +10,41 @@ This is exactly the paper's point (§3.2): aggregate bandwidth says ring
 all-reduce should be flat in N, but the *shared up-links* carry
 `flows-on-link x chunk` every step, so hierarchical/oversubscribed fabrics
 bend the curve well before link peak is reached.
+
+Contracts:
+
+  * **Bit-compat.** Compiled schedules replicate the per-call functions'
+    arithmetic exactly (operand order, dict insertion order, bottleneck
+    tie-breaking) — held by ``tests/test_compiled_schedules.py`` and the
+    golden/fingerprint baselines. ``routing=None`` (== the ``ecmp_static``
+    entry of the ``ROUTING`` registry, :mod:`repro.fabric.policies`)
+    resolves multi-path route tokens to one hash-pinned member at compile
+    time, so single-path topologies are unaffected byte-for-byte.
+  * **Algos.** ``ring`` / ``tree`` / ``hierarchical`` plus ``sharp``
+    (switch-aggregated in-network allreduce) on topologies that declare
+    ``sharp_capacity_bytes >= nbytes``; an explicit ``algo="sharp"``
+    beyond capacity falls back deterministically to the faster of
+    ring/tree. ``select_algo`` appends ``sharp`` to the default candidate
+    set only when the topology's capacity admits the payload, so
+    ``algo="auto"`` selections on existing fabrics are unchanged.
+  * **Backends.** All schedules run on the reference backend (the
+    executable spec). The jnp scenario runner encodes ring/tree/
+    hierarchical/sharp static plans; schedules carrying adaptive-spray
+    entries are reference-only and the jnp path raises ``BackendError``
+    (nearest-backend contract, :mod:`repro.fabric.backend`).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.fabric.topology import Topology
+from repro.fabric.topology import (Topology, is_route_token,
+                                   parse_route_token)
+
+
+# adaptive spray rows keep the routing-group identity ("@pp0-1") in
+# bottleneck reports instead of any single member link
+ROUTE_KEY_PREFIX = "@"
 
 
 @dataclasses.dataclass
@@ -39,6 +67,13 @@ def _step_time(
     flows: Dict[str, int] = {}
     for links in hop_links:
         for ln in links:
+            if is_route_token(ln):
+                # per-call path is static-only: ECMP hash-pin (the
+                # ecmp_static default; adaptive spray needs a compiled
+                # schedule)
+                group, salt = parse_route_token(ln)
+                members = topo.path_group(group)
+                ln = members[salt % len(members)]
             flows[ln] = flows.get(ln, 0) + 1
     worst, worst_link = 0.0, ""
     per_link_bytes: Dict[str, float] = {}
@@ -180,25 +215,75 @@ class _StepPlan:
     fixes bottleneck tie-breaking): ``(name, num, bw1e9, latency)`` where
     ``num = conc * chunk_bytes`` is the serialized bytes on the link and
     ``bw1e9 = bw_gbps * 1e9`` the uncongested bandwidth in B/s.
+
+    Route tokens (``@group#salt`` hop entries from multi-path topologies)
+    resolve through ``routing``: static policies pin one member link here
+    at compile time (the token disappears into a plain entry); an adaptive
+    policy keeps the member group as a ``spray`` row —
+    ``(key, num, cap0, max_lat, members)`` with ``members`` as
+    ``((name, bw1e9), ...)`` — whose bytes split across members in
+    proportion to observed effective capacity at every ``time()`` call.
+    Byte accounting for spray rows splits equally across members
+    (congestion-independent, so static-bytes schedules stay static).
+
+    ``aggregate=True`` is the in-network (SHARP) mode: the switch tier
+    combines payloads, so every link carries one copy of the payload
+    regardless of how many flows cross it (``conc = 1``,
+    ``step_bytes = chunk``).
     """
 
-    __slots__ = ("entries", "step_bytes")
+    __slots__ = ("entries", "spray", "step_bytes")
 
     def __init__(self, hop_links: List[List[str]], chunk_bytes: float,
-                 topo: Topology):
+                 topo: Topology, routing=None, aggregate: bool = False):
+        adaptive = routing is not None and routing.adaptive
         flows: Dict[str, int] = {}
+        groups: Dict[str, Tuple[str, ...]] = {}
         for links in hop_links:
             for ln in links:
+                if is_route_token(ln):
+                    group, salt = parse_route_token(ln)
+                    members = topo.path_group(group)
+                    if adaptive:
+                        ln = ROUTE_KEY_PREFIX + group
+                        groups[ln] = tuple(members)
+                    elif routing is not None:
+                        ln = routing.choose(members, salt)
+                    else:
+                        ln = members[salt % len(members)]
                 flows[ln] = flows.get(ln, 0) + 1
         entries = []
+        spray = []
         step_bytes: Dict[str, float] = {}
         for ln, f in flows.items():
+            members = groups.get(ln)
+            if members is not None:
+                links = [topo.link(m) for m in members]
+                conc = 1 if aggregate else \
+                    (f if links[0].shared else 1)
+                num = conc * chunk_bytes
+                cap0 = sum(l.bw_gbps for l in links) * 1e9
+                lat = max(l.latency_s for l in links)
+                spray.append((ln, num, cap0, lat,
+                              tuple((l.name, l.bw_gbps * 1e9)
+                                    for l in links)))
+                share = (1 if aggregate else f) \
+                    * chunk_bytes / len(members)
+                for l in links:
+                    step_bytes[l.name] = \
+                        step_bytes.get(l.name, 0.0) + share
+                continue
             link = topo.link(ln)
-            conc = f if link.shared else 1
+            if aggregate:
+                conc, carried = 1, chunk_bytes
+            else:
+                conc = f if link.shared else 1
+                carried = f * chunk_bytes
             entries.append((ln, conc * chunk_bytes, link.bw_gbps * 1e9,
                             link.latency_s))
-            step_bytes[ln] = f * chunk_bytes
+            step_bytes[ln] = step_bytes.get(ln, 0.0) + carried
         self.entries = tuple(entries)
+        self.spray = tuple(spray)
         self.step_bytes = step_bytes
 
     def time(self, link_eff: Optional[Dict[str, float]]
@@ -209,10 +294,21 @@ class _StepPlan:
                 t = num / bw + lat
                 if t > worst:
                     worst, worst_link = t, ln
+            for ln, num, cap0, lat, members in self.spray:
+                t = num / cap0 + lat
+                if t > worst:
+                    worst, worst_link = t, ln
         else:
             get = link_eff.get
             for ln, num, bw, lat in self.entries:
                 t = num / (bw * get(ln, 1.0)) + lat
+                if t > worst:
+                    worst, worst_link = t, ln
+            for ln, num, cap0, lat, members in self.spray:
+                cap = 0.0
+                for m, bw in members:
+                    cap += bw * get(m, 1.0)
+                t = num / cap + lat if cap > 0.0 else float("inf")
                 if t > worst:
                     worst, worst_link = t, ln
         return worst, worst_link
@@ -280,10 +376,12 @@ class _StaticBytesSchedule(CompiledSchedule):
 class _RingSchedule(_StaticBytesSchedule):
     algo = "ring"
 
-    def __init__(self, topo: Topology, ranks: Sequence[int], nbytes: float):
+    def __init__(self, topo: Topology, ranks: Sequence[int], nbytes: float,
+                 routing=None):
         n = len(ranks)
         self.steps = 2 * (n - 1)
-        self.plan = _StepPlan(topo.ring_hops(ranks), nbytes / n, topo)
+        self.plan = _StepPlan(topo.ring_hops(ranks), nbytes / n, topo,
+                              routing)
         self._bytes = {ln: b * self.steps
                        for ln, b in self.plan.step_bytes.items()}
 
@@ -299,7 +397,8 @@ class _RingSchedule(_StaticBytesSchedule):
 class _TreeSchedule(_StaticBytesSchedule):
     algo = "tree"
 
-    def __init__(self, topo: Topology, ranks: Sequence[int], nbytes: float):
+    def __init__(self, topo: Topology, ranks: Sequence[int], nbytes: float,
+                 routing=None):
         import math
         n = len(ranks)
         depth = math.ceil(math.log2(n))
@@ -312,7 +411,7 @@ class _TreeSchedule(_StaticBytesSchedule):
                     for i in range(0, n - stride, stride * 2)]
             if not hops:
                 continue
-            plan = _StepPlan(hops, nbytes, topo)
+            plan = _StepPlan(hops, nbytes, topo, routing)
             self.levels.append(plan)
             for ln, b in plan.step_bytes.items():
                 per_link_total[ln] = per_link_total.get(ln, 0.0) + b
@@ -344,14 +443,14 @@ class _HierSchedule(CompiledSchedule):
     algo = "hierarchical"
 
     def __init__(self, topo: Topology, ranks: Sequence[int], nbytes: float,
-                 group: int):
+                 group: int, routing=None):
         intra_groups = [list(ranks[i:i + group])
                         for i in range(0, len(ranks), group)]
-        self.intra = [_RingSchedule(topo, g, nbytes)
+        self.intra = [_RingSchedule(topo, g, nbytes, routing)
                       for g in intra_groups if len(g) > 1]
         leaders = [g[0] for g in intra_groups]
         self.inter = compile_schedule(topo, leaders, nbytes / group,
-                                      algo="ring")
+                                      algo="ring", routing=routing)
 
     def cost(self, link_eff=None) -> CollectiveCost:
         intra = CollectiveCost(0.0, 0, "", {})
@@ -377,13 +476,70 @@ class _HierSchedule(CompiledSchedule):
         return intra + self.inter.total_s(link_eff)
 
 
+class _SharpSchedule(_StaticBytesSchedule):
+    """Switch-aggregated (SHARP-style) in-network allreduce.
+
+    Every rank pushes its contribution one level up (rank -> locality-group
+    leader switch), leaders push to the root switch, and the aggregated
+    result broadcasts back down — two mirrored phases over one aggregate
+    step plan. The in-network reduction means each link carries *one* copy
+    of the payload per direction regardless of fan-in (``aggregate=True``
+    on the plan), which is the entire point of offloading the reduction to
+    the switch ASICs. Only topologies that declare
+    ``sharp_capacity_bytes >= nbytes`` compile this schedule — see
+    :func:`compile_schedule` for the oversubscription fallback.
+    """
+
+    algo = "sharp"
+
+    def __init__(self, topo: Topology, ranks: Sequence[int], nbytes: float,
+                 group: int, routing=None):
+        groups = [list(ranks[i:i + group])
+                  for i in range(0, len(ranks), group)]
+        hops: List[List[str]] = []
+        for g in groups:
+            leader = g[0]
+            for rank in g[1:]:
+                hops.append(topo.hop_links(rank, leader))
+        root = groups[0][0]
+        for g in groups[1:]:
+            hops.append(topo.hop_links(g[0], root))
+        self.steps = 2                  # reduce-up + broadcast-down
+        self.plan = _StepPlan(hops, nbytes, topo, routing, aggregate=True)
+        self._bytes = {ln: b * self.steps
+                       for ln, b in self.plan.step_bytes.items()}
+
+    def cost(self, link_eff=None) -> CollectiveCost:
+        t, bott = self.plan.time(link_eff)
+        return CollectiveCost(t * self.steps, self.steps, bott,
+                              dict(self._bytes))
+
+    def total_s(self, link_eff=None) -> float:
+        return self.plan.time(link_eff)[0] * self.steps
+
+
+def sharp_available(topo: Topology, nbytes: float) -> bool:
+    """True when the topology's in-network aggregation capacity admits a
+    payload of ``nbytes`` (0.0 on topologies without SHARP switches)."""
+    return getattr(topo, "sharp_capacity_bytes", 0.0) >= nbytes > 0.0
+
+
 def compile_schedule(topo: Topology, ranks: Sequence[int], nbytes: float, *,
-                     algo: str = "ring", group: int = 0) -> CompiledSchedule:
+                     algo: str = "ring", group: int = 0,
+                     routing=None) -> CompiledSchedule:
     """Precompute the flow structure of one all-reduce over ``ranks``.
 
     Returns a :class:`CompiledSchedule` whose ``cost(link_eff)`` equals
     :func:`all_reduce` for the same arguments, evaluated without re-walking
-    the topology.
+    the topology. ``routing`` is a resolved
+    :class:`~repro.fabric.policies.RoutingPolicy` (or None for the
+    bit-compat ``ecmp_static`` default) deciding how multi-path route
+    tokens map onto parallel member links.
+
+    ``algo="sharp"`` beyond the topology's ``sharp_capacity_bytes`` falls
+    back deterministically to the faster of ring/tree by uncongested
+    duration (ring on ties) — the switch pool is oversubscribed, so the
+    collective runs host-based.
     """
     n = len(ranks)
     if n <= 1:
@@ -391,14 +547,22 @@ def compile_schedule(topo: Topology, ranks: Sequence[int], nbytes: float, *,
     if algo == "hierarchical":
         g = group or 8
         if n <= g:
-            return _RingSchedule(topo, ranks, nbytes)
-        return _HierSchedule(topo, ranks, nbytes, g)
+            return _RingSchedule(topo, ranks, nbytes, routing)
+        return _HierSchedule(topo, ranks, nbytes, g, routing)
     if algo == "ring":
-        return _RingSchedule(topo, ranks, nbytes)
+        return _RingSchedule(topo, ranks, nbytes, routing)
     if algo == "tree":
-        return _TreeSchedule(topo, ranks, nbytes)
+        return _TreeSchedule(topo, ranks, nbytes, routing)
+    if algo == "sharp":
+        if sharp_available(topo, nbytes):
+            from repro.fabric.placement import group_size
+            g = group or group_size(topo)
+            return _SharpSchedule(topo, ranks, nbytes, g, routing)
+        ring = _RingSchedule(topo, ranks, nbytes, routing)
+        tree = _TreeSchedule(topo, ranks, nbytes, routing)
+        return ring if ring.total_s(None) <= tree.total_s(None) else tree
     raise KeyError(f"unknown collective algo {algo!r}; "
-                   f"one of ('ring', 'tree', 'hierarchical')")
+                   f"one of ('ring', 'tree', 'hierarchical', 'sharp')")
 
 
 AUTO_CANDIDATES = ("ring", "tree", "hierarchical")
@@ -408,6 +572,7 @@ def select_algo(topo: Topology, ranks: Sequence[int], nbytes: float, *,
                 group: int = 0,
                 candidates: Sequence[str] = AUTO_CANDIDATES,
                 weight: float = 1.0,
+                routing=None,
                 ) -> Tuple[str, CompiledSchedule]:
     """Pick the all-reduce schedule for this placement by measuring, not
     guessing: compile every candidate and rank them by uncongested duration,
@@ -432,18 +597,31 @@ def select_algo(topo: Topology, ranks: Sequence[int], nbytes: float, *,
     group (nodes per leaf / ranks per pod), so "hierarchical" means "keep
     the oversubscribed tier at bytes/leaf-group" for the fabric at hand.
 
+    On topologies whose in-network capacity admits the payload
+    (:func:`sharp_available`), ``sharp`` joins the *default* candidate set
+    — appended after the host-based algos, so a tie keeps today's winner
+    and existing ``algo="auto"`` selections are bit-identical. An explicit
+    ``candidates=`` list is taken as-is.
+
     Returns ``(algo, schedule)``. Deterministic: candidate order breaks any
     remaining tie (by shared-tier byte exposure, then candidate order).
     """
     from repro.fabric.placement import group_size
     g = group or group_size(topo)
+    if candidates is AUTO_CANDIDATES and sharp_available(topo, nbytes):
+        candidates = AUTO_CANDIDATES + ("sharp",)
+    compiled = [(algo, compile_schedule(topo, ranks, nbytes, algo=algo,
+                                        group=g, routing=routing))
+                for algo in candidates]
     if weight != 1.0:
+        # built after compilation so lazily-materialized (sparse) shared
+        # links are present; on dense topologies the dicts — and thus the
+        # correction arithmetic — are unchanged
         shared_links = [ln for ln, l in topo.links.items() if l.shared]
         ref_eff = {ln: 0.5 for ln in shared_links}
         w_eff = {ln: weight / (weight + 1.0) for ln in shared_links}
     best = None
-    for algo in candidates:
-        sched = compile_schedule(topo, ranks, nbytes, algo=algo, group=g)
+    for algo, sched in compiled:
         shared_bytes = sum(
             b for ln, b in sched.bytes_per_call(None).items()
             if topo.link(ln).shared)

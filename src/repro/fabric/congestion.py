@@ -347,12 +347,37 @@ class CongestionConfig:
 
 
 class CongestionModel:
+    """AR(1) background-utilization state per tracked shared link.
+
+    Dense topologies (``fat_tree``/``tpu_pod``) track every shared link
+    from construction — the per-step gaussian draw order over that set is
+    part of the bit-exact determinism contract held by the goldens. Sparse
+    topologies (``sparse_links = True``) start empty and the engines
+    :meth:`track` exactly the shared links their tenants' compiled
+    schedules touch, so congestion state scales with *active* links, not
+    fabric size."""
+
     def __init__(self, cfg: CongestionConfig, topo: Topology, seed: int = 0):
         self.cfg = cfg
         self.topo = topo
         self.rng = random.Random(seed)
-        self.u: Dict[str, float] = {
-            name: cfg.u_mean for name, l in topo.links.items() if l.shared}
+        if topo.sparse_links:
+            self.u: Dict[str, float] = {}
+        else:
+            self.u = {
+                name: cfg.u_mean
+                for name, l in topo.links.items() if l.shared}
+
+    def track(self, names) -> None:
+        """Start tracking the shared links among ``names`` (idempotent —
+        already-tracked links keep their state, so on dense topologies
+        this is a no-op and the gauss stream is untouched)."""
+        u_map = self.u
+        u_mean = self.cfg.u_mean
+        link = self.topo.link
+        for name in names:
+            if name not in u_map and link(name).shared:
+                u_map[name] = u_mean
 
     def advance(self) -> None:
         # Hot loop (once per simulated iteration): random.gauss inlined with

@@ -67,7 +67,7 @@ from repro.fabric.collectives import compile_schedule, select_algo
 from repro.fabric.congestion import CongestionConfig, CongestionModel
 from repro.fabric.placement import place, spanning_groups
 from repro.fabric.policies import (FAIRNESS, FairnessPolicy,
-                                   resolve_fairness)
+                                   resolve_fairness, resolve_routing)
 from repro.fabric.stragglers import ComputeModel, StragglerConfig
 from repro.fabric.topology import Topology
 
@@ -232,7 +232,7 @@ class _JobRuntime:
                  "eff", "dur", "dur0", "comm_times", "comm_solo", "skews")
 
     def __init__(self, spec: JobSpec, nodes: List[int], topo: Topology,
-                 compute_seed: int, weighted: bool = False):
+                 compute_seed: int, weighted: bool = False, routing=None):
         self.spec = spec
         self.n = spec.n_ranks
         self.nodes = nodes
@@ -246,12 +246,12 @@ class _JobRuntime:
             sel_w = spec.weight if weighted else 1.0
             self.algo, self.schedule = select_algo(
                 topo, nodes, spec.grad_bytes, group=spec.group,
-                weight=sel_w)
+                weight=sel_w, routing=routing)
         else:
             self.algo = spec.algo
             self.schedule = compile_schedule(
                 topo, nodes, spec.grad_bytes, algo=spec.algo,
-                group=spec.group)
+                group=spec.group, routing=routing)
         self.spanning = spec.spanning_override \
             if spec.spanning_override is not None \
             else spanning_groups(topo, nodes)
@@ -321,12 +321,13 @@ class FabricEngine:
 
     def __init__(self, topo: Topology, jobs: Sequence[JobSpec], *,
                  congestion: Optional[CongestionConfig] = None,
-                 base_seed: int = 0, fairness="maxmin"):
+                 base_seed: int = 0, fairness="maxmin", routing=None):
         _deprecation.warn_legacy(
             "FabricEngine(topo, jobs, ...)",
             "Scenario(topology=..., jobs=[...], policies=Policies("
             "fairness=...)).run()")
         self.policy: FairnessPolicy = resolve_fairness(fairness)
+        self.routing = resolve_routing(routing)
         self.topo = topo
         self.base_seed = base_seed
         self.fairness = self.policy.name
@@ -358,7 +359,13 @@ class FabricEngine:
             seed = spec.seed if spec.seed is not None \
                 else base_seed + 1 + 1009 * idx
             self._jobs.append(_JobRuntime(spec, nodes, topo, seed,
-                                          weighted=self.policy.weighted))
+                                          weighted=self.policy.weighted,
+                                          routing=self.routing))
+        # sparse topologies: congestion tracks exactly the shared links the
+        # compiled schedules touch (no-op on dense — their model already
+        # tracks every shared link, in the golden-pinned order)
+        for jr in self._jobs:
+            self.congestion.track(jr.shared_demand)
 
     # -- multi-tenant bandwidth partitioning -------------------------------
     def _contended_effs(self, durs0: List[float]) -> List[Dict[str, float]]:

@@ -73,7 +73,8 @@ from repro.fabric import _deprecation
 from repro.fabric.congestion import CongestionConfig, CongestionModel
 from repro.fabric.engine import JobSpec
 from repro.fabric.placement import place
-from repro.fabric.policies import FairnessPolicy, resolve_fairness
+from repro.fabric.policies import (FairnessPolicy, resolve_fairness,
+                                   resolve_routing)
 from repro.fabric.scheduling import (Scheduler, entry_priority,
                                      make_scheduler)
 from repro.fabric.topology import Topology
@@ -111,7 +112,41 @@ class NodeFailure:
     node: int
 
 
-Event = Union[Arrival, Departure, NodeFailure]
+# effective-bandwidth multiplier a flapped link keeps while down: routing
+# protocols drain a flapping link rather than black-holing it, so cost
+# models see a crushed-but-finite capacity instead of a divide-by-zero
+FLAP_EFF = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkFlap:
+    """Link ``link`` flaps at ``t``: effectively down (``FLAP_EFF``) for
+    ``down_s`` simulated seconds, then fully restored."""
+    t: float
+    link: str
+    down_s: float
+
+    def window(self) -> Tuple[float, float, float]:
+        return (self.t, self.t + self.down_s, FLAP_EFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkDegrade:
+    """Link ``link`` runs at ``factor`` of its bandwidth from ``t`` for
+    ``duration_s`` seconds (None: permanently — an unrepaired optics or
+    cable fault)."""
+    t: float
+    link: str
+    factor: float
+    duration_s: Optional[float] = None
+
+    def window(self) -> Tuple[float, float, float]:
+        end = self.t + self.duration_s if self.duration_s is not None \
+            else float("inf")
+        return (self.t, end, self.factor)
+
+
+Event = Union[Arrival, Departure, NodeFailure, LinkFlap, LinkDegrade]
 
 
 # ---------------------------------------------------------------------------
@@ -161,12 +196,13 @@ class LifecycleEngine:
                  scheduler: Union[str, Scheduler] = "fifo",
                  replan_delay_s: Optional[float] = 0.5,
                  restore_cost: Optional[RestoreCostModel] = None,
-                 base_seed: int = 0):
+                 base_seed: int = 0, routing=None):
         _deprecation.warn_legacy(
             "LifecycleEngine(topo, events, ...)",
             "Scenario(topology=..., events=[...], policies=Policies("
             "fairness=..., scheduler=...)).run()")
         self.policy: FairnessPolicy = resolve_fairness(fairness)
+        self.routing = resolve_routing(routing)
         self.topo = topo
         self.fairness = self.policy.name
         self.scheduler = make_scheduler(scheduler)
@@ -196,6 +232,10 @@ class LifecycleEngine:
         self._dead: set = set()
         # per shared link: (start, end, demand_bytes, owner_name) windows
         self._segments: Dict[str, list] = {}
+        # per link: (start, end, factor) derate windows from LinkFlap /
+        # LinkDegrade events; empty on scenarios without link events, so
+        # the fast path in _derate_eff keeps legacy series bit-identical
+        self._link_derates: Dict[str, List[Tuple[float, float, float]]] = {}
         self._log: List[Tuple[float, str, str]] = []
         self.link_bytes: Dict[str, float] = {}
         self._tenant_seq = 0
@@ -296,6 +336,7 @@ class LifecycleEngine:
             self.congestion_cfg, self.topo,
             seed=self.base_seed + 2 + 1013 * self._tenant_seq)
         tenant.weighted_fairness = self.policy.weighted
+        tenant.routing = self.routing
         self._tenant_seq += 1
         self._weights[spec.name] = tenant.weight
         self._prios[spec.name] = tenant.priority
@@ -496,6 +537,16 @@ class LifecycleEngine:
             self._record("failure",
                          f"node {ev.node} died"
                          + (f" (owned by {owner})" if owner else " (idle)"))
+        elif isinstance(ev, (LinkFlap, LinkDegrade)):
+            self._link_derates.setdefault(ev.link, []).append(ev.window())
+            if isinstance(ev, LinkFlap):
+                self._record("link_flap",
+                             f"link {ev.link} down for {ev.down_s:g}s")
+            else:
+                dur = "permanently" if ev.duration_s is None \
+                    else f"for {ev.duration_s:g}s"
+                self._record("link_degrade",
+                             f"link {ev.link} at {ev.factor:g}x {dur}")
         else:
             raise TypeError(f"unknown event {ev!r}")
 
@@ -591,6 +642,29 @@ class LifecycleEngine:
                 adj[ln] = eff[ln] * share
         return adj if adj is not None else eff
 
+    def _derate_eff(self, eff: Dict[str, float], t: float
+                    ) -> Dict[str, float]:
+        """Overlay active LinkFlap/LinkDegrade windows onto the congestion
+        efficiencies for a collective starting at ``t``. Returns ``eff``
+        untouched when no link events are in play (the bit-compat fast
+        path); derated links absent from ``eff`` (unshared, or untracked
+        on sparse topologies) get explicit entries, which the compiled
+        plans' ``link_eff.get(ln, 1.0)`` lookups honor."""
+        derates = self._link_derates
+        if not derates:
+            return eff
+        adj: Optional[Dict[str, float]] = None
+        for ln, windows in derates.items():
+            f = 1.0
+            for (s, e, factor) in windows:
+                if s <= t < e:
+                    f *= factor
+            if f < 1.0:
+                if adj is None:
+                    adj = dict(eff)
+                adj[ln] = adj.get(ln, 1.0) * f
+        return adj if adj is not None else eff
+
     def _prune_segments(self) -> None:
         starts = [t.pending_start for t in self._active
                   if t.pending_start is not None]
@@ -606,9 +680,15 @@ class LifecycleEngine:
             return
         self._now = max(self._now, tenant.pending_start)
         congestion = tenant.congestion
+        # sparse topologies: an inference tenant's occupancy-scaled
+        # schedules compile lazily mid-run, so (idempotently) extend the
+        # tracked-link set right before the draw; dense topologies track
+        # everything from construction and this is a no-op
+        congestion.track(tenant.pending_demand)
         congestion.advance()
         eff = congestion.link_eff(tenant.pending_skew,
                                   spanning_groups=tenant.spanning)
+        eff = self._derate_eff(eff, tenant.pending_start)
         d0 = tenant.pending_schedule.total_s(eff)
         eff = self._contend(tenant, eff, d0)
         dur = tenant.pending_schedule.total_s(eff)

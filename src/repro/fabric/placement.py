@@ -42,8 +42,10 @@ from repro.fabric.topology import Topology
 
 
 def group_size(topo: Topology) -> int:
-    """Nodes per locality group (leaf for fat-tree, pod for TPU)."""
+    """Nodes per locality group (leaf for fat-tree and multi-pod, pod for
+    TPU, NVLink node for rail-optimized)."""
     size = getattr(topo, "nodes_per_leaf", None) \
+        or getattr(topo, "gpus_per_node", None) \
         or getattr(topo, "ranks_per_pod", None)
     return int(size) if size else topo.n_ranks
 

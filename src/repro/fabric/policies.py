@@ -1,4 +1,5 @@
-"""Pluggable policy registries: fairness, scheduling, placement.
+"""Pluggable policy registries: fairness, scheduling, placement,
+request routers, and multi-path routing.
 
 PR 1-3 grew three orthogonal policy axes — how contended shared links are
 split between co-tenant flows (*fairness*), how the blocked-arrival queue
@@ -36,6 +37,17 @@ third-party code alike. Registering a new policy is::
     ``jsq`` (join-shortest-queue over outstanding work). Registered here
     directly — routers are pure queue-choice functions with no engine
     dependencies.
+  * **routing** — how collective schedules map a topology's parallel
+    inter-pod paths (``@group#salt`` route tokens, see
+    :mod:`repro.fabric.topology`) onto member links: ``ecmp_static``
+    (default — the salt hash pins one member per flow at compile time,
+    bit-compatible with the pre-routing single-path costs held by the
+    goldens and fingerprint baselines) and ``adaptive_spray`` (bytes
+    re-split across *all* members each iteration in proportion to their
+    observed effective capacity). Registered here directly. Backends:
+    ``ecmp_static`` runs on every backend; ``adaptive_spray`` is
+    reference-only (the jnp scenario runner declares it unsupported via
+    the nearest-backend error contract).
 
 Every share function a fairness entry dispatches to lives in
 :mod:`repro.fabric.congestion`; the entries here are thin adapters, so the
@@ -110,6 +122,70 @@ FAIRNESS = PolicyRegistry("fairness mode")
 SCHEDULERS = PolicyRegistry("scheduler")
 PLACEMENTS = PolicyRegistry("placement policy")
 ROUTERS = PolicyRegistry("router")
+ROUTING = PolicyRegistry("routing policy")
+
+
+# ---------------------------------------------------------------------------
+# routing entries (parallel-path resolution for collective schedules)
+# ---------------------------------------------------------------------------
+
+
+class RoutingPolicy:
+    """How a collective schedule resolves a ``@group#salt`` route token
+    emitted by a multi-path topology (today: ``multi_pod``'s parallel
+    inter-pod links).
+
+    Static policies (``adaptive = False``) pin each flow to one member at
+    schedule-compile time via :meth:`choose`; adaptive policies keep the
+    whole member group in the compiled plan and re-split the flow's bytes
+    at every cost evaluation from the members' observed efficiency (see
+    ``collectives._StepPlan``). Policies are stateless values — engines
+    share one instance per name via :func:`resolve_routing`."""
+
+    name: str = ""
+    adaptive: bool = False
+
+    def choose(self, members: Sequence[str], salt: int) -> str:
+        """The member link a statically-routed flow lands on."""
+        raise NotImplementedError
+
+
+@ROUTING.register("ecmp_static")
+class EcmpStaticRouting(RoutingPolicy):
+    """Hash-pinned single path per flow (the fabric's ECMP): the token
+    salt indexes the member list once, at compile time. This is the
+    bit-compat default — on single-path topologies it is a no-op."""
+
+    name = "ecmp_static"
+
+    def choose(self, members: Sequence[str], salt: int) -> str:
+        return members[salt % len(members)]
+
+
+@ROUTING.register("adaptive_spray")
+class AdaptiveSprayRouting(RoutingPolicy):
+    """Per-iteration packet spray: the flow's bytes split across all
+    member links in proportion to each member's observed effective
+    capacity, so a derated or congested member sheds load to its
+    parallel peers every step (reference backend only)."""
+
+    name = "adaptive_spray"
+    adaptive = True
+
+    def choose(self, members: Sequence[str], salt: int) -> str:
+        # static consumers (byte accounting) fall back to the ECMP pick
+        return members[salt % len(members)]
+
+
+def resolve_routing(spec: Union[str, RoutingPolicy, None]) -> RoutingPolicy:
+    """Engine-facing resolver: a registered name, a policy instance, or
+    None (the bit-compat ``ecmp_static`` default)."""
+    if spec is None:
+        spec = "ecmp_static"
+    if isinstance(spec, RoutingPolicy):
+        return spec
+    policy = ROUTING.get(spec)
+    return policy() if isinstance(policy, type) else policy
 
 
 # ---------------------------------------------------------------------------

@@ -60,16 +60,21 @@ from repro.fabric import _deprecation
 from repro.fabric.congestion import CongestionConfig
 from repro.fabric.engine import EngineResult, FabricEngine, JobSpec
 from repro.fabric.events import (Arrival, Departure, Event, LifecycleEngine,
-                                 LifecycleResult, NodeFailure)
+                                 LifecycleResult, LinkDegrade, LinkFlap,
+                                 NodeFailure)
 from repro.fabric.placement import spanning_groups
-from repro.fabric.policies import FAIRNESS, PLACEMENTS, ROUTERS, SCHEDULERS
+from repro.fabric.policies import (FAIRNESS, PLACEMENTS, ROUTERS, ROUTING,
+                                   SCHEDULERS)
 from repro.fabric.scheduling import make_scheduler
 from repro.fabric.stragglers import StragglerConfig
-from repro.fabric.topology import Topology, fat_tree, tpu_pod
+from repro.fabric.topology import (Topology, fat_tree, multi_pod,
+                                   rail_optimized, tpu_pod)
 from repro.fabric.workloads import InferenceSpec
 from repro.ft.failure import HeartbeatConfig, RestoreCostModel
 
-ALGOS = ("ring", "tree", "hierarchical", "auto")
+ALGOS = ("ring", "tree", "hierarchical", "sharp", "auto")
+
+TOPOLOGY_KINDS = ("fat_tree", "tpu_pod", "rail_optimized", "multi_pod")
 
 
 class ScenarioError(ValueError):
@@ -88,7 +93,13 @@ class TopologySpec:
     :class:`Topology`). ``fat_tree`` uses the ``n_nodes`` /
     ``nodes_per_leaf`` / ``oversubscription`` / ``leaf_bw`` group;
     ``tpu_pod`` uses ``n_pods`` / ``ranks_per_pod`` / ``ici_bw`` /
-    ``dcn_bw``."""
+    ``dcn_bw``; ``rail_optimized`` reads ``n_nodes`` as the total GPU
+    count with ``gpus_per_node`` / ``nv_bw`` (NVLink) / ``leaf_bw`` (rail
+    NIC); ``multi_pod`` uses ``n_pods`` / ``ranks_per_pod`` /
+    ``nodes_per_leaf`` / ``inter_pod_links`` / ``global_bw`` /
+    ``sharp_capacity_bytes``. The sparse kinds (``rail_optimized``,
+    ``multi_pod``) materialize links lazily, so 100k+ rank fabrics build
+    with memory proportional to the links tenants actually touch."""
     kind: str = "fat_tree"
     n_nodes: int = 64
     nodes_per_leaf: int = 8
@@ -100,26 +111,46 @@ class TopologySpec:
     ranks_per_pod: int = 256
     ici_bw: float = 50.0
     dcn_bw: float = 6.25
+    gpus_per_node: int = 8
+    nv_bw: float = 400.0
+    inter_pod_links: int = 4
+    global_bw: float = 25.0
+    sharp_capacity_bytes: float = 0.0
     seed: int = 0
 
     def validate(self) -> None:
-        if self.kind not in ("fat_tree", "tpu_pod"):
+        if self.kind not in TOPOLOGY_KINDS:
             raise ScenarioError(
                 f"unknown topology kind {self.kind!r}; one of "
-                f"('fat_tree', 'tpu_pod')")
-        positive = (("n_nodes", self.n_nodes),
-                    ("nodes_per_leaf", self.nodes_per_leaf),
-                    ("oversubscription", self.oversubscription),
-                    ("leaf_bw", self.leaf_bw),
-                    ("n_pods", self.n_pods),
-                    ("ranks_per_pod", self.ranks_per_pod),
-                    ("ici_bw", self.ici_bw),
-                    ("dcn_bw", self.dcn_bw)) \
-            if self.kind == "tpu_pod" else (
-                ("n_nodes", self.n_nodes),
-                ("nodes_per_leaf", self.nodes_per_leaf),
-                ("oversubscription", self.oversubscription),
-                ("leaf_bw", self.leaf_bw))
+                f"{TOPOLOGY_KINDS}")
+        if self.kind == "tpu_pod":
+            positive = (("n_nodes", self.n_nodes),
+                        ("nodes_per_leaf", self.nodes_per_leaf),
+                        ("oversubscription", self.oversubscription),
+                        ("leaf_bw", self.leaf_bw),
+                        ("n_pods", self.n_pods),
+                        ("ranks_per_pod", self.ranks_per_pod),
+                        ("ici_bw", self.ici_bw),
+                        ("dcn_bw", self.dcn_bw))
+        elif self.kind == "rail_optimized":
+            positive = (("n_nodes", self.n_nodes),
+                        ("gpus_per_node", self.gpus_per_node),
+                        ("oversubscription", self.oversubscription),
+                        ("leaf_bw", self.leaf_bw),
+                        ("nv_bw", self.nv_bw))
+        elif self.kind == "multi_pod":
+            positive = (("n_pods", self.n_pods),
+                        ("ranks_per_pod", self.ranks_per_pod),
+                        ("nodes_per_leaf", self.nodes_per_leaf),
+                        ("inter_pod_links", self.inter_pod_links),
+                        ("oversubscription", self.oversubscription),
+                        ("leaf_bw", self.leaf_bw),
+                        ("global_bw", self.global_bw))
+        else:
+            positive = (("n_nodes", self.n_nodes),
+                        ("nodes_per_leaf", self.nodes_per_leaf),
+                        ("oversubscription", self.oversubscription),
+                        ("leaf_bw", self.leaf_bw))
         for name, val in positive:
             if not val > 0:
                 raise ScenarioError(
@@ -128,14 +159,29 @@ class TopologySpec:
             raise ScenarioError(
                 f"topology latency_s/nic_spread must be >= 0, got "
                 f"{self.latency_s!r}/{self.nic_spread!r}")
+        if self.kind == "rail_optimized" \
+                and self.n_nodes % self.gpus_per_node != 0:
+            raise ScenarioError(
+                f"rail_optimized n_nodes (total GPUs) must divide by "
+                f"gpus_per_node, got {self.n_nodes} % {self.gpus_per_node}")
+        if self.kind == "multi_pod":
+            if self.ranks_per_pod % self.nodes_per_leaf != 0:
+                raise ScenarioError(
+                    f"multi_pod ranks_per_pod must divide by nodes_per_leaf, "
+                    f"got {self.ranks_per_pod} % {self.nodes_per_leaf}")
+            if self.sharp_capacity_bytes < 0:
+                raise ScenarioError(
+                    f"sharp_capacity_bytes must be >= 0, got "
+                    f"{self.sharp_capacity_bytes!r}")
         if self.n_ranks < 2:
             raise ScenarioError(
                 f"topology must offer >= 2 ranks, got {self.n_ranks}")
 
     @property
     def n_ranks(self) -> int:
-        return self.n_nodes if self.kind == "fat_tree" \
-            else self.n_pods * self.ranks_per_pod
+        if self.kind in ("tpu_pod", "multi_pod"):
+            return self.n_pods * self.ranks_per_pod
+        return self.n_nodes
 
     def build(self) -> Topology:
         if self.kind == "fat_tree":
@@ -144,6 +190,20 @@ class TopologySpec:
                 oversubscription=self.oversubscription,
                 leaf_bw=self.leaf_bw, latency_s=self.latency_s,
                 nic_spread=self.nic_spread, seed=self.seed)
+        if self.kind == "rail_optimized":
+            return rail_optimized(
+                self.n_nodes, gpus_per_node=self.gpus_per_node,
+                oversubscription=self.oversubscription, nv_bw=self.nv_bw,
+                rail_bw=self.leaf_bw, latency_s=self.latency_s)
+        if self.kind == "multi_pod":
+            return multi_pod(
+                self.n_pods, self.ranks_per_pod,
+                nodes_per_leaf=self.nodes_per_leaf,
+                inter_pod_links=self.inter_pod_links,
+                oversubscription=self.oversubscription,
+                leaf_bw=self.leaf_bw, global_bw=self.global_bw,
+                latency_s=self.latency_s,
+                sharp_capacity_bytes=self.sharp_capacity_bytes)
         return tpu_pod(self.n_pods, self.ranks_per_pod,
                        ici_bw=self.ici_bw, dcn_bw=self.dcn_bw,
                        seed=self.seed)
@@ -166,6 +226,13 @@ class Policies:
     allocator and segment-overlap kernels fused via Pallas — TPU
     ``pallas_call``, interpret mode on CPU). ``Scenario.run(backend=...)``
     and ``ScenarioGrid.run(backend=...)`` override it per call.
+
+    ``routing`` resolves multi-path route tokens (only ``multi_pod``
+    topologies emit them): ``"ecmp_static"`` pins each flow to one hashed
+    member at compile time (bit-compatible with single-path costs);
+    ``"adaptive_spray"`` re-splits shared-segment bytes across the
+    parallel inter-pod paths at every evaluation from observed link
+    efficiency (reference backend only).
     """
     fairness: str = "maxmin"
     scheduler: str = "fifo"
@@ -174,12 +241,17 @@ class Policies:
     restore_read_bw_Bps: Optional[float] = None
     restore_overhead_s: Optional[float] = None
     backend: str = "reference"
+    routing: str = "ecmp_static"
 
     def validate(self) -> None:
         if self.fairness not in FAIRNESS:
             raise ScenarioError(
                 f"unknown fairness mode {self.fairness!r}; one of "
                 f"{FAIRNESS.names()}")
+        if self.routing not in ROUTING:
+            raise ScenarioError(
+                f"unknown routing policy {self.routing!r}; one of "
+                f"{ROUTING.names()}")
         from repro.fabric.backend import BACKENDS
         if self.backend not in BACKENDS:
             raise ScenarioError(
@@ -289,6 +361,12 @@ def _event_to_dict(ev: Event) -> Dict[str, Any]:
         return {"type": "departure", "t": ev.t, "name": ev.name}
     if isinstance(ev, NodeFailure):
         return {"type": "node_failure", "t": ev.t, "node": ev.node}
+    if isinstance(ev, LinkFlap):
+        return {"type": "link_flap", "t": ev.t, "link": ev.link,
+                "down_s": ev.down_s}
+    if isinstance(ev, LinkDegrade):
+        return {"type": "link_degrade", "t": ev.t, "link": ev.link,
+                "factor": ev.factor, "duration_s": ev.duration_s}
     raise ScenarioError(f"unknown event {ev!r}")
 
 
@@ -300,9 +378,15 @@ def _event_from_dict(d: Dict[str, Any]) -> Event:
         return Departure(float(d["t"]), d["name"])
     if kind == "node_failure":
         return NodeFailure(float(d["t"]), int(d["node"]))
+    if kind == "link_flap":
+        return LinkFlap(float(d["t"]), d["link"], float(d["down_s"]))
+    if kind == "link_degrade":
+        dur = d.get("duration_s")
+        return LinkDegrade(float(d["t"]), d["link"], float(d["factor"]),
+                           None if dur is None else float(dur))
     raise ScenarioError(
         f"unknown event type {kind!r}; one of ('arrival', 'departure', "
-        f"'node_failure')")
+        f"'node_failure', 'link_flap', 'link_degrade')")
 
 
 # ---------------------------------------------------------------------------
@@ -371,6 +455,11 @@ class Scenario:
                     f"backend={bk!r} supports fairness "
                     f"{JNP_SCENARIO_FAIRNESS}, got "
                     f"{self.policies.fairness!r}")
+            if ROUTING.get(self.policies.routing).adaptive:
+                raise ScenarioError(
+                    f"backend={bk!r} encodes static routes only; adaptive "
+                    f"routing {self.policies.routing!r} re-splits bytes "
+                    f"per iteration and needs backend='reference'")
         if static:
             if not self.jobs:
                 raise ScenarioError("jobs= must name at least one tenant")
@@ -397,8 +486,10 @@ class Scenario:
                 raise ScenarioError(
                     f"horizon must be positive, got {self.horizon!r}")
             specs = []
+            link_events = []
             for ev in self.events:
-                if not isinstance(ev, (Arrival, Departure, NodeFailure)):
+                if not isinstance(ev, (Arrival, Departure, NodeFailure,
+                                       LinkFlap, LinkDegrade)):
                     raise ScenarioError(f"unknown event {ev!r}")
                 if ev.t < 0.0:
                     raise ScenarioError(
@@ -410,6 +501,30 @@ class Scenario:
                     raise ScenarioError(
                         f"failure of node {ev.node} outside the "
                         f"{self.topology.n_ranks}-rank topology")
+                elif isinstance(ev, LinkFlap):
+                    if not ev.down_s > 0.0:
+                        raise ScenarioError(
+                            f"LinkFlap down_s must be positive, got {ev!r}")
+                    link_events.append(ev)
+                elif isinstance(ev, LinkDegrade):
+                    if not 0.0 < ev.factor <= 1.0:
+                        raise ScenarioError(
+                            f"LinkDegrade factor must be in (0, 1], got "
+                            f"{ev!r}")
+                    if ev.duration_s is not None and not ev.duration_s > 0.0:
+                        raise ScenarioError(
+                            f"LinkDegrade duration_s must be positive (or "
+                            f"None for permanent), got {ev!r}")
+                    link_events.append(ev)
+            if link_events:
+                # topology build is cheap for sparse kinds (links are
+                # lazy) and only paid when link events are declared
+                topo = self.topology.build()
+                for ev in link_events:
+                    if not topo.has_link(ev.link):
+                        raise ScenarioError(
+                            f"event names unknown link {ev.link!r} on "
+                            f"topology {topo.name!r}")
             if not specs:
                 raise ScenarioError(
                     "events= must include at least one Arrival")
@@ -568,7 +683,8 @@ class Scenario:
                 engine = FabricEngine(
                     topo, list(self.jobs), congestion=self.congestion,
                     base_seed=self.base_seed,
-                    fairness=self.policies.fairness)
+                    fairness=self.policies.fairness,
+                    routing=self.policies.routing)
                 raw: Union[EngineResult, LifecycleResult] = engine.run(
                     self.iters, warmup=self.warmup)
             else:
@@ -579,7 +695,8 @@ class Scenario:
                     scheduler=self.policies.build_scheduler(),
                     replan_delay_s=self.policies.replan_delay_s,
                     restore_cost=self.policies.restore_cost(),
-                    base_seed=self.base_seed)
+                    base_seed=self.base_seed,
+                    routing=self.policies.routing)
                 raw = engine.run(self.horizon)
         return Result(self, raw, topo)
 

@@ -34,6 +34,13 @@ fleet) and ``slo_placement`` (the noisy-neighbor mix with the fleet placed
 by ``slo_aware`` and routed by ``jsq`` — sweep the placement/router back
 to ``compact``/``round_robin`` to reproduce the SLO-attainment gap).
 
+Two exercise the giga-scale fabric path (multi-pod topologies and the
+routing registry): ``cross_pod_interference`` (two tenants straddling a
+pod boundary collide on one statically-hashed inter-pod link) and
+``routing_rescue`` (the same population under ``adaptive_spray``, which
+re-splits inter-pod bytes across the parallel global links and strictly
+improves the contended p99).
+
 All entries run at test scale (a few seconds each) — they are smoke
 surfaces and study seeds, not paper-horizon reproductions.
 """
@@ -208,6 +215,47 @@ def slo_placement() -> Scenario:
                                        placement="slo_aware")),
         ),
         horizon=12.0)
+
+
+_MULTIPOD64 = TopologySpec(kind="multi_pod", n_pods=2, ranks_per_pod=32,
+                           nodes_per_leaf=8, inter_pod_links=2)
+
+
+@LIBRARY.register("cross_pod_interference")
+def cross_pod_interference() -> Scenario:
+    """Two pinned 16-rank tenants each straddling the pod boundary of a
+    2-pod fabric with two parallel inter-pod links: static ECMP hashes
+    both tenants' cross-pod flows onto the *same* member (the pod-pair
+    salt is placement-independent), so the primary pays for the
+    interferer's 4 GB exchanges on one global link while the second link
+    idles — the giga-scale variant of ``topology_contention``."""
+    return Scenario(
+        name="cross_pod_interference",
+        topology=_MULTIPOD64,
+        jobs=(JobSpec("primary", 16, nodes=tuple(range(24, 40))),
+              JobSpec("interferer", 16,
+                      nodes=tuple(range(16, 24)) + tuple(range(40, 48)),
+                      grad_bytes=4e9)),
+        iters=150, warmup=20)
+
+
+@LIBRARY.register("routing_rescue")
+def routing_rescue() -> Scenario:
+    """The ``cross_pod_interference`` population rescued by adaptive
+    routing: ``adaptive_spray`` re-splits each tenant's inter-pod bytes
+    across both parallel global links in proportion to observed capacity,
+    recovering the idle member that static ECMP strands. Sweep
+    ``policies.routing`` back to ``ecmp_static`` to reproduce the strict
+    p99 regression the routing tests pin."""
+    return Scenario(
+        name="routing_rescue",
+        topology=_MULTIPOD64,
+        jobs=(JobSpec("primary", 16, nodes=tuple(range(24, 40))),
+              JobSpec("interferer", 16,
+                      nodes=tuple(range(16, 24)) + tuple(range(40, 48)),
+                      grad_bytes=4e9)),
+        policies=Policies(routing="adaptive_spray"),
+        iters=150, warmup=20)
 
 
 def names() -> List[str]:

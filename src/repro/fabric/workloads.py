@@ -137,12 +137,13 @@ class InferenceSpec:
 
 
 def _compile(topo: Topology, nodes: Sequence[int], nbytes: float,
-             algo: str, group: int, weight: float = 1.0
+             algo: str, group: int, weight: float = 1.0, routing=None
              ) -> Tuple[str, CompiledSchedule]:
     if algo == "auto":
-        return select_algo(topo, nodes, nbytes, group=group, weight=weight)
+        return select_algo(topo, nodes, nbytes, group=group, weight=weight,
+                           routing=routing)
     return algo, compile_schedule(topo, nodes, nbytes, algo=algo,
-                                  group=group)
+                                  group=group, routing=routing)
 
 
 def _shared_demand(topo: Topology, sched: CompiledSchedule
@@ -171,6 +172,9 @@ class Tenant:
     # FairnessPolicy.weighted): weight then steers algo="auto" selection,
     # because the contended share it assumes will actually be granted
     weighted_fairness: bool = False
+    # resolved RoutingPolicy, set at admission by the owning engine (None
+    # keeps the bit-compat ecmp_static path resolution)
+    routing = None
 
     def __init__(self, name: str, seed: int):
         self.name = name
@@ -299,7 +303,7 @@ class TrainingTenant(Tenant):
             if spec.pacing is not None else None
         self.algo, self.schedule = _compile(
             topo, self.nodes, spec.grad_bytes, spec.algo, spec.group,
-            spec.weight if self.weighted_fairness else 1.0)
+            spec.weight if self.weighted_fairness else 1.0, self.routing)
         self.floor_denom = max(self.schedule.total_s(None), 1e-9)
         self.demand = _shared_demand(topo, self.schedule)
         self._release = t
@@ -432,9 +436,11 @@ class _Replica(object):
         self._topo = topo
         w = spec.weight if fleet.weighted_fairness else 1.0
         self.algo, prefill1 = _compile(
-            topo, nodes, spec.prefill_bytes, spec.algo, spec.group, w)
+            topo, nodes, spec.prefill_bytes, spec.algo, spec.group, w,
+            fleet.routing)
         self.decode_algo, decode1 = _compile(
-            topo, nodes, spec.decode_bytes, spec.algo, spec.group, w)
+            topo, nodes, spec.decode_bytes, spec.algo, spec.group, w,
+            fleet.routing)
         # occupancy-scaled schedule caches; occupancy 1 is *exactly* the
         # select_algo result above (the batching="none" bit-compat anchor),
         # higher occupancies recompile the selected algo at the
@@ -466,7 +472,7 @@ class _Replica(object):
             algo = self.algo if kind == "prefill" else self.decode_algo
             hit = self._pack(self._topo, compile_schedule(
                 self._topo, self.nodes, batch_bytes(base, occupancy),
-                algo=algo, group=spec.group))
+                algo=algo, group=spec.group, routing=self.fleet.routing))
             self._scheds[key] = hit
         return hit
 

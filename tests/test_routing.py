@@ -1,0 +1,287 @@
+"""Routing policies, SHARP in-network reduction, and link lifecycle events.
+
+Pins the giga-scale fabric contracts:
+
+  * ``ecmp_static`` is the default ROUTING policy and is bit-compatible
+    with the single-path costs the goldens/baselines hold (route tokens
+    resolve to one hashed member at compile time);
+  * ``adaptive_spray`` re-splits shared-segment bytes across all parallel
+    inter-pod paths and strictly improves the contended striped p99
+    (`routing_rescue` vs the same population on static ECMP);
+  * ``sharp`` compiles a switch-aggregated allreduce only when the
+    topology's in-network capacity admits the payload, falling back to
+    ring/tree when oversubscribed;
+  * ``LinkFlap`` / ``LinkDegrade`` transiently derate named path segments
+    in the lifecycle engine;
+  * every policy registry reports *its own* registered names on an
+    unknown-name ScenarioError.
+"""
+import dataclasses
+import statistics
+
+import pytest
+
+from repro.fabric.collectives import (compile_schedule, select_algo,
+                                      sharp_available)
+from repro.fabric.engine import JobSpec
+from repro.fabric.events import (Arrival, LifecycleEngine, LinkDegrade,
+                                 LinkFlap)
+from repro.fabric.policies import (FAIRNESS, PLACEMENTS, ROUTERS, ROUTING,
+                                   SCHEDULERS, resolve_routing)
+from repro.fabric.scenario import (Policies, Scenario, ScenarioError,
+                                   TopologySpec, library)
+from repro.fabric.topology import multi_pod
+from repro.fabric.workloads import InferenceSpec
+
+MP = TopologySpec(kind="multi_pod", n_pods=2, ranks_per_pod=32,
+                  nodes_per_leaf=8, inter_pod_links=2)
+
+
+def _p99(res, tenant):
+    s = sorted(res.series(tenant))
+    return s[int(0.99 * (len(s) - 1))]
+
+
+# ---------------------------------------------------------------------------
+# the ROUTING registry
+# ---------------------------------------------------------------------------
+
+
+def test_routing_registry_contents():
+    assert "ecmp_static" in ROUTING.names()
+    assert "adaptive_spray" in ROUTING.names()
+    assert not resolve_routing(None).adaptive
+    assert resolve_routing(None).name == "ecmp_static"
+    assert resolve_routing("adaptive_spray").adaptive
+
+
+def test_ecmp_static_choose_is_salt_hash():
+    pol = resolve_routing("ecmp_static")
+    members = ["pp0-1.0", "pp0-1.1", "pp0-1.2"]
+    for salt in range(9):
+        assert pol.choose(members, salt) == members[salt % 3]
+
+
+def test_ecmp_static_is_bit_compatible_with_default():
+    """routing=None and routing='ecmp_static' compile identical costs —
+    the contract that keeps existing goldens/baselines valid."""
+    topo = multi_pod(2, 32, nodes_per_leaf=8, inter_pod_links=2)
+    ranks = list(range(24, 40))
+    for algo in ("ring", "tree", "hierarchical"):
+        a = compile_schedule(topo, ranks, 1e9, algo=algo)
+        b = compile_schedule(topo, ranks, 1e9, algo=algo,
+                             routing=resolve_routing("ecmp_static"))
+        assert a.total_s(None) == b.total_s(None)
+        assert a.cost(None).per_link_bytes == b.cost(None).per_link_bytes
+
+
+def test_adaptive_spray_splits_across_members():
+    """Under spray, inter-pod bytes land on every parallel member; under
+    static ECMP they all land on the one hashed member."""
+    topo = multi_pod(2, 32, nodes_per_leaf=8, inter_pod_links=2)
+    ranks = list(range(24, 40))
+    static = compile_schedule(topo, ranks, 1e9, algo="ring")
+    spray = compile_schedule(topo, ranks, 1e9, algo="ring",
+                             routing=resolve_routing("adaptive_spray"))
+    sb = static.cost(None).per_link_bytes
+    pb = spray.cost(None).per_link_bytes
+    static_members = [ln for ln in sb if ln.startswith("pp")]
+    spray_members = [ln for ln in pb if ln.startswith("pp")]
+    assert len(static_members) == 1
+    assert sorted(spray_members) == ["pp0-1.0", "pp0-1.1"]
+    # spray reacts to observed member efficiency: degrading one member
+    # shifts the bottleneck less than it would for the pinned static path
+    eff_bad = {ln: (0.25 if ln == static_members[0] else 1.0)
+               for ln in list(sb) + list(pb)}
+    assert spray.total_s(eff_bad) < static.total_s(eff_bad)
+
+
+def test_routing_rescue_strictly_improves_striped_p99():
+    rescue = library.build("routing_rescue")
+    assert rescue.policies.routing == "adaptive_spray"
+    ecmp = dataclasses.replace(
+        rescue, name="ecmp", policies=Policies(routing="ecmp_static"))
+    r_spray = rescue.run()
+    r_ecmp = ecmp.run()
+    for tenant in ("primary", "interferer"):
+        assert _p99(r_spray, tenant) < _p99(r_ecmp, tenant)
+        assert statistics.fmean(r_spray.series(tenant)) \
+            < statistics.fmean(r_ecmp.series(tenant))
+
+
+def test_batched_backends_reject_adaptive_routing_eagerly():
+    with pytest.raises(ScenarioError, match="static routes only"):
+        Scenario(name="x", topology=MP,
+                 jobs=(JobSpec("a", 16),),
+                 policies=Policies(backend="jnp",
+                                   routing="adaptive_spray"))
+
+
+def test_counterfactual_sweep_falls_back_for_adaptive_routing():
+    from repro.fabric.backend import counterfactual_sweep
+    scn = Scenario(name="x", topology=MP,
+                   jobs=(JobSpec("a", 16, nodes=tuple(range(24, 40))),),
+                   policies=Policies(routing="adaptive_spray"),
+                   iters=10, warmup=2)
+    (res, backend), = counterfactual_sweep([scn])
+    assert backend == "reference"
+    assert len(res.series("a")) == 8
+
+
+# ---------------------------------------------------------------------------
+# sharp: switch-aggregated allreduce with bounded in-network capacity
+# ---------------------------------------------------------------------------
+
+
+def test_sharp_availability_follows_capacity():
+    quiet = multi_pod(2, 32, nodes_per_leaf=8)
+    assert not sharp_available(quiet, 1e6)          # capacity 0: never
+    cap = multi_pod(2, 32, nodes_per_leaf=8, sharp_capacity_bytes=1e9)
+    assert sharp_available(cap, 1e9)
+    assert not sharp_available(cap, 1e9 + 1)        # oversubscribed
+    assert not sharp_available(cap, 0.0)            # nothing to reduce
+
+
+def test_sharp_compiles_and_falls_back():
+    topo = multi_pod(2, 32, nodes_per_leaf=8, sharp_capacity_bytes=1e9)
+    ranks = list(range(16))
+    sched = compile_schedule(topo, ranks, 5e8, algo="sharp")
+    assert sched.algo == "sharp" and sched.steps == 2
+    assert sched.total_s(None) > 0.0
+    # oversubscribed payload: sharp falls back to the better of ring/tree
+    fb = compile_schedule(topo, ranks, 2e9, algo="sharp")
+    assert fb.algo in ("ring", "tree")
+    ring = compile_schedule(topo, ranks, 2e9, algo="ring")
+    tree = compile_schedule(topo, ranks, 2e9, algo="tree")
+    assert fb.total_s(None) == min(ring.total_s(None), tree.total_s(None))
+
+
+def test_sharp_bytes_are_fan_in_independent():
+    """In-network aggregation: each link carries one payload copy per
+    phase regardless of how many ranks funnel through it."""
+    topo = multi_pod(2, 32, nodes_per_leaf=8, sharp_capacity_bytes=1e9)
+    sched = compile_schedule(topo, list(range(16)), 5e8, algo="sharp")
+    for ln, b in sched.cost(None).per_link_bytes.items():
+        assert b <= 2 * 5e8 + 1e-9, (ln, b)
+
+
+def test_sharp_joins_auto_candidates_only_when_admitted():
+    topo = multi_pod(2, 32, nodes_per_leaf=8, sharp_capacity_bytes=1e9)
+    ranks = list(range(16))
+    # explicit candidate list: taken as-is, sharp never sneaks in
+    name, _ = select_algo(topo, ranks, 5e8, candidates=("ring",))
+    assert name == "ring"
+    # auto: sharp participates (and must win only by strictly lower cost)
+    name_auto, sched_auto = select_algo(topo, ranks, 5e8)
+    best = {a: compile_schedule(topo, ranks, 5e8, algo=a).total_s(None)
+            for a in ("ring", "tree", "hierarchical", "sharp")}
+    assert sched_auto.total_s(None) == min(best.values())
+
+
+def test_sharp_scenario_algo_accepted():
+    scn = Scenario(
+        name="sharp", topology=dataclasses.replace(
+            MP, sharp_capacity_bytes=1e9),
+        jobs=(JobSpec("a", 16, algo="sharp"),),
+        iters=10, warmup=2)
+    res = scn.run()
+    assert len(res.series("a")) == 8
+
+
+# ---------------------------------------------------------------------------
+# link lifecycle events
+# ---------------------------------------------------------------------------
+
+
+def _flap_scenario(extra=()):
+    return Scenario(
+        name="flap",
+        topology=TopologySpec(kind="fat_tree", n_nodes=64, nodes_per_leaf=8),
+        events=(Arrival(0.0, JobSpec("job", 12, nodes=tuple(range(12)),
+                                     grad_bytes=2e9)),) + tuple(extra),
+        horizon=12.0)
+
+
+def test_link_flap_transiently_slows_the_tenant():
+    quiet = _flap_scenario()
+    flapped = _flap_scenario([LinkFlap(4.0, "up0", down_s=2.0)])
+    rq = quiet.run()
+    rf = flapped.run()
+    assert statistics.fmean(rf.series("job")) \
+        > statistics.fmean(rq.series("job"))
+    assert max(rf.series("job")) > 3 * max(rq.series("job"))
+
+
+def test_link_degrade_is_milder_than_flap():
+    deg = _flap_scenario([LinkDegrade(4.0, "up0", factor=0.5,
+                                      duration_s=2.0)])
+    flap = _flap_scenario([LinkFlap(4.0, "up0", down_s=2.0)])
+    rd = deg.run()
+    rf = flap.run()
+    assert max(rd.series("job")) < max(rf.series("job"))
+
+
+def test_link_events_serialize_round_trip():
+    scn = _flap_scenario([LinkFlap(4.0, "up0", down_s=2.0),
+                          LinkDegrade(5.0, "spine", factor=0.25)])
+    again = Scenario.from_dict(scn.to_dict())
+    assert again == scn
+    assert again.run().fingerprint() == scn.run().fingerprint()
+
+
+def test_link_events_validate_targets_and_ranges():
+    with pytest.raises(ScenarioError, match="unknown link"):
+        _flap_scenario([LinkFlap(1.0, "up99", down_s=1.0)])
+    with pytest.raises(ScenarioError, match="down_s"):
+        _flap_scenario([LinkFlap(1.0, "up0", down_s=0.0)])
+    with pytest.raises(ScenarioError, match="factor"):
+        _flap_scenario([LinkDegrade(1.0, "up0", factor=1.5)])
+    with pytest.raises(ScenarioError, match="duration_s"):
+        _flap_scenario([LinkDegrade(1.0, "up0", factor=0.5,
+                                    duration_s=-1.0)])
+
+
+def test_batched_backends_still_reject_event_timelines():
+    with pytest.raises(ScenarioError, match="static-jobs"):
+        dataclasses.replace(_flap_scenario([LinkFlap(1.0, "up0", 1.0)]),
+                            policies=Policies(backend="jnp"))
+
+
+# ---------------------------------------------------------------------------
+# every registry reports its own names on an unknown policy
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_policy_errors_list_the_correct_registry():
+    base = library.build("topology_contention")
+
+    with pytest.raises(ScenarioError, match="unknown fairness mode") as e:
+        dataclasses.replace(base, policies=Policies(fairness="nope"))
+    for known in FAIRNESS.names():
+        assert known in str(e.value)
+
+    with pytest.raises(ScenarioError, match="unknown scheduler") as e:
+        dataclasses.replace(base, policies=Policies(scheduler="nope"))
+    for known in SCHEDULERS.names():
+        assert known in str(e.value)
+
+    with pytest.raises(ScenarioError, match="unknown routing policy") as e:
+        dataclasses.replace(base, policies=Policies(routing="nope"))
+    for known in ROUTING.names():
+        assert known in str(e.value)
+
+    jobs = (dataclasses.replace(base.jobs[0], nodes=None,
+                                placement="nope"),)
+    with pytest.raises(ScenarioError, match="unknown placement") as e:
+        dataclasses.replace(base, jobs=jobs)
+    for known in PLACEMENTS.names():
+        assert known in str(e.value)
+
+    with pytest.raises(ScenarioError, match="unknown router") as e:
+        Scenario(
+            name="r", topology=base.topology,
+            events=(Arrival(0.0, InferenceSpec("serve", 8, rate_rps=1.0,
+                                               router="nope")),),
+            horizon=5.0)
+    for known in ROUTERS.names():
+        assert known in str(e.value)

@@ -1,0 +1,230 @@
+"""Sparse giga-scale topology kinds: rail-optimized and multi-pod.
+
+The sparse kinds (`repro.fabric.topology.RailOptimized` / `MultiPod`)
+materialize links lazily so the memory and per-step cost of a scenario
+scale with the leaves/pods *active tenants occupy*, not with the total
+rank count. These tests pin the two contracts that laziness must not
+bend:
+
+  * bit-exactness — a lazily-materialized link is the same `Link` (and
+    produces the same schedule costs) as one looked up in a fully
+    materialized ("dense") table, and pre-materializing links in any
+    order never changes engine series;
+  * proportionality — a 100k+-rank multi-pod scenario builds and steps
+    within a link budget proportional to the tenants' footprint.
+"""
+import dataclasses
+import random
+
+import pytest
+
+from repro.fabric import _deprecation
+from repro.fabric.collectives import compile_schedule, select_algo
+from repro.fabric.engine import FabricEngine, JobSpec
+from repro.fabric.scenario import Scenario, ScenarioError, TopologySpec
+from repro.fabric.topology import (is_route_token, multi_pod,
+                                   parse_route_token, rail_optimized)
+
+
+def _small_multi_pod(**kw):
+    kw.setdefault("nodes_per_leaf", 4)
+    kw.setdefault("inter_pod_links", 2)
+    return multi_pod(2, 16, **kw)
+
+
+def _all_link_names(topo):
+    """Enumerate every link name a MultiPod can materialize."""
+    names = []
+    leaves = topo.ranks_per_pod // topo.nodes_per_leaf
+    for p in range(topo.n_pods):
+        names.append(f"pspine{p}")
+        for l in range(leaves):
+            names.extend([f"leaf{p}.{l}", f"up{p}.{l}"])
+    for i in range(topo.n_pods):
+        for j in range(i + 1, topo.n_pods):
+            for k in range(topo.inter_pod_links):
+                names.append(f"pp{i}-{j}.{k}")
+    return names
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+
+def test_multi_pod_hop_links_materialize_everywhere():
+    topo = _small_multi_pod()
+    rng = random.Random(7)
+    for _ in range(200):
+        a, b = rng.randrange(topo.n_ranks), rng.randrange(topo.n_ranks)
+        for name in topo.hop_links(a, b):
+            if is_route_token(name):
+                group, salt = parse_route_token(name)
+                members = topo.path_group(group)
+                assert salt == salt % topo.inter_pod_links >= 0
+                for m in members:
+                    assert topo.link(m).bw_gbps > 0
+            else:
+                link = topo.link(name)
+                assert link.bw_gbps > 0 and link.latency_s >= 0
+
+
+def test_rail_optimized_hop_links_materialize_everywhere():
+    topo = rail_optimized(64, gpus_per_node=8)
+    rng = random.Random(11)
+    for _ in range(200):
+        a, b = rng.randrange(64), rng.randrange(64)
+        for name in topo.hop_links(a, b):
+            assert topo.link(name).bw_gbps > 0
+    # same node -> NVLink only; same rail -> one shared rail link
+    assert topo.hop_links(0, 1) == ["nv0"]
+    assert not topo.link("nv0").shared
+    assert topo.link("rail0").shared
+
+
+def test_sparse_link_lookup_raises_keyerror_on_garbage():
+    topo = _small_multi_pod()
+    for bad in ("nope", "leaf9.9", "pp0-1.99", "up0.banana"):
+        with pytest.raises(KeyError):
+            topo.link(bad)
+    assert not topo.has_link("nope")
+    assert topo.has_link("pspine0")
+
+
+def test_route_tokens_only_cross_pod():
+    topo = _small_multi_pod()
+    same_pod = topo.hop_links(0, 5)
+    assert not any(is_route_token(n) for n in same_pod)
+    cross = topo.hop_links(0, topo.ranks_per_pod)
+    tokens = [n for n in cross if is_route_token(n)]
+    assert len(tokens) == 1
+    group, salt = parse_route_token(tokens[0])
+    assert topo.path_group(group) == [f"{group}.{k}"
+                                      for k in range(topo.inter_pod_links)]
+
+
+# ---------------------------------------------------------------------------
+# sparse == dense bit-exactness
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_schedule_costs_match_dense_table():
+    """Costs computed against lazily-materialized links are bit-identical
+    to costs computed against a fully-materialized (dense) link table."""
+    sparse = _small_multi_pod()
+    dense = _small_multi_pod()
+    for name in _all_link_names(dense):
+        dense.link(name)                    # materialize everything
+    assert len(dense.links) > len(sparse.links)
+    ranks = list(range(4, 24))              # straddles the pod boundary
+    eff = {ln: 0.75 for ln in _all_link_names(dense)}
+    for algo in ("ring", "tree", "hierarchical"):
+        a = compile_schedule(sparse, ranks, 1e9, algo=algo)
+        b = compile_schedule(dense, ranks, 1e9, algo=algo)
+        assert a.total_s(None) == b.total_s(None)
+        assert a.total_s(eff) == b.total_s(eff)
+        assert a.cost(eff).per_link_bytes == b.cost(eff).per_link_bytes
+    na, sa = select_algo(sparse, ranks, 1e9)
+    nb, sb = select_algo(dense, ranks, 1e9)
+    assert na == nb and sa.total_s(None) == sb.total_s(None)
+
+
+def test_sparse_links_are_dense_links():
+    """Every materialized link equals its dense-table twin field-for-field."""
+    sparse = _small_multi_pod()
+    dense = _small_multi_pod()
+    names = _all_link_names(dense)
+    rng = random.Random(3)
+    rng.shuffle(names)
+    for name in names:                      # scrambled materialization order
+        assert sparse.link(name) == dense.link(name)
+
+
+def test_engine_series_invariant_to_prematerialization():
+    """Lazy materialization must be an implementation detail: running the
+    same population on a fresh topology and on one with every link forced
+    into existence beforehand gives bit-identical series."""
+    jobs = [JobSpec("a", 12, nodes=tuple(range(8, 20))),
+            JobSpec("b", 12, nodes=tuple(range(20, 32)), grad_bytes=2e9)]
+    lazy = _small_multi_pod()
+    forced = _small_multi_pod()
+    for name in _all_link_names(forced):
+        forced.link(name)
+    with _deprecation.scenario_scope():
+        ra = FabricEngine(lazy, [dataclasses.replace(j) for j in jobs],
+                          base_seed=0).run(30, warmup=5)
+        rb = FabricEngine(forced, [dataclasses.replace(j) for j in jobs],
+                          base_seed=0).run(30, warmup=5)
+    for ja, jb in zip(ra.jobs, rb.jobs):
+        assert ja.name == jb.name
+        assert ja.step_times == jb.step_times
+    assert ra.link_bytes == rb.link_bytes
+
+
+# ---------------------------------------------------------------------------
+# scale: memory proportional to active leaves, not total ranks
+# ---------------------------------------------------------------------------
+
+
+def test_100k_rank_multi_pod_builds_and_steps_within_budget():
+    spec = TopologySpec(kind="multi_pod", n_pods=16, ranks_per_pod=8192,
+                        nodes_per_leaf=8, inter_pod_links=8)
+    assert spec.n_ranks >= 100_000
+    scn = Scenario(
+        name="giga",
+        topology=spec,
+        jobs=(JobSpec("a", 512, placement="compact"),
+              JobSpec("b", 1024, placement="compact", grad_bytes=2e9)),
+        iters=5, warmup=1)
+    res = scn.run()
+    assert len(res.series("a")) == 4 and len(res.series("b")) == 4
+    # two compact tenants occupy (512+1024)/8 = 192 leaves; each leaf
+    # contributes a handful of links plus pod spines and global links —
+    # nowhere near the ~33k-link dense table this fabric would need
+    n_links = len(res.topo.links)
+    occupied_leaves = (512 + 1024) // spec.nodes_per_leaf
+    assert n_links < 6 * occupied_leaves
+    assert n_links < spec.n_ranks // 100
+
+
+def test_100k_rank_congestion_tracks_only_demanded_links():
+    spec = TopologySpec(kind="multi_pod", n_pods=16, ranks_per_pod=8192,
+                        nodes_per_leaf=8, inter_pod_links=8)
+    topo = spec.build()
+    with _deprecation.scenario_scope():
+        eng = FabricEngine(topo, [JobSpec("a", 256, placement="compact")],
+                           base_seed=0)
+    assert 0 < len(eng.congestion.u) <= len(topo.links)
+    for ln in eng.congestion.u:
+        assert topo.link(ln).shared
+
+
+def test_scenario_spec_validates_sparse_kinds():
+    with pytest.raises(ScenarioError, match="gpus_per_node"):
+        TopologySpec(kind="rail_optimized", n_nodes=64,
+                     gpus_per_node=0).validate()
+    with pytest.raises(ScenarioError, match="divide"):
+        TopologySpec(kind="rail_optimized", n_nodes=65,
+                     gpus_per_node=8).validate()
+    with pytest.raises(ScenarioError, match="divide"):
+        TopologySpec(kind="multi_pod", ranks_per_pod=10,
+                     nodes_per_leaf=4).validate()
+    with pytest.raises(ScenarioError, match="unknown topology kind"):
+        TopologySpec(kind="hypercube").validate()
+    spec = TopologySpec(kind="rail_optimized", n_nodes=64, gpus_per_node=8)
+    assert spec.n_ranks == 64
+    assert spec.build().kind == "rail_optimized"
+
+
+@pytest.mark.slow
+def test_million_rank_multi_pod_constructs():
+    spec = TopologySpec(kind="multi_pod", n_pods=64, ranks_per_pod=16384,
+                        nodes_per_leaf=8, inter_pod_links=16)
+    assert spec.n_ranks == 1_048_576
+    scn = Scenario(
+        name="mega", topology=spec,
+        jobs=(JobSpec("a", 256, placement="compact"),),
+        iters=3, warmup=0)
+    res = scn.run()
+    assert len(res.series("a")) == 3
+    assert len(res.topo.links) < 1000
